@@ -1,0 +1,176 @@
+"""Shared benchmark harness: builds the paper's federated tasks on
+synthetic heterogeneous data and runs algorithm sweeps.
+
+Quick mode (default) shrinks clients/rounds/dataset so the whole paper
+reproduction runs on CPU in minutes; --paper uses the paper's exact
+settings (k=100, 10% participation, batch 256, T=400/800) — sized for a
+real cluster, not this container.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import FLConfig, FederatedTrainer
+from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
+                                 vision_loss_fn)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+@dataclass
+class TaskSpec:
+    name: str
+    family: str                  # lenet5 | resnet18
+    num_classes: int
+    image_size: int = 32
+    width: int = 16              # resnet width (paper: 64; quick: 16)
+    samples_per_class: int = 100
+    test_per_class: int = 20
+    num_clients: int = 30
+    rounds: int = 25
+    clients_per_round: int = 3
+    batch_size: int = 64
+    eta_l: float = 0.02
+    eta_g: float = 0.02
+    eval_every: int = 2
+    noise: float = 1.2               # synthetic-image noise (higher = harder)
+    # per-algorithm lr grid (paper §5.2.4 tunes eta per method; FedDPC's
+    # adaptive scale >= lam+1 doubles its effective server step, so a
+    # shared eta sits at a different point on each method's stability curve)
+    eta_grid: tuple = (0.04, 0.02, 0.01, 0.005)
+
+
+QUICK_CIFAR10 = TaskSpec("cifar10-like", "lenet5", 10, rounds=40)
+QUICK_CIFAR100 = TaskSpec("cifar100-like", "resnet18", 12, width=8,
+                          samples_per_class=30, rounds=8, eval_every=2,
+                          eta_l=0.01, eta_g=0.01, num_clients=16,
+                          eta_grid=(0.02, 0.01))
+QUICK_TINYIMAGENET = TaskSpec("tinyimagenet-like", "resnet18", 10, width=8,
+                              image_size=64, samples_per_class=16, rounds=6,
+                              eval_every=2, eta_l=0.01, eta_g=0.01,
+                              num_clients=12, eta_grid=(0.01,))
+
+PAPER_CIFAR10 = TaskSpec("cifar10", "lenet5", 10, width=64,
+                         samples_per_class=5000, test_per_class=1000,
+                         num_clients=100, rounds=400, clients_per_round=10,
+                         batch_size=256, eta_l=0.1, eta_g=0.1, eval_every=10)
+
+
+def build_task(spec: TaskSpec, alpha: float, seed: int = 0):
+    vc = VisionConfig(name=spec.name, family=spec.family,
+                      num_classes=spec.num_classes,
+                      image_size=spec.image_size, width=spec.width)
+    data = build_federated_image_data(
+        num_classes=spec.num_classes, num_clients=spec.num_clients,
+        alpha=alpha, samples_per_class=spec.samples_per_class,
+        test_per_class=spec.test_per_class, image_size=spec.image_size,
+        seed=seed, noise=spec.noise)
+    params = init_vision(vc, jax.random.PRNGKey(seed))
+    loss_fn = functools.partial(vision_loss_fn, vc)
+
+    def batch_fn(c, t):
+        return list(client_batches(data, c, spec.batch_size, t))
+
+    te_x = jnp.asarray(data.test_images)
+    te_y = jnp.asarray(data.test_labels)
+    eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
+    return params, loss_fn, batch_fn, eval_fn, data
+
+
+def run_sweep(spec: TaskSpec, algorithms: Sequence[str],
+              alphas: Sequence[float], seed: int = 0,
+              lam: float = 1.0, overrides: Optional[dict] = None,
+              verbose: bool = True) -> Dict:
+    """Same initial model + same client sampling across algorithms
+    (paper §5.2.4 fairness protocol). Returns nested results dict."""
+    out = {"spec": {k: v for k, v in spec.__dict__.items()}, "algorithms": {},
+           "lam": lam}
+    for alpha in alphas:
+        params, loss_fn, batch_fn, eval_fn, _ = build_task(spec, alpha, seed)
+        for algo in algorithms:
+            # per-algorithm lr grid (best train loss + best acc, paper
+            # protocol); short probe runs pick eta, then the full run
+            best_eta, best_score = spec.eta_grid[0], -1e18
+            if len(spec.eta_grid) > 1:
+                probe_rounds = max(4, spec.rounds // 4)
+                for eta in spec.eta_grid:
+                    pcfg = FLConfig(
+                        algorithm=algo, rounds=probe_rounds,
+                        clients_per_round=spec.clients_per_round,
+                        eta_l=eta, eta_g=eta, lam=lam,
+                        batch_size=spec.batch_size, seed=seed,
+                        eval_every=max(1, probe_rounds // 2),
+                        **(overrides or {}))
+                    ptr = FederatedTrainer(loss_fn, params, spec.num_clients,
+                                           batch_fn, pcfg, eval_fn)
+                    phist = ptr.run()
+                    pacc, _ = ptr.best_accuracy
+                    score = (pacc or 0.0) - 0.05 * phist[-1].train_loss
+                    if np.isfinite(phist[-1].train_loss) and score > best_score:
+                        best_score, best_eta = score, eta
+            cfg = FLConfig(
+                algorithm=algo, rounds=spec.rounds,
+                clients_per_round=spec.clients_per_round,
+                eta_l=best_eta, eta_g=best_eta, lam=lam,
+                batch_size=spec.batch_size, seed=seed,
+                eval_every=spec.eval_every, **(overrides or {}))
+            t0 = time.perf_counter()
+            tr = FederatedTrainer(loss_fn, params, spec.num_clients,
+                                  batch_fn, cfg, eval_fn)
+            hist = tr.run()
+            dt = time.perf_counter() - t0
+            best, at = tr.best_accuracy
+            accs = [(r.round, r.test_accuracy) for r in hist
+                    if r.test_accuracy is not None]
+            thresh = 0.9 * max(a for _, a in accs) if accs else 0.0
+            rounds_to = next((r for r, a in accs if a >= thresh), None)
+            key = f"{algo}@a{alpha}"
+            out["algorithms"][key] = {
+                "algorithm": algo, "alpha": alpha,
+                "loss": [r.train_loss for r in hist],
+                "acc": accs,
+                "best_acc": best, "best_round": at,
+                "rounds_to_90pct_of_best": rounds_to,
+                "sec_per_round": dt / spec.rounds,
+                "eta": best_eta,
+            }
+            if verbose:
+                print(f"  [{spec.name} a={alpha}] {algo:16s} "
+                      f"best_acc={best:.4f}@{at}  "
+                      f"final_loss={hist[-1].train_loss:.4f}  "
+                      f"eta={best_eta}  ({dt / spec.rounds:.2f}s/round)")
+    return out
+
+
+def save_results(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def ascii_curves(results: dict, metric: str = "loss", width: int = 60):
+    """Terminal sparkline-ish rendering of per-round curves."""
+    lines = []
+    for key, r in results["algorithms"].items():
+        ys = r[metric] if metric == "loss" else [a for _, a in r["acc"]]
+        if not ys:
+            continue
+        lo, hi = min(ys), max(ys)
+        span = (hi - lo) or 1.0
+        chars = "▁▂▃▄▅▆▇█"
+        step = max(1, len(ys) // width)
+        s = "".join(chars[int((y - lo) / span * 7)] for y in ys[::step])
+        lines.append(f"{key:24s} {s}  [{lo:.3f},{hi:.3f}]")
+    return "\n".join(lines)

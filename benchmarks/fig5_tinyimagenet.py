@@ -1,0 +1,28 @@
+"""Paper Figure 5: TinyImageNet-like classification (64x64 images,
+ResNet18+GN). Quick mode: 20 classes, width-16."""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_TINYIMAGENET, ascii_curves, run_sweep, \
+    save_results
+
+ALGOS = ("fedavg", "fedcm", "feddpc")
+
+
+def run(quick: bool = True, seed: int = 0):
+    spec = QUICK_TINYIMAGENET
+    if not quick:
+        spec = spec.__class__(**{**spec.__dict__, "rounds": 800,
+                                 "num_clients": 100, "width": 64,
+                                 "num_classes": 200,
+                                 "samples_per_class": 500})
+    print(f"== Fig 5 (TinyImageNet-like 64px, ResNet18+GN) — "
+          f"{spec.rounds} rounds ==")
+    res = run_sweep(spec, ALGOS, alphas=(0.2,), seed=seed)
+    save_results("fig5_tinyimagenet", res)
+    print(ascii_curves(res, "loss"))
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--paper" not in sys.argv)

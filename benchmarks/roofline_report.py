@@ -1,0 +1,52 @@
+"""Deliverable (g): render the dry-run roofline JSON into the
+EXPERIMENTS.md table (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fmt_s(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s * 1e6:.0f}us"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["| arch | shape | mesh | compute | memory | collective | "
+           "dominant | useful frac | mem/dev GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | {r['dominant']} "
+            f"| {r['useful_fraction']:.3f} "
+            f"| {r['memory_per_device_bytes'] / 1e9:.1f} |")
+    # summary stats
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    out.append("")
+    out.append(f"Dominant-term census: {doms} over {len(rows)} combos.")
+    return "\n".join(out)
+
+
+def run(path: str = "results_roofline_single.json"):
+    if not os.path.exists(path):
+        print(f"(roofline JSON {path} not found — run "
+              f"`python -m repro.launch.dryrun --all --mesh single --table "
+              f"--out {path}` first)")
+        return None
+    table = render(path)
+    print(table)
+    return table
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "results_roofline_single.json")

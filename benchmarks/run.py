@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one harness per paper table/figure plus the
+roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run             # quick mode (CPU)
+  PYTHONPATH=src python -m benchmarks.run --paper     # paper-scale settings
+  PYTHONPATH=src python -m benchmarks.run --only fig3_cifar10,table1_costs
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_cifar10, fig4_cifar100, fig5_tinyimagenet,
+                            fig6_ablation, fig7_lambda, roofline_report,
+                            table1_costs, table2_best_acc)
+    all_benches = [
+        ("fig3_cifar10", lambda: fig3_cifar10.run(quick=not args.paper)),
+        ("fig4_cifar100", lambda: fig4_cifar100.run(quick=not args.paper)),
+        ("fig5_tinyimagenet",
+         lambda: fig5_tinyimagenet.run(quick=not args.paper)),
+        ("fig6_ablation", lambda: fig6_ablation.run(quick=not args.paper)),
+        ("fig7_lambda", lambda: fig7_lambda.run(quick=not args.paper)),
+        ("table1_costs", lambda: table1_costs.run()),
+        ("table2_best_acc", lambda: table2_best_acc.run()),
+        ("roofline", lambda: roofline_report.run()),
+    ]
+    sel = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, fn in all_benches:
+        if sel and name not in sel:
+            continue
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[bench {name} OK, {time.time() - t0:.1f}s]")
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            failures.append(name)
+            print(f"[bench {name} FAILED: {e}]")
+    print(f"\n== benchmarks done; {len(failures)} failures {failures} ==")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Paper Table 1: computation costs of the server and client steps.
+
+Two parts:
+  (a) measured wall-time of each server rule on a d ~= 1M-param update
+      stack (k'=10 clients) — validates the paper's cost ordering
+      (FedDPC server ~ O(4k'd) elementwise vs FedAvg O(k'd)).
+  (b) the FUSED Pallas epilogue vs the naive multi-pass server math —
+      the beyond-paper win: bytes-per-round accounting (6d -> 4d reads
+      for the scalars, 4d -> 3d for the epilogue).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_results
+from repro.core.baselines import get_algorithm
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)                                     # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(d: int = 1_000_000, kprime: int = 10):
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (d,))}
+    deltas = {"w": jax.random.normal(jax.random.fold_in(key, 1),
+                                     (kprime, d))}
+    ids = jnp.arange(kprime, dtype=jnp.int32)
+
+    out = {"d": d, "k_prime": kprime, "server_ms": {}}
+    for name in ("fedavg", "fedexp", "fedvarp", "feddpc", "feddpc_noscale"):
+        algo = get_algorithm(name)
+        state = algo.init(params, 100)
+        step = jax.jit(lambda s, p, dd: algo.step(s, p, dd, ids, 1.0, 0))
+        ms = _bench(step, state, params, deltas) * 1e3
+        out["server_ms"][name] = ms
+        print(f"  server {name:16s}: {ms:8.2f} ms / round "
+              f"(k'={kprime}, d={d:.0e})")
+
+    # (b) fused kernel epilogue vs unfused tree math, one client update
+    from repro.kernels.feddpc_project import ops as k_ops
+    d1 = jax.random.normal(key, (d,))
+    p1 = jax.random.normal(jax.random.fold_in(key, 2), (d,))
+
+    fused = jax.jit(lambda a, b: k_ops.project_and_scale_flat(a, b, 1.0))
+    from repro.core import projection as proj
+    unfused = jax.jit(lambda a, b: proj.project_and_scale(
+        {"w": a}, {"w": b}, 1.0)[0]["w"])
+    t_f = _bench(fused, d1, p1) * 1e3
+    t_u = _bench(unfused, d1, p1) * 1e3
+    out["epilogue_ms"] = {"fused_pallas_interpret": t_f, "unfused_jnp": t_u}
+    print(f"  epilogue fused(interpret)={t_f:.2f} ms, unfused jnp={t_u:.2f} ms"
+          f"  (interpret mode measures correctness, not TPU perf; the"
+          f" structural win is 10d->7d HBM bytes/update — see EXPERIMENTS)")
+
+    # cost ordering claim from Table 1: feddpc server cost is O(4k'd), i.e.
+    # same asymptotic class as fedavg (both linear in k'd)
+    out["ordering_ok"] = out["server_ms"]["feddpc"] < \
+        out["server_ms"]["fedavg"] * 25
+    save_results("table1_costs", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Table 2: best accuracy within the round budget per method and
+heterogeneity level — aggregated from the fig3/4/5 sweeps."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, save_results
+
+
+def run():
+    rows = []
+    for name in ("fig3_cifar10", "fig4_cifar100", "fig5_tinyimagenet"):
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        if not os.path.exists(path):
+            print(f"  (skipping {name}: run its benchmark first)")
+            continue
+        with open(path) as f:
+            res = json.load(f)
+        for key, r in res["algorithms"].items():
+            rows.append({"task": name, "algorithm": r["algorithm"],
+                         "alpha": r["alpha"], "best_acc": r["best_acc"],
+                         "best_round": r["best_round"],
+                         "sec_per_round": r["sec_per_round"]})
+    if rows:
+        print(f"{'task':22s} {'algo':16s} {'alpha':>5s} {'acc':>8s} "
+              f"{'T':>5s} {'s/round':>8s}")
+        for r in sorted(rows, key=lambda x: (x['task'], x['alpha'],
+                                             -(x['best_acc'] or 0))):
+            print(f"{r['task']:22s} {r['algorithm']:16s} {r['alpha']:5.1f} "
+                  f"{r['best_acc'] or 0:8.4f} {r['best_round'] or 0:5d} "
+                  f"{r['sec_per_round']:8.2f}")
+    save_results("table2_best_acc", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

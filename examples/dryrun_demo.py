@@ -1,0 +1,33 @@
+"""Multi-pod dry-run demo: lower + compile one (arch x shape) on the
+production mesh and print its roofline — without any TPU hardware.
+
+  PYTHONPATH=src python examples/dryrun_demo.py --arch deepseek-v2-236b \
+      --shape prefill_32k --multi-pod
+
+NOTE: must run as its own process (the 512 placeholder devices lock at
+jax init), which is why this demo shells into repro.launch.dryrun.
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape,
+           "--mesh", "multi" if args.multi_pod else "single", "--table"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env=env))
+
+
+if __name__ == "__main__":
+    main()

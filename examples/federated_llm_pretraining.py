@@ -1,0 +1,101 @@
+"""End-to-end driver (deliverable b): federated pretraining of a ~100M-
+parameter GPT-style LM for a few hundred rounds with FedDPC.
+
+  PYTHONPATH=src python examples/federated_llm_pretraining.py            # ~100M, 200 rounds
+  PYTHONPATH=src python examples/federated_llm_pretraining.py --tiny     # CI-sized
+
+This is the beyond-paper scenario the framework exists for: cross-silo
+federated LLM training where each client is a data silo with a topic-
+skewed corpus (Dirichlet-partitioned Zipf LM streams). The model is the
+starcoder2 family config scaled to ~100M params; the server runs FedDPC
+(projection + adaptive scaling) and checkpoints every 25 rounds.
+"""
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import get_config
+from repro.core.api import FLConfig, FederatedTrainer
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import make_lm_dataset
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/feddpc_llm_ckpt")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = get_config("starcoder2-3b", smoke=True)
+        rounds = args.rounds or 8
+        clients, part, seq, bsz = 8, 4, 64, 4
+        docs = 256
+    else:
+        # ~100M params: 12 layers x d_model 768, vocab 16384
+        cfg = get_config("starcoder2-3b").with_(
+            num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            d_ff=3072, vocab_size=16384, max_seq_len=512)
+        rounds = args.rounds or 200
+        clients, part, seq, bsz = 20, 5, 256, 8
+        docs = 2000
+
+    params = tf.init_lm(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params, {cfg.num_layers}L d={cfg.d_model}")
+
+    tokens, topics = make_lm_dataset(docs, seq + 1, cfg.vocab_size, seed=0)
+    parts = dirichlet_partition(topics, clients, alpha=0.3, seed=0,
+                                min_size=1)
+    sizes = [len(p) for p in parts]
+    print(f"{clients} clients, doc counts: min={min(sizes)} max={max(sizes)}")
+
+    def loss_fn(p, batch):
+        return tf.loss_fn(cfg, p, batch)
+
+    def batch_fn(c, t):
+        idx = parts[c]
+        rng = np.random.RandomState(hash((c, t)) % (2 ** 31))
+        sel = idx[rng.permutation(len(idx))]
+        sel = np.concatenate([sel] * (bsz // max(len(sel), 1) + 1))[:bsz]
+        tk = tokens[sel]
+        return [{"tokens": jnp.asarray(tk[:, :-1]),
+                 "labels": jnp.asarray(tk[:, 1:])}]
+
+    holdout = jnp.asarray(tokens[: 4 * bsz])
+
+    @jax.jit
+    def eval_fn(p):
+        l = loss_fn(p, {"tokens": holdout[:, :-1], "labels": holdout[:, 1:]})
+        return -l                       # "accuracy" slot = -holdout loss
+
+    flcfg = FLConfig(algorithm="feddpc", rounds=rounds,
+                     clients_per_round=part, eta_l=0.05, eta_g=0.05,
+                     lam=1.0, eval_every=10)
+    tr = FederatedTrainer(loss_fn, params, clients, batch_fn, flcfg, eval_fn)
+    t0 = time.time()
+    for t in range(rounds):
+        rec = tr.run_round(t)
+        if t % 10 == 0 or t == rounds - 1:
+            ho = f"  holdout_nll={-rec.test_accuracy:.4f}" \
+                if rec.test_accuracy is not None else ""
+            print(f"round {t:4d} loss={rec.train_loss:.4f}{ho} "
+                  f"({rec.seconds:.1f}s)")
+        if t and t % 25 == 0:
+            ckpt.save(args.ckpt_dir, t, {"params": tr.params,
+                                         "server": tr.server_state})
+    print(f"done in {time.time()-t0:.0f}s; "
+          f"loss {tr.history[0].train_loss:.3f} -> "
+          f"{tr.history[-1].train_loss:.3f}")
+    assert tr.history[-1].train_loss < tr.history[0].train_loss
+
+
+if __name__ == "__main__":
+    main()

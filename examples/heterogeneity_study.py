@@ -1,0 +1,60 @@
+"""Heterogeneity & participation study: how FedDPC's advantage over FedAvg
+scales with (a) data heterogeneity (Dirichlet alpha) and (b) the client
+participation rate — the two axes the paper targets.
+
+  PYTHONPATH=src python examples/heterogeneity_study.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import FLConfig, FederatedTrainer
+from repro.data.dirichlet import partition_stats
+from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
+                                 vision_loss_fn)
+
+ROUNDS = 12
+
+
+def run_one(alpha, participation, algo, seed=0):
+    vc = VisionConfig(name="study", family="lenet5", num_classes=8)
+    data = build_federated_image_data(
+        num_classes=8, num_clients=20, alpha=alpha, samples_per_class=60,
+        test_per_class=15, seed=seed)
+    params = init_vision(vc, jax.random.PRNGKey(seed))
+    loss_fn = functools.partial(vision_loss_fn, vc)
+    bf = lambda c, t: list(client_batches(data, c, 48, t))
+    te_x, te_y = jnp.asarray(data.test_images), jnp.asarray(data.test_labels)
+    eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
+    cfg = FLConfig(algorithm=algo, rounds=ROUNDS,
+                   clients_per_round=max(1, int(20 * participation)),
+                   eta_l=0.02, eta_g=0.02, eval_every=3, seed=seed)
+    tr = FederatedTrainer(loss_fn, params, 20, bf, cfg, eval_fn)
+    tr.run()
+    best, _ = tr.best_accuracy
+    tv = partition_stats(data.train_labels,
+                         data.client_indices)["mean_tv_from_uniform"]
+    return best, tv
+
+
+def main():
+    print(f"{'alpha':>6s} {'part.':>6s} {'TV-skew':>8s} "
+          f"{'fedavg':>8s} {'feddpc':>8s} {'gain':>7s}")
+    for alpha in (0.1, 0.5, 5.0):
+        for part in (0.15, 0.5):
+            accs = {}
+            for algo in ("fedavg", "feddpc"):
+                accs[algo], tv = run_one(alpha, part, algo)
+            gain = accs["feddpc"] - accs["fedavg"]
+            print(f"{alpha:6.1f} {part:6.2f} {tv:8.3f} "
+                  f"{accs['fedavg']:8.4f} {accs['feddpc']:8.4f} "
+                  f"{gain:+7.4f}")
+    print("\nexpected pattern: FedDPC's gain is largest at small alpha "
+          "(high heterogeneity) and low participation — the two variance "
+          "sources it controls.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: FedDPC vs FedAvg on a heterogeneous federated image task.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Trains LeNet5 over 15 federated rounds with Dirichlet(0.2)-partitioned
+synthetic images, 10 of 30 clients participating per round — the paper's
+setting at laptop scale — and shows FedDPC's faster loss reduction.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import FLConfig, FederatedTrainer
+from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
+                                 vision_loss_fn)
+
+
+def main():
+    vc = VisionConfig(name="quickstart", family="lenet5", num_classes=10)
+    data = build_federated_image_data(
+        num_classes=10, num_clients=30, alpha=0.2,       # heterogeneous!
+        samples_per_class=100, test_per_class=20, seed=0)
+    params = init_vision(vc, jax.random.PRNGKey(0))
+    loss_fn = functools.partial(vision_loss_fn, vc)
+
+    def batch_fn(client, round_num):
+        return list(client_batches(data, client, 64, round_num))
+
+    te_x, te_y = jnp.asarray(data.test_images), jnp.asarray(data.test_labels)
+    eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
+
+    for algo in ("fedavg", "feddpc"):
+        cfg = FLConfig(algorithm=algo, rounds=15, clients_per_round=10,
+                       eta_l=0.02, eta_g=0.02, lam=1.0, eval_every=5)
+        trainer = FederatedTrainer(loss_fn, params, data.num_clients,
+                                   batch_fn, cfg, eval_fn)
+        hist = trainer.run(verbose=True)
+        best, at = trainer.best_accuracy
+        print(f"--> {algo}: best test acc {best:.4f} @ round {at}, "
+              f"final loss {hist[-1].train_loss:.4f}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched multi-architecture serving example: prefill + decode a batch of
+requests against three different architecture families (dense GQA, pure
+SSM, MoE+MLA) through the same serve API.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.configs.base import get_config
+from repro.launch.serve import serve_lm
+
+
+def main():
+    for arch in ("starcoder2-3b", "falcon-mamba-7b", "deepseek-v2-236b"):
+        cfg = get_config(arch, smoke=True)
+        tokens, stats = serve_lm(cfg, batch=4, prompt_len=24, gen=12)
+        print(f"{arch:24s} [{cfg.arch_type:6s}] -> {tokens.shape} tokens, "
+              f"{stats['tok_per_s']:.1f} tok/s (prefill "
+              f"{stats['prefill_s']:.2f}s)")
+        assert tokens.shape == (4, 12)
+    print("\nall three families served through one API (explicit "
+          "cache/state pytrees; ring-buffer KV for dense, O(1) state for "
+          "SSM, compressed-latent cache for MLA).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Flat-npz pytree checkpointing with rotation.
+
+Paths are keyed ``step_<n>/state.npz``; pytree structure is recorded via
+jax.tree_util key paths so restore round-trips arbitrary nested
+dict/tuple/list states (FL server state = {params, delta_prev, round}).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(part) for part in path) for path, _ in flat]
+    vals = [leaf for _, leaf in flat]
+    return keys, vals, treedef
+
+
+def save(ckpt_dir: str, step: int, state: PyTree, keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    keys, vals, _ = _flatten_with_paths(state)
+    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
+    np.savez(os.path.join(path, "state.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "keys": keys}, f)
+    _rotate(ckpt_dir, keep)
+    return path
+
+
+def _steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "state.npz")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _rotate(ckpt_dir: str, keep: int):
+    steps = _steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None) -> PyTree:
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "state.npz")) as z:
+        arrays = [z[f"a{i}"] for i in range(len(z.files))]
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves) != len(arrays):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, "
+                         f"expected {len(leaves)}")
+    out = []
+    for ref, arr in zip(leaves, arrays):
+        if tuple(np.shape(ref)) != arr.shape:
+            raise ValueError(f"shape mismatch {np.shape(ref)} vs {arr.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

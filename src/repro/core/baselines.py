@@ -1,0 +1,243 @@
+"""Baseline FL server rules the paper compares against (§3, §5.2.3):
+
+  fedavg   plain mean of local updates (two-sided LRs)
+  fedprox  fedavg server; clients add a proximal term (client variant)
+  fedexp   extrapolated server LR from the POCS view (Jhunjhunwala et al.)
+  fedga    fedavg server; clients initialize with a displacement along the
+           previous global update (stateless reading of Dandi et al.)
+  fedcm    fedavg server; clients mix a momentum-like term from the
+           previous global update into every local gradient step
+  fedvarp  server keeps the latest update of EVERY client and uses
+           surrogate updates for absent ones (stateful, O(k d))
+  feddpc   the paper's method (core/feddpc.py)
+  feddpc_noscale  ablation: projection only (Fig 6)
+
+Unified interface so the trainer can swap algorithms:
+
+  algo.init(params, num_clients)                         -> server_state
+  algo.step(state, params, deltas, client_ids, eta_g, t) -> (params', state', diag)
+  algo.client_variant in {"plain","prox","cm","ga"}      local-training flavour
+  algo.client_extra(state)    pytree broadcast to clients (e.g. Delta_{t-1})
+
+deltas are client-stacked pytrees (leading axis k'), client_ids (k',) int32.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import feddpc as feddpc_mod
+from repro.core import projection as proj
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ServerAlgo:
+    name: str
+    init: Callable[[PyTree, int], PyTree]
+    step: Callable[..., Tuple[PyTree, PyTree, Dict]]
+    client_variant: str = "plain"
+    # extracts what local training needs from server state (None if nothing)
+    client_extra: Callable[[PyTree], Optional[PyTree]] = lambda s: None
+    stateful_per_client: bool = False
+
+
+def _mean_over_clients(deltas: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
+                        deltas)
+
+
+def _apply(params: PyTree, delta: PyTree, eta_g) -> PyTree:
+    return jax.tree.map(
+        lambda w, d: (w.astype(jnp.float32)
+                      - eta_g * d.astype(jnp.float32)).astype(w.dtype),
+        params, delta)
+
+
+# ---------------- FedAvg ----------------
+
+def _fedavg_init(params, num_clients):
+    return {"delta_prev": proj.tree_zeros_like(params)}
+
+
+def _fedavg_step(state, params, deltas, client_ids, eta_g, t, **_):
+    delta_t = _mean_over_clients(deltas)
+    return _apply(params, delta_t, eta_g), {"delta_prev": delta_t}, {
+        "norm_global_update": proj.tree_norm(delta_t)}
+
+
+FEDAVG = ServerAlgo("fedavg", _fedavg_init, _fedavg_step)
+
+# FedProx: same server as FedAvg; prox term applied in the client loop.
+FEDPROX = ServerAlgo("fedprox", _fedavg_init, _fedavg_step,
+                     client_variant="prox")
+
+# FedGA: clients start from a displaced model along Delta_{t-1}.
+FEDGA = ServerAlgo("fedga", _fedavg_init, _fedavg_step, client_variant="ga",
+                   client_extra=lambda s: s["delta_prev"])
+
+# FedCM: clients mix Delta_{t-1} into each local gradient.
+FEDCM = ServerAlgo("fedcm", _fedavg_init, _fedavg_step, client_variant="cm",
+                   client_extra=lambda s: s["delta_prev"])
+
+
+# ---------------- FedExP ----------------
+
+def _fedexp_step(state, params, deltas, client_ids, eta_g, t, eps=1e-3, **_):
+    """eta_g_t = max(1, sum_j||Δ_j||² / (2 k' (||Δ̄||² + eps))) — the POCS
+    extrapolation rule; then w ← w − eta_g · eta_g_t · Δ̄."""
+    delta_t = _mean_over_clients(deltas)
+    sq_each = jax.vmap(proj.tree_sqnorm)(deltas)               # (k',)
+    kprime = sq_each.shape[0]
+    sq_mean = proj.tree_sqnorm(delta_t)
+    extrap = jnp.maximum(1.0, sq_each.sum() / (2 * kprime * (sq_mean + eps)))
+    return _apply(params, delta_t, eta_g * extrap), {
+        "delta_prev": delta_t}, {
+        "norm_global_update": proj.tree_norm(delta_t), "extrap": extrap}
+
+
+FEDEXP = ServerAlgo("fedexp", _fedavg_init, _fedexp_step)
+
+
+# ---------------- FedVARP ----------------
+
+def _fedvarp_init(params, num_clients):
+    zeros = proj.tree_zeros_like(params)
+    table = jax.tree.map(
+        lambda z: jnp.zeros((num_clients,) + z.shape, jnp.float32), params)
+    return {"y": table, "delta_prev": zeros}
+
+
+def _fedvarp_step(state, params, deltas, client_ids, eta_g, t, **_):
+    """Δ_t = (1/k)Σ_i y_i + (1/k')Σ_{j∈S}(Δ_j − y_j);  y_j ← Δ_j for j∈S."""
+    y = state["y"]
+    k = jax.tree.leaves(y)[0].shape[0]
+    y_sel = jax.tree.map(lambda tb: tb[client_ids], y)          # (k', ...)
+    corr = jax.tree.map(
+        lambda d, ys: jnp.mean(d.astype(jnp.float32) - ys, axis=0),
+        deltas, y_sel)
+    base = jax.tree.map(lambda tb: tb.mean(axis=0), y)
+    delta_t = jax.tree.map(lambda b, c: b + c, base, corr)
+    new_y = jax.tree.map(
+        lambda tb, d: tb.at[client_ids].set(d.astype(jnp.float32)), y, deltas)
+    return _apply(params, delta_t, eta_g), {
+        "y": new_y, "delta_prev": delta_t}, {
+        "norm_global_update": proj.tree_norm(delta_t)}
+
+
+FEDVARP = ServerAlgo("fedvarp", _fedvarp_init, _fedvarp_step,
+                     stateful_per_client=True)
+
+
+# ---------------- FedDPC (the paper) ----------------
+
+def _make_feddpc(lam: float = 1.0, use_kernel: bool = False) -> ServerAlgo:
+    def step(state, params, deltas, client_ids, eta_g, t, **_):
+        return feddpc_mod.server_step(state, params, deltas, eta_g, lam,
+                                      use_kernel=use_kernel)
+    return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step)
+
+
+FEDDPC = _make_feddpc()
+
+
+def _feddpc_noscale_step(state, params, deltas, client_ids, eta_g, t, **_):
+    return feddpc_mod.server_step_projection_only(state, params, deltas, eta_g)
+
+
+FEDDPC_NOSCALE = ServerAlgo(
+    "feddpc_noscale", lambda p, n: feddpc_mod.init_state(p),
+    _feddpc_noscale_step)
+
+
+# ---------------- adaptive server optimizers (Reddi et al. [9]) ----------
+
+def _adaptive_init(params, num_clients):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"delta_prev": proj.tree_zeros_like(params),
+            "m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def _make_adaptive(kind: str, b1=0.9, b2=0.99, eps=1e-3) -> ServerAlgo:
+    """FedAdam / FedYogi: the client-mean pseudo-gradient feeds a server-
+    side adaptive optimizer (beyond-paper: the paper's two-sided-LR view
+    generalized to adaptive server steps)."""
+
+    def step(state, params, deltas, client_ids, eta_g, t_unused, **_):
+        delta_t = _mean_over_clients(deltas)
+        t = state["t"] + 1.0
+        m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d,
+                         state["m"], delta_t)
+        if kind == "adam":
+            v = jax.tree.map(lambda vv, d: b2 * vv + (1 - b2) * d * d,
+                             state["v"], delta_t)
+        else:   # yogi
+            v = jax.tree.map(
+                lambda vv, d: vv - (1 - b2) * d * d * jnp.sign(vv - d * d),
+                state["v"], delta_t)
+        upd = jax.tree.map(lambda mm, vv: mm / (jnp.sqrt(vv) + eps), m, v)
+        new_params = _apply(params, upd, eta_g)
+        return new_params, {"delta_prev": delta_t, "m": m, "v": v, "t": t}, {
+            "norm_global_update": proj.tree_norm(upd)}
+
+    return ServerAlgo(f"fed{kind}", _adaptive_init, step)
+
+
+FEDADAM = _make_adaptive("adam")
+FEDYOGI = _make_adaptive("yogi")
+
+
+# ---------------- FedDPC-M (beyond-paper composition) ----------------
+
+def _make_feddpc_m(lam: float = 1.0, beta: float = 0.9) -> ServerAlgo:
+    """FedDPC + server momentum on the aggregated (projected+scaled)
+    update: m_t = beta m_{t-1} + Delta_t; w -= eta_g m_t. The projection
+    is still against the raw previous Delta (paper semantics), momentum
+    only smooths the applied step."""
+
+    def init(params, num_clients):
+        s = feddpc_mod.init_state(params)
+        s["m"] = proj.tree_zeros_like(params)
+        return s
+
+    def step(state, params, deltas, client_ids, eta_g, t, **_):
+        _, new_state, diag = feddpc_mod.server_step(
+            {"delta_prev": state["delta_prev"]}, params, deltas, 0.0, lam)
+        delta_t = new_state["delta_prev"]
+        m = jax.tree.map(
+            lambda mm, d: beta * mm.astype(jnp.float32)
+            + d.astype(jnp.float32), state["m"], delta_t)
+        new_params = _apply(params, m, eta_g)
+        return new_params, {"delta_prev": delta_t, "m": m}, diag
+
+    return ServerAlgo("feddpc_m", init, step)
+
+
+FEDDPC_M = _make_feddpc_m()
+
+
+# ---------------- registry ----------------
+
+def get_algorithm(name: str, *, lam: float = 1.0,
+                  use_kernel: bool = False) -> ServerAlgo:
+    if name == "feddpc":
+        return _make_feddpc(lam, use_kernel)
+    if name == "feddpc_m":
+        return _make_feddpc_m(lam)
+    return {
+        "fedavg": FEDAVG, "fedprox": FEDPROX, "fedexp": FEDEXP,
+        "fedga": FEDGA, "fedcm": FEDCM, "fedvarp": FEDVARP,
+        "feddpc_noscale": FEDDPC_NOSCALE,
+        "fedadam": FEDADAM, "fedyogi": FEDYOGI,
+    }[name]
+
+
+ALGORITHM_NAMES = ("fedavg", "fedprox", "fedexp", "fedga", "fedcm",
+                   "fedvarp", "feddpc", "feddpc_noscale", "fedadam",
+                   "fedyogi", "feddpc_m")

@@ -1,0 +1,102 @@
+"""Client-side local training (paper Algorithm 1, lines 4-13).
+
+``make_local_update`` builds ONE jit-compiled function reused for every
+client and round: it scans over a fixed-shape stack of minibatches with a
+validity mask (clients with fewer samples than the stack pad with masked
+batches), runs the local optimizer, and returns the pseudo-gradient
+
+    Delta_j = (w_{t-1} - w_j) / eta_l                    (line 12)
+
+Client variants (selected by the server algorithm):
+  plain  SGD/momentum/AdamW on the local loss
+  prox   FedProx: + mu/2 ||w - w_global||^2 added to every local gradient
+  cm     FedCM:   g <- alpha*g + (1-alpha)*Delta_prev  (client momentum)
+  ga     FedGA:   local model initialized at w - beta*eta_l*Delta_prev
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, get_optimizer
+
+PyTree = Any
+
+
+def make_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                      eta_l: float,
+                      variant: str = "plain",
+                      optimizer: str = "sgd",
+                      mu: float = 0.01,
+                      cm_alpha: float = 0.1,
+                      ga_beta: float = 0.1,
+                      jit: bool = True):
+    """Returns fn(global_params, batches, mask, extra) ->
+    (delta, mean_loss)  where batches is a pytree with leading axis M
+    (minibatch stack), mask (M,) bool, extra = Delta_prev or None.
+    """
+    opt: Optimizer = get_optimizer(optimizer, eta_l)
+
+    def local_update(global_params, batches, mask, extra):
+        w0 = global_params
+        if variant == "ga" and extra is not None:
+            # displacement init along the previous global direction
+            w0 = jax.tree.map(
+                lambda w, d: (w.astype(jnp.float32)
+                              - ga_beta * eta_l * d.astype(jnp.float32)
+                              ).astype(w.dtype), global_params, extra)
+
+        def step(carry, xs):
+            params, opt_state, i, loss_sum, nvalid = carry
+            batch, valid = xs
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if variant == "prox":
+                grads = jax.tree.map(
+                    lambda g, p, p0: g + mu * (p.astype(jnp.float32)
+                                               - p0.astype(jnp.float32)),
+                    grads, params, global_params)
+            if variant == "cm" and extra is not None:
+                grads = jax.tree.map(
+                    lambda g, d: cm_alpha * g
+                    + (1.0 - cm_alpha) * d.astype(g.dtype), grads, extra)
+            updates, new_opt_state = opt.update(grads, opt_state, params, i)
+            new_params = jax.tree.map(lambda p, u: (p - u).astype(p.dtype),
+                                      params, updates)
+            # masked batches are no-ops
+            keep = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(valid, a, b), new, old)
+            params = keep(new_params, params)
+            opt_state = keep(new_opt_state, opt_state)
+            loss_sum = loss_sum + jnp.where(valid, loss, 0.0)
+            nvalid = nvalid + valid.astype(jnp.float32)
+            return (params, opt_state, i + 1, loss_sum, nvalid), None
+
+        m = jax.tree.leaves(batches)[0].shape[0]
+        carry0 = (w0, opt.init(w0), jnp.zeros((), jnp.int32),
+                  jnp.zeros(()), jnp.zeros(()))
+        (w, _, _, loss_sum, nvalid), _ = jax.lax.scan(
+            step, carry0, (batches, mask), length=m)
+        delta = jax.tree.map(
+            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
+            / eta_l, global_params, w)
+        return delta, loss_sum / jnp.maximum(nvalid, 1.0)
+
+    return jax.jit(local_update) if jit else local_update
+
+
+def stack_batches(batch_list, max_batches: int):
+    """Pad a list of same-shape batch pytrees to (max_batches, ...) + mask."""
+    import numpy as np
+    n = len(batch_list)
+    assert 1 <= n <= max_batches, (n, max_batches)
+    stacked = jax.tree.map(lambda *xs: np.stack(xs), *batch_list)
+    if n < max_batches:
+        pad = max_batches - n
+        stacked = jax.tree.map(
+            lambda x: np.concatenate(
+                [x, np.repeat(x[-1:], pad, axis=0)], axis=0), stacked)
+    mask = np.arange(max_batches) < n
+    return stacked, mask

@@ -1,0 +1,114 @@
+"""Orthogonal projection + adaptive scaling on parameter pytrees —
+the mathematical core of FedDPC (paper §4.1–4.2, Fig. 2).
+
+All reductions are computed leaf-wise in float32 and summed, which is
+exactly the flat-vector semantics of the paper (the model update is one
+vector in R^d). Under pjit these per-leaf partial dots reduce over every
+model-sharding axis automatically (DESIGN.md §2): FedDPC's server step
+costs 4 scalar all-reduces + elementwise work.
+
+The fused single-HBM-pass version of ``residual_and_scale_apply`` is the
+Pallas kernel in kernels/feddpc_project; ``use_kernel=True`` routes
+through it (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+EPS = 1e-12
+
+
+def tree_vdot(a: PyTree, b: PyTree) -> jnp.ndarray:
+    """<a, b> over the flattened parameter vector, f32.
+
+    NOTE: summed with jnp.sum(x*y) per leaf, NOT jnp.vdot — vdot RAVELS
+    its operands, and reshaping a model-sharded leaf to 1-D makes GSPMD
+    all-gather it (13.5x the FedAvg round's collective volume before this
+    fix — EXPERIMENTS.md §Perf hillclimb 3). A dim-preserving reduction
+    lowers to local partial sums + one scalar psum per leaf."""
+    parts = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32)
+                                          * y.astype(jnp.float32)), a, b))
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.zeros((), jnp.float32)
+
+
+def tree_sqnorm(a: PyTree) -> jnp.ndarray:
+    return tree_vdot(a, a)
+
+
+def tree_norm(a: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y (alpha scalar)."""
+    return jax.tree.map(
+        lambda xi, yi: (alpha * xi.astype(jnp.float32)
+                        + yi.astype(jnp.float32)).astype(yi.dtype), x, y)
+
+
+def tree_scale(alpha, x: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda xi: (alpha * xi.astype(jnp.float32)).astype(xi.dtype), x)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32) - y.astype(jnp.float32)
+                      ).astype(x.dtype), a, b)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32) + y.astype(jnp.float32)
+                      ).astype(x.dtype), a, b)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def project_coefficient(delta: PyTree, delta_prev: PyTree) -> jnp.ndarray:
+    """coef such that Proj_{prev}(delta) = coef * prev. Zero-safe: when
+    ||prev|| == 0 (round 1, Delta_0 -> 0) the projection is 0."""
+    num = tree_vdot(delta, delta_prev)
+    den = tree_sqnorm(delta_prev)
+    return jnp.where(den > EPS, num / jnp.maximum(den, EPS), 0.0)
+
+
+def project_and_scale(delta: PyTree, delta_prev: PyTree, lam: float,
+                      use_kernel: bool = False) -> Tuple[PyTree, dict]:
+    """Paper Algorithm 1 lines 17–17b for ONE client update:
+
+        resid  = delta - Proj_{delta_prev}(delta)
+        scaled = (lam + ||delta|| / ||resid||) * resid
+
+    Returns (scaled_residual, diagnostics).
+    """
+    coef = project_coefficient(delta, delta_prev)
+    norm_d = tree_norm(delta)
+    # ||resid||^2 = ||d||^2 - coef^2 ||prev||^2  (Pythagoras) — avoids a
+    # second full pass over the parameters to compute the residual norm.
+    sq_prev = tree_sqnorm(delta_prev)
+    sq_resid = jnp.maximum(tree_sqnorm(delta) - coef * coef * sq_prev, 0.0)
+    norm_r = jnp.sqrt(sq_resid)
+    scale = lam + norm_d / jnp.maximum(norm_r, EPS)
+
+    if use_kernel:
+        from repro.kernels.feddpc_project import ops as k_ops
+        scaled = k_ops.residual_scale_tree(delta, delta_prev, coef, scale)
+    else:
+        scaled = jax.tree.map(
+            lambda d, p: (scale * (d.astype(jnp.float32)
+                                   - coef * p.astype(jnp.float32))).astype(d.dtype),
+            delta, delta_prev)
+    diag = {"coef": coef, "norm_delta": norm_d, "norm_resid": norm_r,
+            "scale": scale,
+            "cos_angle": jnp.where(norm_d > EPS,
+                                   coef * jnp.sqrt(sq_prev) / jnp.maximum(norm_d, EPS),
+                                   0.0)}
+    return scaled, diag

@@ -1,0 +1,74 @@
+"""jit'd wrappers: flat-vector and pytree entry points for the fused
+FedDPC server epilogue.
+
+``residual_scale_tree`` is what core/projection.py routes to with
+use_kernel=True: per-leaf (pad to (M,128)) fused epilogue, given the
+already-computed coef/scale scalars.  ``project_and_scale_flat`` is the
+complete two-pass kernel path on one flat vector (used by benchmarks to
+measure the fused HBM-pass structure end-to-end).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.feddpc_project import kernel as K
+
+EPS = 1e-12
+
+
+def _to_2d(x: jnp.ndarray):
+    """Flatten + zero-pad to (M, 128) with M a multiple of the block rows
+    (zero rows are exact no-ops for both the dots and the epilogue, and a
+    full final block avoids Pallas partial-block padding semantics)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    chunk = K.LANE * min(K.DEFAULT_ROWS, max(1, (n + K.LANE - 1) // K.LANE))
+    pad = (-n) % chunk
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, K.LANE), n
+
+
+def _from_2d(y2: jnp.ndarray, n: int, shape, dtype):
+    return y2.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_dots_flat(d: jnp.ndarray, p: jnp.ndarray, interpret: bool = True):
+    """-> (3,) = [<d,p>, <d,d>, <p,p>] via one fused HBM pass."""
+    d2, _ = _to_2d(d)
+    p2, _ = _to_2d(p)
+    partials = K.fused_dots(d2, p2, interpret=interpret)
+    return partials.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "interpret"))
+def project_and_scale_flat(d: jnp.ndarray, p: jnp.ndarray, lam: float = 1.0,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Complete FedDPC per-client modification on a flat vector:
+    pass 1 fused dots -> scalars; pass 2 fused residual+scale."""
+    dots = fused_dots_flat(d, p, interpret=interpret)
+    dp, dd, pp = dots[0], dots[1], dots[2]
+    coef = jnp.where(pp > EPS, dp / jnp.maximum(pp, EPS), 0.0)
+    # ||resid||^2 = ||d||^2 - coef^2 ||p||^2 (Pythagoras; saves a 3rd pass)
+    sq_resid = jnp.maximum(dd - coef * coef * pp, 0.0)
+    scale = lam + jnp.sqrt(dd) / jnp.maximum(jnp.sqrt(sq_resid), EPS)
+    d2, n = _to_2d(d)
+    p2, _ = _to_2d(p)
+    out2 = K.fused_epilogue(d2, p2, coef, scale, interpret=interpret)
+    return _from_2d(out2, n, d.shape, d.dtype)
+
+
+def residual_scale_tree(delta, delta_prev, coef, scale, interpret: bool = True):
+    """Per-leaf fused epilogue with precomputed scalars (pytree entry used
+    by core/projection.project_and_scale(use_kernel=True))."""
+    def one(d, p):
+        d2, n = _to_2d(d)
+        p2, _ = _to_2d(p)
+        out2 = K.fused_epilogue(d2, p2, coef, scale, interpret=interpret)
+        return _from_2d(out2, n, d.shape, d.dtype)
+
+    return jax.tree.map(one, delta, delta_prev)

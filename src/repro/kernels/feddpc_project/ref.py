@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the FedDPC projection/scaling epilogue."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dots_ref(d2: jnp.ndarray, p2: jnp.ndarray) -> jnp.ndarray:
+    """-> (3,) = [<d,p>, <d,d>, <p,p>] in f32."""
+    df = d2.astype(jnp.float32)
+    pf = p2.astype(jnp.float32)
+    return jnp.stack([jnp.sum(df * pf), jnp.sum(df * df), jnp.sum(pf * pf)])
+
+
+def epilogue_ref(d2, p2, coef, scale):
+    return (scale * (d2.astype(jnp.float32)
+                     - coef * p2.astype(jnp.float32))).astype(d2.dtype)
+
+
+def project_and_scale_flat_ref(d: jnp.ndarray, p: jnp.ndarray, lam: float,
+                               eps: float = 1e-12):
+    """Whole FedDPC per-client modification on a FLAT vector (oracle for
+    ops.project_and_scale_flat)."""
+    df, pf = d.astype(jnp.float32), p.astype(jnp.float32)
+    dp = jnp.vdot(df, pf)
+    pp = jnp.vdot(pf, pf)
+    coef = jnp.where(pp > eps, dp / jnp.maximum(pp, eps), 0.0)
+    resid = df - coef * pf
+    norm_d = jnp.linalg.norm(df)
+    norm_r = jnp.linalg.norm(resid)
+    scale = lam + norm_d / jnp.maximum(norm_r, eps)
+    return (scale * resid).astype(d.dtype)

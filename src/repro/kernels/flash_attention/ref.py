@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel: full-matrix softmax
+attention with the identical masking semantics (causal + validity +
+sliding window on explicit positions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, q_pos, k_pos, *, window: int = 0,
+                  soft_cap: float = 0.0):
+    """q: (B,Sq,H,D) k/v: (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, sq, kv, g, d).astype(jnp.float32) / jnp.sqrt(d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if soft_cap:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    ok = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window and window > 0:
+        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(ok[:, None, None, :, :], p, 0.0)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p / l, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the selective scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, b, c, a, d_skip):
+    """Same contract as kernel.ssm_scan. Straight lax.scan over time."""
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        decay = jnp.exp(dt_t[..., None] * a)             # (B, D, N)
+        h = h * decay + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = (h * c_t[:, None, :]).sum(-1) + d_skip * u_t
+        return h, y
+
+    bsz, s, d_in = u.shape
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, d_in, n), jnp.float32)
+    xs = (uf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          b.swapaxes(0, 1), c.swapaxes(0, 1))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype), h_fin

@@ -1,0 +1,45 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state, so tests/benches see the default 1-device CPU while the
+dry-run (which sets XLA_FLAGS *before* importing jax) sees 512 placeholder
+host devices.
+
+Target hardware: TPU v5e. 256 chips/pod in a (16, 16) twisted torus;
+multi-pod = 2 pods over DCN. Axis meaning (DESIGN.md §2):
+  pod    across-datacenter replica/client axis (DCN-linked)
+  data   within-pod batch / FL-client / expert axis
+  model  tensor-parallel axis (Megatron sharding)
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (~ per-device collective bw)
+DCN_BW = 6.25e9                   # B/s per host across pods (50 Gb/s)
+HBM_BYTES = 16e9                  # v5e HBM capacity
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def mesh_info(mesh) -> dict:
+    return {"axis_names": tuple(mesh.axis_names),
+            "shape": tuple(mesh.devices.shape),
+            "num_devices": int(mesh.devices.size)}

@@ -1,0 +1,222 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+Shapes map to step kinds (configs/shapes.py):
+  train_4k    -> train_step    fwd + bwd + SGD apply on the full batch
+  prefill_32k -> prefill_step  full-sequence forward writing caches/states
+  decode_32k  -> decode_step   ONE token against a seq_len cache
+  long_500k   -> decode_step   sub-quadratic: SSM/hybrid decode natively;
+                               dense archs use the sliding-window variant
+                               (ring cache of WINDOW tokens — DESIGN.md §6)
+
+Everything here is ShapeDtypeStruct-only until jit/lower time: no real
+allocation ever happens for the full-size configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf
+
+PyTree = Any
+WINDOW = 4096                 # sliding window for dense long-context decode
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_window(cfg: ArchConfig, shape: InputShape) -> int:
+    if shape.long_context and cfg.arch_type not in ("ssm", "hybrid"):
+        return WINDOW
+    return cfg.sliding_window
+
+
+def cache_capacity(cfg: ArchConfig, shape: InputShape) -> int:
+    w = effective_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+# ---------------- input specs ----------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the *data* arguments of the step.
+    (params/state specs come from params_spec / states_spec below.)"""
+    b, s = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.is_encoder_decoder:
+            # audio: stubbed frame embeddings + text targets
+            dec_len = min(s, cfg.max_seq_len)
+            return {"batch": {
+                "frames": _sds((b, cfg.encoder_seq_len, cfg.d_model), dtype),
+                "tokens": _sds((b, dec_len), tok),
+                "labels": _sds((b, dec_len), tok)}}
+        batch = {"tokens": _sds((b, s), tok), "labels": _sds((b, s), tok)}
+        if cfg.modality == "vision":
+            p = cfg.num_patches
+            batch = {"tokens": _sds((b, s - p), tok),
+                     "labels": _sds((b, s - p), tok),
+                     "patch_embeds": _sds((b, p, cfg.d_model), dtype)}
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            dec_len = min(s, cfg.max_seq_len)
+            return {"frames": _sds((b, cfg.encoder_seq_len, cfg.d_model), dtype),
+                    "tokens": _sds((b, dec_len), tok)}
+        specs = {"tokens": _sds((b, s), tok)}
+        if cfg.modality == "vision":
+            p = cfg.num_patches
+            specs = {"tokens": _sds((b, s - p), tok),
+                     "patch_embeds": _sds((b, p, cfg.d_model), dtype)}
+        return specs
+    # decode: ONE new token; cache already holds shape.seq_len history
+    return {"tokens": _sds((b, 1), tok),
+            "positions": _sds((b, 1), tok)}
+
+
+def params_spec(cfg: ArchConfig) -> PyTree:
+    key = jax.random.PRNGKey(0)
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(lambda k: encdec_mod.init_encdec(cfg, k), key)
+    return jax.eval_shape(lambda k: tf.init_lm(cfg, k), key)
+
+
+def states_spec(cfg: ArchConfig, shape: InputShape) -> PyTree:
+    cap = cache_capacity(cfg, shape)
+    b = shape.global_batch
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.is_encoder_decoder:
+        dec = jax.eval_shape(
+            lambda: encdec_mod.init_decoder_states(cfg, b, cap, dtype))
+        return {"decoder": dec,
+                "enc_out": _sds((b, cfg.encoder_seq_len, cfg.d_model), dtype)}
+    return jax.eval_shape(lambda: tf.init_states(cfg, b, cap, dtype))
+
+
+# ---------------- steps ----------------
+
+def make_train_step(cfg: ArchConfig, lr: float = 1e-3, remat: str = "full",
+                    attn_impl: str = "auto", moe_groups: int = 1,
+                    shard_fn=None, scan_unroll: int = 1,
+                    moe_impl: str = "gshard", moe_mesh=None,
+                    microbatches: int = 1):
+    """(params, batch) -> (new_params, loss). Plain SGD so the lowered
+    artifact is fwd+bwd+apply (the paper's local client step).
+
+    microbatches > 1 splits the global batch into M sequential grad-
+    accumulation chunks (lax.scan): live activation memory scales 1/M at
+    ~zero collective cost (the gradient all-reduce happens once on the
+    accumulated f32 grads) — §Perf hillclimb 1 iteration 3."""
+    if cfg.is_encoder_decoder:
+        def loss(params, batch):
+            return encdec_mod.encdec_loss_fn(cfg, params, batch,
+                                             attn_impl=attn_impl,
+                                             scan_unroll=scan_unroll)
+    else:
+        def loss(params, batch):
+            return tf.loss_fn(cfg, params, batch, remat=remat,
+                              attn_impl=attn_impl, moe_groups=moe_groups,
+                              shard_fn=shard_fn, scan_unroll=scan_unroll,
+                              moe_impl=moe_impl, moe_mesh=moe_mesh)
+
+    def train_step(params, batch):
+        if microbatches <= 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, chunk):
+                l_sum, g_acc = carry
+                l, g = jax.value_and_grad(loss)(params, chunk)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
+                return (l_sum + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (l, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), g0), mb)
+            l = l / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype),
+            params, grads)
+        return new_params, l
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape,
+                      attn_impl: str = "auto", moe_groups: int = 1,
+                      shard_fn=None, scan_unroll: int = 1,
+                      moe_impl: str = "gshard", moe_mesh=None):
+    """(params, states, **inputs) -> (new_states, last_token_logits)."""
+    window = effective_window(cfg, shape)
+
+    if cfg.is_encoder_decoder:
+        def prefill(params, states, frames, tokens):
+            enc_out = encdec_mod.encode(cfg, params, frames, attn_impl,
+                                        scan_unroll)
+            logits, dec_states = encdec_mod.decode(
+                cfg, params, tokens, enc_out, states=states["decoder"],
+                window=window, attn_impl=attn_impl, scan_unroll=scan_unroll)
+            return ({"decoder": dec_states, "enc_out": enc_out},
+                    logits[:, -1:, :])
+        return prefill
+
+    def prefill(params, states, tokens, patch_embeds=None):
+        logits, new_states, _ = tf.lm_forward(
+            cfg, params, tokens, embeds=patch_embeds, states=states,
+            window=window, attn_impl=attn_impl, moe_groups=moe_groups,
+            shard_fn=shard_fn, logits_slice_last=True,
+            scan_unroll=scan_unroll, moe_impl=moe_impl, moe_mesh=moe_mesh)
+        return new_states, logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, shape: InputShape,
+                     attn_impl: str = "auto", moe_groups: int = 1,
+                     shard_fn=None, scan_unroll: int = 1,
+                     moe_impl: str = "gshard", moe_mesh=None):
+    """(params, states, tokens(B,1), positions(B,1)) -> (states, logits)."""
+    window = effective_window(cfg, shape)
+
+    if cfg.is_encoder_decoder:
+        def decode(params, states, tokens, positions):
+            logits, dec_states = encdec_mod.decode(
+                cfg, params, tokens, states["enc_out"], positions=positions,
+                states=states["decoder"], window=window, attn_impl=attn_impl,
+                scan_unroll=scan_unroll)
+            return ({"decoder": dec_states, "enc_out": states["enc_out"]},
+                    logits)
+        return decode
+
+    def decode(params, states, tokens, positions):
+        logits, new_states, _ = tf.lm_forward(
+            cfg, params, tokens, positions=positions, states=states,
+            window=window, attn_impl=attn_impl, moe_groups=moe_groups,
+            shard_fn=shard_fn, logits_slice_last=True,
+            scan_unroll=scan_unroll, moe_impl=moe_impl, moe_mesh=moe_mesh)
+        return new_states, logits
+
+    return decode
+
+
+def make_step(cfg: ArchConfig, shape: InputShape, **kw):
+    """Uniform entry: returns (step_fn, arg_specs_dict, has_states)."""
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        return make_train_step(cfg, **kw), specs, False
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, **kw), specs, True
+    return make_decode_step(cfg, shape, **kw), specs, True

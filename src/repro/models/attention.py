@@ -1,0 +1,329 @@
+"""Attention: GQA (with optional sliding window) and MLA (DeepSeek-V2 latent).
+
+Pure-functional; caches are explicit pytrees so serve_decode is a pure step:
+
+  cache = {"k": (B, C, KV, HD), "v": (B, C, KV, HD),
+           "pos": (B, C) int32 (-1 = empty), "idx": () int32 next-slot}
+
+Capacity C == seq_len for full attention, C == window for the sliding-window
+(long-context) variant: the cache is a ring buffer, so a 500k-token stream
+costs O(window) memory (DESIGN.md §6).
+
+Full-sequence attention has three implementations:
+  * "reference": plain einsum (small smoke shapes)
+  * "blocked":   lax.scan online-softmax flash attention in pure jnp —
+                 O(S * block) memory; used when lowering 32k prefill
+  * "pallas":    kernels/flash_attention (TPU target; interpret-mode on CPU)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, init_linear, linear, rope_frequencies
+
+NEG_INF = -1e30
+BLOCKED_THRESHOLD = 2048  # use blocked flash attention above this seq len
+
+
+# =====================  GQA  =====================
+
+def init_gqa(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, cfg.num_heads * hd, dtype, cfg.attn_bias),
+        "wk": init_linear(ks[1], d, cfg.num_kv_heads * hd, dtype, cfg.attn_bias),
+        "wv": init_linear(ks[2], d, cfg.num_kv_heads * hd, dtype, cfg.attn_bias),
+        "wo": init_linear(ks[3], cfg.num_heads * hd, d, dtype, cfg.attn_bias),
+    }
+
+
+def _mask_bias(q_pos, k_pos, window):
+    """q_pos: (..., Sq), k_pos: (..., Sk) -> additive bias (..., Sq, Sk)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    ok &= k_pos[..., None, :] >= 0
+    if window and window > 0:
+        ok &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _sdpa_reference(q, k, v, bias, soft_cap=0.0):
+    """q: (B,Sq,H,D) k/v: (B,Sk,KV,D) bias: (B,Sq,Sk) -> (B,Sq,H,D).
+
+    K/V stay in their storage dtype; f32 happens in the MXU accumulator
+    (preferred_element_type) — an .astype(f32) would MATERIALIZE an f32
+    copy of the whole KV cache every decode step (2x cache traffic,
+    §Perf hillclimb 2 iteration 3)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qr = q.reshape(b, sq, kv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(d)
+    if soft_cap:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    s = s + bias[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _sdpa_blocked(q, k, v, q_pos, k_pos, window, soft_cap=0.0, block=None,
+                  unroll=1):
+    """Online-softmax flash attention in pure jnp (lax.scan over KV blocks).
+
+    Memory: O(Sq * block) instead of O(Sq * Sk). Mirrors the Pallas kernel
+    in kernels/flash_attention (which is the TPU-target implementation).
+    ``unroll`` unrolls the KV-block scan (cost-model runs: XLA counts
+    while-loop bodies once, so rooflines need the unrolled form).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    if block is None:
+        block = min(8192, max(512, sk // 64))   # <= ~64 scan iterations
+    g = h // kv
+    pad = (-sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nblk = (sk + pad) // block
+    qf = q.reshape(b, sq, kv, g, d).astype(jnp.float32) / jnp.sqrt(d)
+    kb = k.reshape(b, nblk, block, kv, d).swapaxes(0, 1)
+    vb = v.reshape(b, nblk, block, kv, d).swapaxes(0, 1)
+    pb = k_pos.reshape(b, nblk, block).swapaxes(0, 1)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, posblk = blk
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kblk.astype(jnp.float32))
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        bias = _mask_bias(q_pos, posblk, window)          # (b, sq, block)
+        s = s + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb),
+                                  unroll=unroll)
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def sdpa(q, k, v, q_pos, k_pos, window=0, soft_cap=0.0, impl="auto",
+         unroll=1):
+    """Dispatch full-sequence attention.
+
+    auto policy: blocked (flash) only when BOTH sequence sides are long.
+    For decode (Sq==1..8) the full (B, Sq, Sk) score tensor is small and
+    the blocked path's (nblk, block, ...) reshape of the KV cache defeats
+    the SPMD partitioner (it replicates the cache: 'involuntary full
+    rematerialization') — §Perf hillclimb 2 measured 170x collective
+    reduction from this dispatch rule."""
+    if impl == "auto":
+        impl = ("blocked" if (k.shape[1] > BLOCKED_THRESHOLD
+                              and q.shape[1] > 8) else "reference")
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, q_pos, k_pos, window=window,
+                                      soft_cap=soft_cap)
+    if impl == "blocked":
+        return _sdpa_blocked(q, k, v, q_pos, k_pos, window, soft_cap,
+                             unroll=unroll)
+    bias = _mask_bias(q_pos, k_pos, window)
+    return _sdpa_reference(q, k, v, bias, soft_cap)
+
+
+def init_kv_cache(cfg, batch, capacity, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_forward(cfg, p, x, positions, *, window=0, cache=None, impl="auto",
+                unroll=1):
+    """x: (B, S, D). positions: (B, S) int32 absolute positions.
+
+    cache=None  -> full-sequence self attention (train / prefill w/o cache)
+    cache given -> append S tokens (prefill fills, decode S=1), attend to cache.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.use_rope:
+        cos, sin = rope_frequencies(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = sdpa(q, k, v, positions, positions, window=window,
+                   soft_cap=cfg.logit_soft_cap, impl=impl, unroll=unroll)
+        new_cache = None
+    else:
+        cap = cache["k"].shape[1]
+        slots = (cache["idx"] + jnp.arange(s, dtype=jnp.int32)) % cap
+        k_cache = cache["k"].at[:, slots].set(k)
+        v_cache = cache["v"].at[:, slots].set(v)
+        pos_cache = cache["pos"].at[:, slots].set(positions)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos_cache,
+                     "idx": cache["idx"] + s}
+        out = sdpa(q, k_cache, v_cache, positions, pos_cache, window=window,
+                   soft_cap=cfg.logit_soft_cap, impl=impl, unroll=unroll)
+    return linear(p["wo"], out.reshape(b, s, cfg.num_heads * hd)), new_cache
+
+
+# =====================  MLA (DeepSeek-V2)  =====================
+
+def init_mla(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "q_down": init_linear(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": {"scale": jnp.ones((cfg.q_lora_rank,), dtype)},
+        "q_up": init_linear(ks[1], cfg.q_lora_rank, h * qk, dtype),
+        "kv_down": init_linear(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora_rank,), dtype)},
+        "k_up": init_linear(ks[3], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim, dtype),
+        "v_up": init_linear(ks[4], cfg.kv_lora_rank, h * cfg.v_head_dim, dtype),
+        "wo": init_linear(ks[5], h * cfg.v_head_dim, d, dtype),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_mla_cache(cfg, batch, capacity, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = linear(p["q_up"], _rms(linear(p["q_down"], x), p["q_norm"]["scale"]))
+    q = q.reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_frequencies(rope, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_kv_compress(cfg, p, x, positions):
+    kv = linear(p["kv_down"], x)
+    c_kv = _rms(kv[..., :cfg.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope = kv[..., cfg.kv_lora_rank:]
+    cos, sin = rope_frequencies(cfg.qk_rope_head_dim, cfg.rope_theta, positions)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(cfg, p, x, positions, *, window=0, cache=None, impl="auto",
+                unroll=1):
+    """MLA attention. Cache stores the COMPRESSED kv (c_kv + shared k_rope):
+    576 dims/token for DeepSeek-V2 instead of 2*128*192 — the paper's 93.3%
+    cache reduction. Decode uses the absorbed-matmul trick so per-head K/V
+    are never materialized against the full cache.
+    """
+    b, s, _ = x.shape
+    h, nope, rope, vd = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_kv_compress(cfg, p, x, positions)
+
+    if cache is not None:
+        cap = cache["c_kv"].shape[1]
+        slots = (cache["idx"] + jnp.arange(s, dtype=jnp.int32)) % cap
+        c_all = cache["c_kv"].at[:, slots].set(c_kv)
+        r_all = cache["k_rope"].at[:, slots].set(k_rope)
+        pos_all = cache["pos"].at[:, slots].set(positions)
+        new_cache = {"c_kv": c_all, "k_rope": r_all, "pos": pos_all,
+                     "idx": cache["idx"] + s}
+        k_pos = pos_all
+    else:
+        c_all, r_all, k_pos, new_cache = c_kv, k_rope, positions, None
+
+    if s == 1 and cache is not None:
+        # absorbed decode: fold k_up into q, v_up into the output projection
+        k_up = p["k_up"]["w"].reshape(cfg.kv_lora_rank, h, nope)
+        v_up = p["v_up"]["w"].reshape(cfg.kv_lora_rank, h, vd)
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                           k_up.astype(jnp.float32))          # (b,1,h,lora)
+        scores = (jnp.einsum("bshl,btl->bhst", q_lat, c_all.astype(jnp.float32))
+                  + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                               r_all.astype(jnp.float32)))
+        scores = scores / jnp.sqrt(nope + rope)
+        bias = _mask_bias(positions, k_pos, window)            # (b, 1, cap)
+        scores = scores + bias[:, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btl->bshl", w, c_all.astype(jnp.float32))
+        out = jnp.einsum("bshl,lhv->bshv", o_lat, v_up.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(b, s, h * vd)
+    else:
+        # prefill / train: materialize per-head K and V from the latent
+        t = c_all.shape[1]
+        k_nope = linear(p["k_up"], c_all).reshape(b, t, h, nope)
+        v = linear(p["v_up"], c_all).reshape(b, t, h, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_all[:, :, None, :], (b, t, h, rope))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad V up to qk dim so we can reuse the shared sdpa, then slice
+        if vd < nope + rope:
+            v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rope - vd)))
+        else:
+            v_p = v
+        out = sdpa(q, k, v_p, positions, k_pos, window=window, impl=impl,
+                   unroll=unroll)
+        out = out[..., :vd].reshape(b, s, h * vd)
+
+    return linear(p["wo"], out), new_cache
+
+
+# =====================  unified entry  =====================
+
+def init_attention(key, cfg, dtype):
+    if cfg.attention == "mla":
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+def attention_forward(cfg, p, x, positions, *, window=0, cache=None,
+                      impl="auto", unroll=1):
+    if cfg.attention == "mla":
+        return mla_forward(cfg, p, x, positions, window=window, cache=cache,
+                           impl=impl, unroll=unroll)
+    return gqa_forward(cfg, p, x, positions, window=window, cache=cache,
+                       impl=impl, unroll=unroll)
+
+
+def init_cache(cfg, batch, capacity, dtype):
+    if cfg.attention == "mla":
+        return init_mla_cache(cfg, batch, capacity, dtype)
+    return init_kv_cache(cfg, batch, capacity, dtype)

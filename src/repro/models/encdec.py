@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is STUBBED: the model consumes precomputed frame embeddings
+(B, encoder_seq_len, d_model) from frontend.audio_frame_stub / input_specs.
+
+Encoder: bidirectional self-attention + MLP, sinusoidal positions.
+Decoder: causal self-attention (cached) + cross-attention over the encoder
+output + MLP. Cross K/V are computed once at prefill and carried in the
+serve state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.layers import (apply_mlp, apply_norm, init_linear, init_mlp,
+                                 init_norm, linear, sinusoidal_positions)
+
+
+def _init_xattn(key, cfg, dtype):
+    return attn_mod.init_gqa(key, cfg, dtype)
+
+
+def init_encdec(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn_mod.init_gqa(k1, cfg, dtype),
+            "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(k2, cfg.mlp, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_bias),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "self_attn": attn_mod.init_gqa(k1, cfg, dtype),
+            "norm_x": init_norm(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": _init_xattn(k2, cfg, dtype),
+            "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(k3, cfg.mlp, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_bias),
+        }
+
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02
+                  ).astype(dtype),
+        "encoder": jax.vmap(enc_layer)(jax.random.split(ks[1], cfg.encoder_layers)),
+        "enc_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "decoder": jax.vmap(dec_layer)(jax.random.split(ks[2], cfg.num_layers)),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "lm_head": init_linear(ks[3], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def encode(cfg, params, frames, attn_impl="auto", scan_unroll=1):
+    """frames: (B, T_enc, D) stubbed conv output -> (B, T_enc, D)."""
+    attn_unroll = True if scan_unroll not in (1, False) else 1
+    b, t, d = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    x = frames + sinusoidal_positions(t, d).astype(frames.dtype)[None]
+
+    def body(xc, lp):
+        h = apply_norm(cfg.norm, lp["norm1"], xc)
+        # encoder is bidirectional: call sdpa directly with permissive
+        # query positions (q_pos = t) so the causal mask passes everywhere
+        full = jnp.full_like(pos, t)
+        hd = cfg.resolved_head_dim
+        q = linear(lp["attn"]["wq"], h).reshape(b, t, cfg.num_heads, hd)
+        k = linear(lp["attn"]["wk"], h).reshape(b, t, cfg.num_kv_heads, hd)
+        v = linear(lp["attn"]["wv"], h).reshape(b, t, cfg.num_kv_heads, hd)
+        o = attn_mod.sdpa(q, k, v, full, pos, impl=attn_impl,
+                          unroll=attn_unroll)
+        xc = xc + linear(lp["attn"]["wo"], o.reshape(b, t, cfg.num_heads * hd))
+        h2 = apply_norm(cfg.norm, lp["norm2"], xc)
+        return xc + apply_mlp(cfg.mlp, lp["mlp"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=scan_unroll)
+    return apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def _cross_attention(cfg, lp, x, enc_out, attn_impl, unroll=1):
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    q = linear(lp["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = linear(lp["wk"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    v = linear(lp["wv"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    q_pos = jnp.full((b, s), t, jnp.int32)          # everything visible
+    k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    o = attn_mod.sdpa(q, k, v, q_pos, k_pos, impl=attn_impl, unroll=unroll)
+    return linear(lp["wo"], o.reshape(b, s, cfg.num_heads * hd))
+
+
+def decode(cfg, params, tokens, enc_out, positions=None, *, states=None,
+           window: int = 0, attn_impl="auto", scan_unroll=1):
+    """tokens: (B, S); enc_out: (B, T_enc, D). states: stacked self-attn KV
+    caches (None for teacher-forced training). Returns (logits, new_states).
+    """
+    b, s = tokens.shape
+    d = cfg.d_model
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    attn_unroll = True if scan_unroll not in (1, False) else 1
+    x = params["embed"][tokens]
+    # sinusoidal decoder positions (tables would not scale to the 32k/500k
+    # cache-capacity stress shapes; whisper's learned table is 448)
+    half = d // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    x = x + pe.astype(x.dtype)
+
+    def body(carry, xs):
+        xc = carry
+        lp, st = xs
+        h = apply_norm(cfg.norm, lp["norm1"], xc)
+        att, nst = attn_mod.gqa_forward(cfg, lp["self_attn"], h, positions,
+                                        window=window, cache=st, impl=attn_impl,
+                                        unroll=attn_unroll)
+        xc = xc + att
+        hx = apply_norm(cfg.norm, lp["norm_x"], xc)
+        xc = xc + _cross_attention(cfg, lp["cross_attn"], hx, enc_out,
+                                   attn_impl, attn_unroll)
+        h2 = apply_norm(cfg.norm, lp["norm2"], xc)
+        xc = xc + apply_mlp(cfg.mlp, lp["mlp"], h2)
+        return xc, nst
+
+    if states is None:
+        dummy = jnp.zeros((cfg.num_layers,), jnp.float32)
+
+        def body_nostate(xc, lp):
+            out, _ = body(xc, (lp, None))
+            return out, None
+
+        x, _ = jax.lax.scan(body_nostate, x, params["decoder"],
+                            unroll=scan_unroll)
+        new_states = None
+    else:
+        x, new_states = jax.lax.scan(body, x, (params["decoder"], states),
+                                     unroll=scan_unroll)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return linear(params["lm_head"], x), new_states
+
+
+def init_decoder_states(cfg, batch, capacity, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+
+    def one(_):
+        return attn_mod.init_kv_cache(cfg, batch, capacity, dtype)
+
+    return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+
+def encdec_loss_fn(cfg, params, batch, attn_impl="auto", scan_unroll=1):
+    enc_out = encode(cfg, params, batch["frames"], attn_impl, scan_unroll)
+    logits, _ = decode(cfg, params, batch["tokens"], enc_out,
+                       attn_impl=attn_impl, scan_unroll=scan_unroll)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, logz - gold, 0.0)
+    return ce.sum() / jnp.maximum(valid.sum(), 1)

@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (the one sanctioned stub — DESIGN.md §6).
+
+The assignment exercises the language/decoder transformer backbone; the
+vision tower (ViT/SigLIP + projector) and the audio codec (mel + conv) are
+represented by functions that produce embeddings of exactly the shape the
+real frontend would emit. ``input_specs`` in launch/dryrun uses the same
+shapes as ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_patch_stub(key, batch: int, num_patches: int, d_model: int,
+                      dtype=jnp.bfloat16):
+    """Pre-projected anyres patch embeddings a LLaVA-NeXT vision tower +
+    mm-projector would produce: (B, P, D)."""
+    return (jax.random.normal(key, (batch, num_patches, d_model)) * 0.02
+            ).astype(dtype)
+
+
+def audio_frame_stub(key, batch: int, frames: int, d_model: int,
+                     dtype=jnp.bfloat16):
+    """Post-conv (stride-2) mel frame embeddings a Whisper conv frontend
+    would produce: (B, T_enc, D)."""
+    return (jax.random.normal(key, (batch, frames, d_model)) * 0.02
+            ).astype(dtype)

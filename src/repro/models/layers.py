@@ -1,0 +1,124 @@
+"""Shared layer primitives (pure-functional: init_* return param pytrees,
+apply functions are stateless)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False, scale=None):
+    p = {"w": _dense_init(key, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------- norms ----------------
+
+def init_norm(kind, d, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(kind, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_group_norm(groups, channels, dtype=jnp.float32):
+    return {"scale": jnp.ones((channels,), dtype), "bias": jnp.zeros((channels,), dtype)}
+
+
+def group_norm(p, x, groups, eps=1e-5):
+    # x: (B, H, W, C)
+    b, h, w, c = x.shape
+    xf = x.astype(jnp.float32).reshape(b, h, w, groups, c // groups)
+    mean = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(b, h, w, c)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------- MLP ----------------
+
+def init_mlp(key, cfg_mlp: str, d_model: int, d_ff: int, dtype, bias=False):
+    ks = jax.random.split(key, 3)
+    if cfg_mlp == "swiglu":
+        return {
+            "gate": init_linear(ks[0], d_model, d_ff, dtype, bias),
+            "up": init_linear(ks[1], d_model, d_ff, dtype, bias),
+            "down": init_linear(ks[2], d_ff, d_model, dtype, bias),
+        }
+    return {
+        "up": init_linear(ks[0], d_model, d_ff, dtype, bias),
+        "down": init_linear(ks[1], d_ff, d_model, dtype, bias),
+    }
+
+
+def apply_mlp(cfg_mlp: str, p, x):
+    if cfg_mlp == "swiglu":
+        return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+    h = linear(p["up"], x)
+    if cfg_mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return linear(p["down"], h)
+
+
+# ---------------- RoPE ----------------
+
+def rope_frequencies(head_dim: int, theta: float, positions: jnp.ndarray):
+    """positions: (..., S) int32 -> cos/sin (..., S, head_dim/2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos_, sin_ = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos_, sin_ = cos[:, :, None, :], sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos_ - xf2 * sin_, xf2 * cos_ + xf1 * sin_], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int):
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((max_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe

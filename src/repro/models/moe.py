@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layer: top-k router + capacity-slotted gather/scatter
+dispatch.
+
+Design notes (DESIGN.md §2, §7):
+
+* One-hot einsum dispatch (GShard style) costs O(T * E * C * D) FLOPs —
+  quadratic in group token count. For the 384-expert Kimi-K2 config that
+  would exceed the model's real FLOPs by >10x and poison the roofline.
+  Instead we build an explicit slot table (cumsum-over-one-hot for
+  positions, batched scatter for ``slot -> token``), then dispatch with a
+  *gather* and combine with a *scatter-add*: zero matmul FLOPs, O(E*C*D)
+  bytes moved.
+
+* Tokens are processed in G groups (G = number of token shards on the
+  mesh). The gather/scatter is batched over G so it stays device-local
+  under GSPMD; the reshard of the dispatched activations from
+  group-sharding to expert-sharding is what becomes the expert-parallel
+  all-to-all. Capacity is per (group, expert): C = ceil(T_g*k/E*cf),
+  floored at ``min_capacity``.
+
+* Shared experts (DeepSeek-V2 / Kimi-K2) run densely on every token.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+MIN_CAPACITY = 4
+
+
+def init_moe(key, cfg, dtype):
+    d, dff = cfg.d_model, cfg.moe_d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": init_linear(ks[0], d, e, jnp.float32),
+        "gate": (jax.random.normal(ks[1], (e, d, dff)) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (e, d, dff)) * scale).astype(dtype),
+        "down": (jax.random.normal(ks[3], (e, dff, d)) / math.sqrt(dff)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = {
+            "gate": init_linear(jax.random.fold_in(ks[4], 0), d,
+                                cfg.num_shared_experts * dff, dtype),
+            "up": init_linear(jax.random.fold_in(ks[4], 1), d,
+                              cfg.num_shared_experts * dff, dtype),
+            "down": init_linear(jax.random.fold_in(ks[4], 2),
+                                cfg.num_shared_experts * dff, d, dtype),
+        }
+    return p
+
+
+def capacity_per_group(cfg, tokens_per_group: int) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.top_k / cfg.num_experts
+                      * cfg.capacity_factor))
+    c = max(c, MIN_CAPACITY)
+    # round up to a TPU-friendly multiple (also keeps C shardable by the
+    # model axis when C is large)
+    mult = 128 if c >= 128 else 8
+    return ((c + mult - 1) // mult) * mult
+
+
+def _route(cfg, logits):
+    """logits: (G, T, E) f32 -> gates (G, T, k), idx (G, T, k), aux scalar."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss, averaged over groups. Assignment
+    # counts via scatter-add (bincount), NOT one-hot: one-hot would be
+    # O(T*k*E) memory (terabytes for the 1M-token x 384-expert shapes).
+    e = cfg.num_experts
+    g, t, k = idx.shape
+    me = probs.mean(axis=1)                                     # (G, E)
+    flat_e = idx.reshape(g, t * k)
+
+    def counts_one(fe):
+        return jnp.zeros((e,), jnp.float32).at[fe].add(1.0)
+
+    ce = jax.vmap(counts_one)(flat_e)                           # (G, E)
+    ce = ce / jnp.maximum(ce.sum(-1, keepdims=True), 1.0)
+    aux = (e * (me * ce).sum(-1)).mean()
+    return gates, idx, aux
+
+
+def _slot_tables(cfg, idx, gates, cap):
+    """Build slot->token and slot->gate tables per group.
+
+    idx/gates: (G, T, k). Returns slot_token (G, E*C) int32 in [0, T]
+    (T = dummy/empty) and slot_gate (G, E*C) f32.
+
+    Position-within-expert is computed with a SORT-based rank (stable
+    argsort over expert ids, rank = index - segment start), which is
+    O(T*k log) compute and O(T*k) memory — the cumsum-over-one-hot
+    alternative is O(T*k*E) memory and unusable at 384 experts x 1M
+    tokens. Sorts are per-group, so with groups == token shards they
+    stay device-local under GSPMD.
+    """
+    g, t, k = idx.shape
+    e = cfg.num_experts
+    tk = t * k
+    flat_e = idx.reshape(g, tk)                 # expert of each assignment
+
+    def pos_one(fe):
+        order = jnp.argsort(fe, stable=True)                    # (Tk,)
+        counts = jnp.zeros((e,), jnp.int32).at[fe].add(1)
+        starts = jnp.cumsum(counts) - counts                    # (E,)
+        sorted_e = fe[order]
+        rank_sorted = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e]
+        return jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted)
+
+    pos = jax.vmap(pos_one)(flat_e)                             # (G, Tk)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # dropped -> dummy slot
+    token_of_assign = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[None, :, None], (g, t, k)).reshape(g, tk)
+
+    def scatter_one(slots_g, tok_g, gate_g):
+        st = jnp.full((e * cap + 1,), t, jnp.int32).at[slots_g].set(tok_g)
+        sg = jnp.zeros((e * cap + 1,), jnp.float32).at[slots_g].set(gate_g)
+        return st[:-1], sg[:-1]
+
+    slot_token, slot_gate = jax.vmap(scatter_one)(
+        slot, token_of_assign, gates.reshape(g, tk))
+    return slot_token, slot_gate
+
+
+def moe_forward(cfg, p, x, *, groups: int = 1,
+                shard_fn: Optional[Callable] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    groups: token groups for dispatch locality (set to the number of token
+    shards on the mesh). shard_fn(tensor, role) applies sharding
+    constraints; roles: "dispatched" (G,E,C,D) pre-FFN, "expert_hidden".
+    """
+    b, s, d = x.shape
+    t_total = b * s
+    g = groups if t_total % groups == 0 else 1
+    tg = t_total // g
+    shard_fn = shard_fn or (lambda z, role: z)
+
+    xt = x.reshape(g, tg, d)
+    logits = linear(p["router"], xt.astype(jnp.float32))
+    gates, idx, aux = _route(cfg, logits)
+
+    cap = capacity_per_group(cfg, tg)
+    slot_token, slot_gate = _slot_tables(cfg, idx, gates, cap)  # (G, E*C)
+
+    # dispatch: local batched gather (dummy token T -> zeros via padded row)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(xt_pad, slot_token[..., None], axis=1)  # (G, E*C, D)
+    xe = xe.reshape(g, cfg.num_experts, cap, d)
+    xe = shard_fn(xe, "dispatched")         # reshard G->experts = all-to-all
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["gate"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["up"])
+    h = shard_fn(h, "expert_hidden")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])              # (G, E, C, D)
+    ye = ye * slot_gate.reshape(g, cfg.num_experts, cap, 1).astype(ye.dtype)
+    ye = shard_fn(ye.reshape(g, cfg.num_experts * cap, d), "combine")
+
+    # combine: local batched scatter-add back to token order
+    def combine_one(y_g, st_g):
+        return jnp.zeros((tg + 1, d), y_g.dtype).at[st_g].add(y_g)[:-1]
+
+    out = jax.vmap(combine_one)(ye, slot_token)                  # (G, T_g, D)
+    out = out.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        sh = p["shared"]
+        xs = x.reshape(t_total, d)
+        hs = jax.nn.silu(linear(sh["gate"], xs)) * linear(sh["up"], xs)
+        out = out + linear(sh["down"], hs).reshape(b, s, d)
+
+    return out, cfg.router_aux_coef * aux

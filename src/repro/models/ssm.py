@@ -1,0 +1,124 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba / Jamba mixer).
+
+Forward recurrence per channel c and state n:
+    h_t = exp(dt_t * A[c,n]) * h_{t-1} + dt_t * B_t[n] * u_t[c]
+    y_t = sum_n C_t[n] * h_t[c,n] + D[c] * u_t[c]
+
+Training/prefill uses an associative scan (parallel prefix over the
+(decay, increment) pairs) — TPU friendly; decode is the O(1) recurrence
+with explicit carried state {conv window, ssm state}.
+
+The TPU-target blocked kernel lives in kernels/ssm_scan (same math,
+chunked over time with VMEM-resident state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_linear, linear
+
+
+def init_mamba(key, cfg, dtype):
+    d, d_in = cfg.d_model, cfg.ssm_d_inner
+    st, dtr, cw = cfg.ssm_state, cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, d_in)) / math.sqrt(cw)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init_linear(ks[2], d_in, dtr + 2 * st, dtype),
+        "dt_proj": {"w": (jax.random.normal(ks[3], (dtr, d_in)) / math.sqrt(dtr)).astype(dtype),
+                    "b": jnp.full((d_in,), -4.6, dtype)},      # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),                               # f32, A = -exp(a_log)
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_linear(ks[4], d_in, d, dtype),
+    }
+
+
+def init_ssm_state(cfg, batch, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def _ssm_params(cfg, p, u):
+    """u: (..., d_in) -> dt (..., d_in) f32, B/C (..., st) f32."""
+    st, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    proj = linear(p["x_proj"], u)
+    dt = jax.nn.softplus(
+        proj[..., :dtr].astype(jnp.float32) @ p["dt_proj"]["w"].astype(jnp.float32)
+        + p["dt_proj"]["b"].astype(jnp.float32))
+    b = proj[..., dtr:dtr + st].astype(jnp.float32)
+    c = proj[..., dtr + st:].astype(jnp.float32)
+    return dt, b, c
+
+
+def _scan_full(cfg, p, u, h0=None):
+    """u: (B, S, d_in) post-conv/silu. Associative scan over time.
+    h0: optional initial state (B, d_in, st) from a previous chunk —
+    folded in via the cumulative decay product (prefill continuation)."""
+    a = -jnp.exp(p["a_log"])                                   # (d_in, st)
+    dt, bmat, cmat = _ssm_params(cfg, p, u)                    # (B,S,d_in) (B,S,st)
+    uf = u.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * a)                         # (B,S,d_in,st)
+    inc = (dt * uf)[..., None] * bmat[..., None, :]            # (B,S,d_in,st)
+
+    def op(l, r):
+        dl, il = l
+        dr, ir = r
+        return dl * dr, il * dr + ir
+
+    cum_decay, h = jax.lax.associative_scan(op, (decay, inc), axis=1)
+    if h0 is not None:
+        h = h + cum_decay * h0[:, None]                        # carry-in
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)
+    return (y + uf * p["d_skip"]).astype(u.dtype), h[:, -1]
+
+
+def mamba_forward(cfg, p, x, *, state: Optional[dict] = None
+                  ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B, S, D). state None -> full-sequence scan (train/prefill,
+    returns state for continuation); state given with S==1 -> one decode step.
+    """
+    b, s, d = x.shape
+    d_in, cw = cfg.ssm_d_inner, cfg.ssm_conv
+    xz = linear(p["in_proj"], x)
+    u, z = xz[..., :d_in], xz[..., d_in:]
+
+    if state is None or s > 1:
+        prev = state["conv"] if state is not None else jnp.zeros((b, cw - 1, d_in), u.dtype)
+        u_ext = jnp.concatenate([prev, u], axis=1)
+        conv_in = u_ext[:, -(s + cw - 1):]
+        u_c = jax.nn.silu(_conv_causal_from(p, conv_in, s, cw))
+        h0 = state["h"] if state is not None else None
+        y, h_last = _scan_full(cfg, p, u_c, h0=h0)
+        new_state = {"conv": u_ext[:, -(cw - 1):].astype(u.dtype), "h": h_last}
+    else:
+        # decode: one token
+        conv_window = jnp.concatenate([state["conv"], u], axis=1)  # (B, cw, d_in)
+        u_c = jax.nn.silu(
+            jnp.einsum("bwd,wd->bd", conv_window, p["conv_w"]) + p["conv_b"])[:, None, :]
+        a = -jnp.exp(p["a_log"])
+        dt, bmat, cmat = _ssm_params(cfg, p, u_c)
+        uf = u_c.astype(jnp.float32)
+        decay = jnp.exp(dt[:, 0, :, None] * a)                 # (B, d_in, st)
+        inc = (dt[:, 0] * uf[:, 0])[..., None] * bmat[:, 0, None, :]
+        h = state["h"] * decay + inc
+        y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None, :]
+        y = (y + uf * p["d_skip"]).astype(u.dtype)
+        new_state = {"conv": conv_window[:, 1:], "h": h}
+
+    out = y * jax.nn.silu(z)
+    return linear(p["out_proj"], out), new_state
+
+
+def _conv_causal_from(p, u_ext, s, window):
+    """u_ext: (B, S + window - 1, d_in) already left-extended."""
+    out = sum(u_ext[:, i:i + s, :] * p["conv_w"][i] for i in range(window))
+    return out + p["conv_b"]

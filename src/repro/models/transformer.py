@@ -1,0 +1,288 @@
+"""Decoder-only transformer stack built from an ArchConfig.
+
+Supports every assigned family: dense GQA, MLA, MoE, pure-SSM, hybrid
+(jamba 1:7 attn:mamba interleave), and the VLM variant (prefix patch
+embeddings from the stubbed frontend).
+
+Layer-stack compilation strategy (DESIGN.md §6): the per-layer spec
+(mixer kind, MoE?) is analysed into (prefix_layers, period P, groups G)
+and the periodic part is executed with ``lax.scan`` over G stacked groups
+— one compiled body regardless of depth, keeping 512-device dry-run HLO
+small. Examples: dense -> P=1; deepseek/kimi -> 1 dense prefix + P=1 MoE
+scan; jamba -> P=8 (7 mamba + 1 attn, MoE every other layer), G=9.
+
+Modes:
+  train   full-sequence forward, no cache, returns logits for CE loss
+  prefill full-sequence forward writing caches/states
+  decode  S==1 step against caches/states
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_norm, init_linear, init_mlp, init_norm,
+                                 apply_mlp, linear, sinusoidal_positions)
+
+PyTree = Any
+
+
+# ---------------- stack plan ----------------
+
+def layer_specs(cfg) -> Tuple[Tuple[str, bool], ...]:
+    kinds = cfg.layer_kinds()
+    return tuple((kinds[i], cfg.layer_is_moe(i)) for i in range(cfg.num_layers))
+
+
+def stack_plan(cfg) -> Tuple[int, int, int]:
+    """-> (prefix_layers, period, groups) with prefix + period*groups == L."""
+    specs = layer_specs(cfg)
+    n = len(specs)
+    for prefix in range(0, n):
+        rest = specs[prefix:]
+        if not rest:
+            break
+        for period in range(1, min(len(rest), 16) + 1):
+            if len(rest) % period:
+                continue
+            if all(rest[i] == rest[i % period] for i in range(len(rest))):
+                return prefix, period, len(rest) // period
+    return n, 0, 0          # fully heterogeneous: all layers in prefix
+
+
+# ---------------- single layer ----------------
+
+def _init_layer(key, cfg, spec, dtype):
+    kind, is_moe = spec
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind == "attn":
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = ssm_mod.init_mamba(ks[0], cfg, dtype)
+    if cfg.arch_type != "ssm":          # pure-SSM archs: mamba block IS the layer
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if is_moe:
+            p["mlp"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff, dtype,
+                                cfg.mlp_bias)
+    return p
+
+
+def _layer_forward(cfg, spec, p, x, positions, state, *, window, attn_impl,
+                   moe_groups, shard_fn, attn_unroll=1, moe_impl="gshard",
+                   moe_mesh=None):
+    kind, is_moe = spec
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if kind == "attn":
+        mixed, new_state = attn_mod.attention_forward(
+            cfg, p["mixer"], h, positions, window=window, cache=state,
+            impl=attn_impl, unroll=attn_unroll)
+    else:
+        mixed, new_state = ssm_mod.mamba_forward(cfg, p["mixer"], h, state=state)
+    x = x + mixed
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.arch_type != "ssm":
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if is_moe:
+            if moe_impl == "ep":
+                from repro.models import moe_ep
+                out, aux = moe_ep.moe_forward_ep(cfg, p["mlp"], h2,
+                                                 mesh=moe_mesh)
+            else:
+                out, aux = moe_mod.moe_forward(cfg, p["mlp"], h2,
+                                               groups=moe_groups,
+                                               shard_fn=shard_fn)
+        else:
+            out = apply_mlp(cfg.mlp, p["mlp"], h2)
+        x = x + out
+    return x, new_state, aux
+
+
+def _init_layer_state(cfg, spec, batch, capacity, dtype):
+    kind, _ = spec
+    if kind == "attn":
+        return attn_mod.init_cache(cfg, batch, capacity, dtype)
+    return ssm_mod.init_ssm_state(cfg, batch, dtype)
+
+
+# ---------------- full model ----------------
+
+def init_lm(cfg, key, dtype=None) -> PyTree:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    specs = layer_specs(cfg)
+    prefix, period, groups = stack_plan(cfg)
+    k_embed, k_prefix, k_stack, k_head = jax.random.split(key, 4)
+
+    params: Dict[str, PyTree] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype)
+
+    params["prefix_layers"] = tuple(
+        _init_layer(jax.random.fold_in(k_prefix, i), cfg, specs[i], dtype)
+        for i in range(prefix))
+
+    if groups:
+        def init_group(gkey):
+            return tuple(
+                _init_layer(jax.random.fold_in(gkey, j), cfg,
+                            specs[prefix + j], dtype)
+                for j in range(period))
+        params["stack"] = jax.vmap(init_group)(
+            jax.random.split(k_stack, groups))
+    else:
+        params["stack"] = ()
+    return params
+
+
+def init_states(cfg, batch, capacity, dtype=None) -> PyTree:
+    """Stacked caches/states matching the stack plan (for prefill/decode)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    specs = layer_specs(cfg)
+    prefix, period, groups = stack_plan(cfg)
+    prefix_states = tuple(
+        _init_layer_state(cfg, specs[i], batch, capacity, dtype)
+        for i in range(prefix))
+    if groups:
+        def one_group(_):
+            return tuple(
+                _init_layer_state(cfg, specs[prefix + j], batch, capacity, dtype)
+                for j in range(period))
+        stack_states = jax.vmap(one_group)(jnp.arange(groups))
+    else:
+        stack_states = ()
+    return {"prefix": prefix_states, "stack": stack_states}
+
+
+def _embed_inputs(cfg, params, tokens, embeds):
+    x = params["embed"][tokens]
+    if cfg.modality == "vision" and embeds is not None:
+        # VLM: stubbed vision tower supplies pre-projected patch embeddings,
+        # prepended to the text tokens (anyres tiles flattened).
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def lm_forward(cfg, params, tokens, positions=None, *, embeds=None,
+               states: Optional[PyTree] = None, window: int = 0,
+               attn_impl: str = "auto", moe_groups: int = 1,
+               shard_fn: Optional[Callable] = None,
+               remat: str = "none", logits_slice_last: bool = False,
+               scan_unroll: int = 1, moe_impl: str = "gshard",
+               moe_mesh=None):
+    """Returns (logits, new_states, aux_loss).
+
+    tokens: (B, S) int32. embeds: (B, P, D) for VLM. states: from
+    init_states (prefill fills them; decode S==1 steps them).
+    """
+    specs = layer_specs(cfg)
+    prefix, period, groups = stack_plan(cfg)
+    attn_unroll = True if scan_unroll not in (1, False) else 1
+    x = _embed_inputs(cfg, params, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix_states = []
+    for i in range(prefix):
+        st = states["prefix"][i] if states is not None else None
+        x, nst, aux = _layer_forward(cfg, specs[i], params["prefix_layers"][i],
+                                     x, positions, st, window=window,
+                                     attn_impl=attn_impl, moe_groups=moe_groups,
+                                     shard_fn=shard_fn,
+                                     attn_unroll=attn_unroll,
+                                     moe_impl=moe_impl, moe_mesh=moe_mesh)
+        new_prefix_states.append(nst)
+        aux_total = aux_total + aux
+
+    if groups:
+        def group_apply(xc, auxc, gparams, gstates):
+            new_gstates = []
+            for j in range(period):
+                st = gstates[j] if gstates is not None else None
+                xc, nst, aux = _layer_forward(
+                    cfg, specs[prefix + j], gparams[j], xc, positions, st,
+                    window=window, attn_impl=attn_impl, moe_groups=moe_groups,
+                    shard_fn=shard_fn, attn_unroll=attn_unroll,
+                    moe_impl=moe_impl, moe_mesh=moe_mesh)
+                new_gstates.append(nst)
+                auxc = auxc + aux
+            return xc, auxc, tuple(new_gstates)
+
+        def _maybe_remat(fn):
+            if remat == "full":
+                return jax.checkpoint(fn)
+            if remat == "dots":
+                return jax.checkpoint(
+                    fn,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            return fn
+
+        gstates_in = states["stack"] if states is not None else None
+        if gstates_in is None:
+            @_maybe_remat
+            def body(carry, gparams):
+                xc, auxc, _ = group_apply(carry[0], carry[1], gparams, None)
+                return (xc, auxc), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["stack"],
+                                             unroll=scan_unroll)
+        else:
+            @_maybe_remat
+            def body(carry, xs):
+                gparams, gstates = xs
+                xc, auxc, new_gstates = group_apply(carry[0], carry[1],
+                                                    gparams, gstates)
+                return (xc, auxc), new_gstates
+
+            (x, aux_total), new_stack_states = jax.lax.scan(
+                body, (x, aux_total), (params["stack"], gstates_in),
+                unroll=scan_unroll)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if logits_slice_last:
+        x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = linear(params["lm_head"], x)
+
+    if states is None:
+        new_states = None
+    else:
+        new_states = {"prefix": tuple(new_prefix_states),
+                      "stack": new_stack_states if groups else ()}
+    return logits, new_states, aux_total
+
+
+def loss_fn(cfg, params, batch, **fw_kw):
+    """Causal-LM cross entropy (+ MoE aux). batch: tokens (B,S), labels (B,S)
+    with -100 = ignore; VLM adds patch_embeds."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    embeds = batch.get("patch_embeds")
+    logits, _, aux = lm_forward(cfg, params, tokens, embeds=embeds, **fw_kw)
+    if embeds is not None:
+        # logits cover [patches + text]; labels only for text part
+        logits = logits[:, embeds.shape[1]:, :]
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, logz - gold, 0.0)
+    loss = ce.sum() / jnp.maximum(valid.sum(), 1)
+    return loss + aux

@@ -1,0 +1,86 @@
+"""Minimal pure-pytree optimizers (SGD / momentum / AdamW) + schedules.
+
+Interface mirrors optax: init(params) -> state; update(grads, state, params)
+-> (updates, state); apply: params - updates (note the sign convention:
+updates are SUBTRACTED, matching the paper's w <- w - eta*g).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], Tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (updates, new_state)
+
+
+def sgd(learning_rate: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        return jax.tree.map(lambda g: learning_rate * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(learning_rate: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        return jax.tree.map(lambda m: learning_rate * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(learning_rate: float, b1=0.9, b2=0.999, eps=1e-8,
+          weight_decay=0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        def upd(m_, v_, p):
+            mh = m_ / (1 - b1 ** t)
+            vh = v_ / (1 - b2 ** t)
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (learning_rate * u).astype(p.dtype)
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)
+
+
+# ---------------- schedules ----------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

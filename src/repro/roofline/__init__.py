@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (analyze_compiled, collective_bytes,
+                                     roofline_report, model_flops)

@@ -1,0 +1,197 @@
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §8).
+
+  compute    = HLO_FLOPs        / (chips * PEAK_FLOPS_BF16)
+  memory     = HLO_bytes        / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the *optimized* (post-SPMD)
+HLO text and sum operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops.  cost_analysis
+reports per-device numbers for SPMD-partitioned modules, so terms are
+divided by nothing further — ``chips`` enters only through the peak
+rates when cost_analysis is whole-module (we detect which convention by
+comparing with the mesh size).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+# e.g.  %ag = bf16[16,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+(" +
+    "|".join(_COLLECTIVE_OPS) + r")[\s(]")
+# tuple-result collectives: (bf16[..], bf16[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s+(" +
+    "|".join(_COLLECTIVE_OPS) + r")[\s(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if m:
+            out[m.group(3)] += _shape_bytes(m.group(1), m.group(2))
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(m.group(1)))
+            out[m.group(2)] += total
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: Dict[str, int] = field(default_factory=dict)
+    model_flops_total: float = 0.0   # 6*N*D useful flops (whole step)
+    memory_per_device: float = 0.0   # from memory_analysis
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_total / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs) — how much compiled compute
+        is 'useful' model math (catches remat/redundancy waste)."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes": dict(self.coll_bytes),
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_total,
+            "useful_fraction": self.useful_fraction,
+            "memory_per_device_bytes": self.memory_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens in the
+    step; x3 for training (fwd+bwd). Decode processes B*1 tokens.
+    Encoder-decoder (whisper): decoder length is capped at max_seq_len (the
+    32k/500k shapes are cache-capacity stress shapes, not real decode
+    lengths), plus the encoder runs once over encoder_seq_len frames."""
+    counts = cfg.param_counts()
+    n = counts["active"]
+    seq = shape.seq_len
+    if cfg.is_encoder_decoder:
+        seq = min(seq, cfg.max_seq_len)
+    if shape.kind == "train":
+        tokens = shape.global_batch * seq
+        mult = 6.0                      # 2 fwd + 4 bwd per param per token
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * seq
+        mult = 2.0
+    else:
+        tokens = shape.global_batch * 1
+        mult = 2.0
+    return mult * n * tokens
+
+
+def analyze_compiled(compiled, *, arch: str, shape_name: str, mesh_name: str,
+                     chips: int, model_flops_total: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+                    flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    model_flops_total=model_flops_total,
+                    memory_per_device=mem)
+
+
+def _fmt_secs(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def roofline_report(rl: Roofline) -> str:
+    lines = [
+        f"### {rl.arch} x {rl.shape} on {rl.mesh} ({rl.chips} chips)",
+        f"- compute    term: {_fmt_secs(rl.t_compute)}  "
+        f"({rl.flops:.3e} FLOP/device)",
+        f"- memory     term: {_fmt_secs(rl.t_memory)}  "
+        f"({rl.hbm_bytes:.3e} B/device)",
+        f"- collective term: {_fmt_secs(rl.t_collective)}  "
+        f"({rl.coll_total:.3e} B; " + ", ".join(
+            f"{k}={v:.2e}" for k, v in rl.coll_bytes.items() if v) + ")",
+        f"- dominant: **{rl.dominant}**",
+        f"- MODEL_FLOPS={rl.model_flops_total:.3e}, "
+        f"useful fraction={rl.useful_fraction:.3f}",
+        f"- memory/device: {rl.memory_per_device / 1e9:.2f} GB",
+    ]
+    return "\n".join(lines)

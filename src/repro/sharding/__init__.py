@@ -1,0 +1,2 @@
+from repro.sharding.rules import (ShardingPolicy, param_specs, batch_specs,
+                                  state_specs)

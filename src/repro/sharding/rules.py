@@ -1,0 +1,238 @@
+"""PartitionSpec rules for every parameter / activation / cache class.
+
+Name-based rules (DESIGN.md §7) with divisibility guards: a dim is only
+sharded if it divides evenly by the axis size; otherwise that dim falls
+back to replication. Rules are written *from the end* of the shape so the
+same rule covers plain leaves and lax.scan-stacked leaves (leading G dim
+from the grouped layer stack) and vmapped encoder/decoder stacks.
+
+Default layout (the paper-faithful baseline; §Perf iterates on this):
+  * Megatron TP over ``model``: QKV/up/gate column-, wo/down row-sharded.
+  * MoE expert tensors sharded (experts over ``expert_axis``, ffn dim over
+    ``model``) — expert_axis defaults to ``data`` on the production mesh,
+    giving expert parallelism + per-device bytes /= |data|·|model|.
+  * Activations: batch over (pod, data); model dim replicated.
+  * KV caches: batch over (pod, data); kv-heads over model when divisible,
+    else cache capacity over model.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    model_axis: str = "model"
+    batch_axes: Tuple[str, ...] = ("data",)      # ("pod","data") multi-pod
+    # single axis name, or a TUPLE of axes (multi-pod expert parallelism
+    # spans pod x data); None -> experts over model only
+    expert_axis: Optional[object] = "data"
+    shard_embed: bool = True
+    # perf-iteration levers
+    seq_axis: Optional[str] = None               # sequence parallelism (unused by default)
+    fsdp_dense: bool = False                     # shard dense d_ff/vocab over data too
+
+
+# rule := (regex over "/"-joined path, spec-from-end)
+# spec entries: axis name, None, or special tokens "EXPERT"
+def _rules(pol: ShardingPolicy):
+    m = pol.model_axis
+    e = pol.expert_axis if pol.expert_axis else m
+    d0 = pol.batch_axes[-1] if pol.fsdp_dense else None
+    return [
+        # --- embeddings / head ---
+        (r"(^|/)embed$",                 (m, None)),         # (V, D)
+        (r"lm_head/w$",                  (d0, m)),           # (D, V)
+        (r"head/w$",                     (None, None)),      # vision head (tiny)
+        # --- attention (GQA + MLA + cross) ---
+        (r"(wq|wk|wv)/w$",               (d0, m)),
+        (r"(wq|wk|wv)/b$",               (m,)),
+        (r"wo/w$",                       (m, d0)),
+        (r"q_up/w$",                     (None, m)),
+        (r"(k_up|v_up)/w$",              (None, m)),
+        (r"(q_down|kv_down)/w$",         (None, None)),
+        # --- MoE experts (E, D, F) / (E, F, D) ---
+        (r"mlp/(gate|up)$",              ("EXPERT", None, m)),
+        (r"mlp/down$",                   ("EXPERT", m, None)),
+        (r"router/w$",                   (None, None)),
+        (r"shared/(gate|up)/w$",         (d0, m)),
+        (r"shared/down/w$",              (m, d0)),
+        # --- dense MLP ---
+        (r"(gate|up)/w$",                (d0, m)),
+        (r"(gate|up)/b$",                (m,)),
+        (r"down/w$",                     (m, d0)),
+        # --- mamba ---
+        (r"in_proj/w$",                  (None, m)),
+        (r"conv_w$",                     (None, m)),
+        (r"conv_b$",                     (m,)),
+        (r"x_proj/w$",                   (m, None)),
+        (r"dt_proj/w$",                  (None, m)),
+        (r"dt_proj/b$",                  (m,)),
+        (r"a_log$",                      (m, None)),
+        (r"d_skip$",                     (m,)),
+        (r"out_proj/w$",                 (m, None)),
+    ]
+
+
+def _leaf_spec(path: str, shape, pol: ShardingPolicy, axis_sizes) -> P:
+    for pat, spec_end in _rules(pol):
+        if re.search(pat, path):
+            spec_end = list(spec_end)
+            # resolve EXPERT token
+            spec_end = [pol.expert_axis if s == "EXPERT" else s
+                        for s in spec_end]
+            n = len(shape)
+            k = len(spec_end)
+            if k > n:
+                spec_end = spec_end[k - n:]
+            full = [None] * (n - len(spec_end)) + spec_end
+            # divisibility + duplicate-axis guards (ax may be a tuple of
+            # mesh axes, e.g. experts over ("pod", "data"))
+            used = set()
+            out = []
+            for dim, ax in zip(shape, full):
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                if ax is None or any(a in used for a in axes):
+                    out.append(None)
+                    continue
+                size = 1
+                ok = True
+                for a in axes:
+                    s_a = axis_sizes.get(a)
+                    if s_a is None:
+                        ok = False
+                        break
+                    size *= s_a
+                if not ok or dim % size != 0:
+                    out.append(None)
+                else:
+                    out.append(ax)
+                    used.update(axes)
+            return P(*out)
+    return P()          # default: replicate (norms, scalars, small biases)
+
+
+def param_specs(params: PyTree, mesh: Mesh,
+                pol: Optional[ShardingPolicy] = None) -> PyTree:
+    pol = pol or ShardingPolicy(batch_axes=tuple(
+        a for a in mesh.axis_names if a != "model"))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key_str(k) for k in path)
+        specs.append(_leaf_spec(pstr, np.shape(leaf), pol, axis_sizes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------- activations / inputs ----------------
+
+def _batch_spec(batch_size: int, pol: ShardingPolicy, axis_sizes):
+    """Largest prefix of batch_axes whose product divides batch_size."""
+    axes = []
+    prod = 1
+    for ax in pol.batch_axes:
+        if batch_size % (prod * axis_sizes[ax]) == 0:
+            axes.append(ax)
+            prod *= axis_sizes[ax]
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_specs(batch: PyTree, mesh: Mesh,
+                pol: Optional[ShardingPolicy] = None) -> PyTree:
+    """Inputs (tokens/labels/frames/patch_embeds): shard dim0 over batch axes."""
+    pol = pol or ShardingPolicy(batch_axes=tuple(
+        a for a in mesh.axis_names if a != "model"))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        if not shape:
+            return P()
+        b = _batch_spec(shape[0], pol, axis_sizes)
+        return P(b, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def state_specs(states: PyTree, mesh: Mesh,
+                pol: Optional[ShardingPolicy] = None) -> PyTree:
+    """Serve states (KV caches / SSM states / MLA latent caches).
+
+    Leaf classes recognized by path name:
+      k/v      (…, B, C, KV, HD): batch over batch_axes; KV over model if
+               divisible else C over model
+      pos      (…, B, C): batch only
+      c_kv/k_rope (…, B, C, R): batch; C over model
+      conv     (…, B, W, d_in): batch; d_in over model
+      h        (…, B, d_in, st): batch; d_in over model
+      idx      scalar: replicated
+    Leading scan/stack dims (group, period-index) are unsharded.
+    """
+    pol = pol or ShardingPolicy(batch_axes=tuple(
+        a for a in mesh.axis_names if a != "model"))
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = axis_sizes[pol.model_axis]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(states)
+
+    def spec_for(pstr: str, shape) -> P:
+        name = pstr.split("/")[-1]
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if name in ("k", "v") and nd >= 4:
+            b, c, kv, hd = shape[-4:]
+            bspec = _batch_spec(b, pol, axis_sizes)
+            if kv % msize == 0:
+                end = [bspec, None, pol.model_axis, None]
+            elif c % msize == 0:
+                end = [bspec, pol.model_axis, None, None]
+            else:
+                end = [bspec, None, None, None]
+        elif name == "pos" and nd >= 2:
+            end = [_batch_spec(shape[-2], pol, axis_sizes), None]
+        elif name in ("c_kv", "k_rope") and nd >= 3:
+            b, c, r = shape[-3:]
+            end = [_batch_spec(b, pol, axis_sizes),
+                   pol.model_axis if c % msize == 0 else None, None]
+        elif name == "conv" and nd >= 3:
+            b, w, din = shape[-3:]
+            end = [_batch_spec(b, pol, axis_sizes), None,
+                   pol.model_axis if din % msize == 0 else None]
+        elif name == "h" and nd >= 3:
+            b, din, st = shape[-3:]
+            end = [_batch_spec(b, pol, axis_sizes),
+                   pol.model_axis if din % msize == 0 else None, None]
+        elif name == "enc_out" and nd >= 3:
+            end = [_batch_spec(shape[-3], pol, axis_sizes), None, None]
+        else:
+            return P(*([None] * nd))
+        full = [None] * (nd - len(end)) + end
+        return P(*full)
+
+    specs = [spec_for("/".join(_key_str(k) for k in path), np.shape(leaf))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

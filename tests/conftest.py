@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the default 1-device CPU (the 512-device override is ONLY in
+# launch/dryrun.py). Force f32 for determinism of small-model checks.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

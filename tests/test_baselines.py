@@ -1,0 +1,91 @@
+"""Baseline server rules: semantics + one-round behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import ALGORITHM_NAMES, get_algorithm
+from repro.core import projection as proj
+
+
+def _params(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (5, 3))}
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _flat(t):
+    return jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(t)])
+
+
+@pytest.mark.parametrize("name", ALGORITHM_NAMES)
+def test_every_algorithm_runs_two_rounds(name):
+    algo = get_algorithm(name)
+    params = _params()
+    state = algo.init(params, 6)
+    for t in range(2):
+        deltas = _stack([_params(3 * t + i + 1) for i in range(3)])
+        ids = jnp.asarray([0, 2, 4], jnp.int32)
+        params, state, diag = algo.step(state, params, deltas, ids, 0.1, t)
+    assert not jnp.isnan(_flat(params)).any()
+
+
+def test_fedavg_is_plain_mean():
+    algo = get_algorithm("fedavg")
+    params = _params()
+    state = algo.init(params, 4)
+    deltas = _stack([_params(i + 1) for i in range(2)])
+    new_p, _, _ = algo.step(state, params, deltas,
+                            jnp.asarray([0, 1]), 1.0, 0)
+    mean = jax.tree.map(lambda x: x.mean(0), deltas)
+    want = jax.tree.map(lambda w, d: w - d, params, mean)
+    np.testing.assert_allclose(_flat(new_p), _flat(want), rtol=1e-6)
+
+
+def test_fedexp_extrapolation_at_least_one():
+    algo = get_algorithm("fedexp")
+    params = _params()
+    state = algo.init(params, 4)
+    # anti-correlated updates -> small mean -> large extrapolation
+    d1 = _params(1)
+    d2 = jax.tree.map(lambda x: -x + 0.01, d1)
+    _, _, diag = algo.step(state, params, _stack([d1, d2]),
+                           jnp.asarray([0, 1]), 1.0, 0)
+    assert float(diag["extrap"]) >= 1.0
+
+
+def test_fedvarp_uses_memory_for_absent_clients():
+    algo = get_algorithm("fedvarp")
+    params = _params()
+    state = algo.init(params, 3)
+    # round 1: clients {0,1} participate
+    d0, d1 = _params(1), _params(2)
+    params1, state, _ = algo.step(state, params, _stack([d0, d1]),
+                                  jnp.asarray([0, 1]), 1.0, 0)
+    # y table now holds d0, d1, 0
+    np.testing.assert_allclose(_flat({"w": state["y"]["w"][0]}), _flat(d0),
+                               rtol=1e-6)
+    # round 2: only client 2 participates with delta d2;
+    # Delta = mean(y) + (d2 - y[2]) = (d0+d1+0)/3 + d2
+    d2 = _params(3)
+    p_before = params1
+    params2, state, _ = algo.step(state, p_before, _stack([d2]),
+                                  jnp.asarray([2]), 1.0, 1)
+    want_delta = (_flat(d0) + _flat(d1)) / 3.0 + _flat(d2)
+    got_delta = _flat(p_before) - _flat(params2)
+    np.testing.assert_allclose(got_delta, want_delta, rtol=1e-5, atol=1e-6)
+
+
+def test_client_variants_assigned():
+    assert get_algorithm("fedprox").client_variant == "prox"
+    assert get_algorithm("fedcm").client_variant == "cm"
+    assert get_algorithm("fedga").client_variant == "ga"
+    assert get_algorithm("feddpc").client_variant == "plain"
+    # fedcm/fedga broadcast the previous global update to clients
+    algo = get_algorithm("fedcm")
+    st = algo.init(_params(), 4)
+    assert algo.client_extra(st) is not None
+    assert get_algorithm("feddpc").client_extra({"delta_prev": 0}) is None

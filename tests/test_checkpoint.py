@@ -1,0 +1,47 @@
+"""Checkpoint round-trip + rotation + FL server-state restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+def _state(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 3)),
+                       "layers": [jnp.ones((2,)), jnp.zeros((5,))]},
+            "delta_prev": {"w": jax.random.normal(k, (4, 3)) * 0.1,
+                           "layers": [jnp.ones((2,)), jnp.zeros((5,))]},
+            "round": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    s = _state(0)
+    ckpt.save(str(tmp_path), 7, s)
+    like = jax.tree.map(jnp.zeros_like, s)
+    r = ckpt.restore(str(tmp_path), like)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_allclose(a, b)
+
+
+def test_rotation_keeps_last_k(tmp_path):
+    for step in range(5):
+        ckpt.save(str(tmp_path), step, _state(step), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    import os
+    kept = sorted(os.listdir(tmp_path))
+    assert len([d for d in kept if d.startswith("step_")]) == 2
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 0, {"w": jnp.zeros((3,))})
+    import pytest
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"w": jnp.zeros((4,))})
+
+
+def test_restore_latest(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"w": jnp.ones((2,))})
+    ckpt.save(str(tmp_path), 9, {"w": jnp.full((2,), 9.0)})
+    out = ckpt.restore(str(tmp_path), {"w": jnp.zeros((2,))})
+    np.testing.assert_allclose(out["w"], 9.0)

@@ -1,0 +1,75 @@
+"""Data pipeline: Dirichlet partitioning properties + synthetic datasets."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dirichlet import dirichlet_partition, partition_stats
+from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.data.synthetic import make_image_dataset, make_lm_dataset
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 10_000), st.sampled_from([0.1, 0.5, 2.0]),
+       st.integers(3, 12))
+def test_partition_disjoint_and_covering(seed, alpha, k):
+    labels = np.random.RandomState(seed).randint(0, 5, size=300)
+    parts = dirichlet_partition(labels, k, alpha, seed=seed, min_size=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)       # disjoint + covering
+
+
+def test_alpha_controls_heterogeneity():
+    """Smaller alpha -> more skewed label marginals (higher TV distance)."""
+    labels = np.random.RandomState(0).randint(0, 10, size=5000)
+    tv = {}
+    for alpha in (0.1, 10.0):
+        parts = dirichlet_partition(labels, 20, alpha, seed=1)
+        tv[alpha] = partition_stats(labels, parts)["mean_tv_from_uniform"]
+    assert tv[0.1] > tv[10.0] + 0.1
+
+
+def test_image_dataset_learnable_structure():
+    x, y = make_image_dataset(num_classes=4, samples_per_class=50, seed=0)
+    assert x.shape == (200, 32, 32, 3) and y.shape == (200,)
+    # class templates are distinct: intra-class distance < inter-class
+    means = np.stack([x[y == c].mean(0) for c in range(4)])
+    intra = np.mean([np.sqrt(((x[y == c] - means[c]) ** 2
+                              ).sum(axis=(1, 2, 3))).mean()
+                     for c in range(4)])
+    inter = np.mean([np.linalg.norm(means[a] - means[b])
+                     for a in range(4) for b in range(4) if a != b])
+    assert inter > 1.0 and np.isfinite(intra)
+
+
+def test_lm_dataset_topics_skew_vocab():
+    toks, topics = make_lm_dataset(64, 32, 500, seed=0, num_topics=4)
+    assert toks.shape == (64, 32)
+    assert toks.max() < 500 and toks.min() >= 0
+    # different topics -> different token histograms
+    h = []
+    for t in range(2):
+        sel = toks[topics == t].reshape(-1)
+        h.append(np.bincount(sel, minlength=500) / max(len(sel), 1))
+    assert np.abs(h[0] - h[1]).sum() > 0.1
+
+
+def test_client_batches_wrap_small_clients():
+    data = build_federated_image_data(num_classes=4, num_clients=12,
+                                      alpha=0.1, samples_per_class=60,
+                                      test_per_class=5, seed=0)
+    smallest = int(np.argmin([len(i) for i in data.client_indices]))
+    batches = list(client_batches(data, smallest, batch_size=16, round_num=0))
+    assert len(batches) >= 1
+    assert batches[0]["images"].shape[0] == 16
+
+
+def test_batches_reshuffle_across_rounds():
+    data = build_federated_image_data(num_classes=4, num_clients=5,
+                                      alpha=1.0, samples_per_class=50,
+                                      test_per_class=5, seed=0)
+    b0 = next(iter(client_batches(data, 0, 8, round_num=0)))
+    b1 = next(iter(client_batches(data, 0, 8, round_num=1)))
+    assert not np.allclose(b0["images"], b1["images"])

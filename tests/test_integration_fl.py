@@ -1,0 +1,122 @@
+"""Integration: full federated rounds on synthetic heterogeneous data —
+FedDPC learns, beats round-1 loss, the trainer API works for every
+algorithm, and the distributed round step matches the simulation-mode
+server math."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import feddpc
+from repro.core.api import FLConfig, FederatedTrainer
+from repro.core.baselines import ALGORITHM_NAMES
+from repro.core.round import make_fl_round_step
+from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.models import transformer as tf
+from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
+                                 vision_loss_fn)
+
+
+@pytest.fixture(scope="module")
+def vision_task():
+    vc = VisionConfig(name="lenet5", family="lenet5", num_classes=4)
+    data = build_federated_image_data(
+        num_classes=4, num_clients=10, alpha=0.2, samples_per_class=40,
+        test_per_class=10, seed=0)
+    params = init_vision(vc, jax.random.PRNGKey(0))
+    loss_fn = functools.partial(vision_loss_fn, vc)
+
+    def batch_fn(c, t):
+        return list(client_batches(data, c, 32, t))
+
+    te_x = jnp.asarray(data.test_images)
+    te_y = jnp.asarray(data.test_labels)
+    eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
+    return params, loss_fn, batch_fn, eval_fn, data.num_clients
+
+
+def test_feddpc_learns(vision_task):
+    params, loss_fn, batch_fn, eval_fn, k = vision_task
+    cfg = FLConfig(algorithm="feddpc", rounds=10, clients_per_round=4,
+                   eta_l=0.02, eta_g=0.02, eval_every=9, seed=0)
+    tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, eval_fn)
+    hist = tr.run()
+    assert hist[-1].train_loss < hist[0].train_loss * 0.8
+    best, _ = tr.best_accuracy
+    assert best > 0.4     # 4 classes, random = 0.25
+
+
+@pytest.mark.parametrize("algo", ALGORITHM_NAMES)
+def test_trainer_api_all_algorithms(vision_task, algo):
+    params, loss_fn, batch_fn, eval_fn, k = vision_task
+    cfg = FLConfig(algorithm=algo, rounds=3, clients_per_round=3,
+                   eta_l=0.02, eta_g=0.02, eval_every=10, seed=1)
+    tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
+    hist = tr.run()
+    assert len(hist) == 3
+    assert np.isfinite(hist[-1].train_loss)
+
+
+def test_feddpc_orthogonality_diagnostic(vision_task):
+    params, loss_fn, batch_fn, eval_fn, k = vision_task
+    cfg = FLConfig(algorithm="feddpc", rounds=4, clients_per_round=3,
+                   eta_l=0.02, eta_g=0.02, seed=2, eval_every=100)
+    tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
+    hist = tr.run()
+    for rec in hist[1:]:
+        d = rec.diagnostics
+        denom = max(d["norm_global_update"], 1e-9)
+        # previous norm not recorded; dot scaled by current norm only —
+        # the invariant is that the dot is tiny relative to norms^2
+        assert abs(d["global_dot_prev"]) / (denom * denom + 1e-9) < 0.05
+
+
+def test_use_kernel_path_equivalence(vision_task):
+    """FedDPC with the Pallas epilogue == pure-jnp server math."""
+    params, loss_fn, batch_fn, eval_fn, k = vision_task
+    outs = {}
+    for use_kernel in (False, True):
+        cfg = FLConfig(algorithm="feddpc", rounds=2, clients_per_round=3,
+                       eta_l=0.02, eta_g=0.02, seed=3, eval_every=100,
+                       use_kernel=use_kernel)
+        tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
+        tr.run()
+        outs[use_kernel] = tr.params
+    for a, b in zip(jax.tree.leaves(outs[False]), jax.tree.leaves(outs[True])):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_distributed_round_matches_simulation():
+    """core/round.py (one jit'd FL round) == api.py simulation trainer for
+    the same clients/batches/hyper-params."""
+    cfg = get_config("starcoder2-3b", smoke=True)
+    loss_fn = lambda p, b: tf.loss_fn(cfg, p, b)
+    params = tf.init_lm(cfg, jax.random.PRNGKey(0), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    K, M, B, S = 3, 2, 2, 16
+    toks = jax.random.randint(key, (K, M, B, S + 1), 0, cfg.vocab_size)
+    batches = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+    eta_l, eta_g = 0.05, 0.05
+    round_step = make_fl_round_step(loss_fn, eta_l, eta_g, lam=1.0)
+    delta0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    p_dist, d_dist, _ = jax.jit(round_step)(params, delta0, batches)
+
+    # manual: per-client local SGD then feddpc server step
+    from repro.core.client import make_local_update
+    local = make_local_update(loss_fn, eta_l)
+    deltas = []
+    for kk in range(K):
+        bt = {"tokens": batches["tokens"][kk], "labels": batches["labels"][kk]}
+        d, _ = local(params, bt, jnp.ones((M,), bool), None)
+        deltas.append(d)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+    p_sim, _, _ = feddpc.server_step({"delta_prev": delta0}, params, stacked,
+                                     eta_g, 1.0)
+    for a, b in zip(jax.tree.leaves(p_dist), jax.tree.leaves(p_sim)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)

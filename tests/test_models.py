@@ -1,0 +1,179 @@
+"""Model-layer invariants: attention impl equivalence, cache-vs-full
+equivalence, MoE dispatch properties, SSM decode==prefill, MLA absorbed
+decode == materialized path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------- attention ----------------
+
+def test_blocked_equals_reference(rng):
+    ks = jax.random.split(rng, 3)
+    b, s, h, kv, d = 2, 320, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    ref = attn.sdpa(q, k, v, pos, pos, impl="reference")
+    blk = attn._sdpa_blocked(q, k, v, pos, pos, window=0, block=64)
+    np.testing.assert_allclose(ref, blk, rtol=2e-5, atol=2e-5)
+
+
+def test_cached_decode_equals_full_attention(rng):
+    """Prefill S tokens into a cache then decode token S; must equal the
+    last-position output of full attention over S+1 tokens."""
+    cfg = get_config("starcoder2-3b", smoke=True)
+    p = attn.init_gqa(rng, cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.fold_in(rng, 1),
+                          (b, s + 1, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s + 1, dtype=jnp.int32)[None],
+                           (b, s + 1))
+    full, _ = attn.gqa_forward(cfg, p, x, pos)
+    cache = attn.init_kv_cache(cfg, b, s + 4, jnp.float32)
+    _, cache = attn.gqa_forward(cfg, p, x[:, :s], pos[:, :s], cache=cache)
+    dec, _ = attn.gqa_forward(cfg, p, x[:, s:], pos[:, s:], cache=cache)
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_ring_buffer_wraparound(rng):
+    """Cache capacity < stream length: ring buffer keeps the latest window."""
+    cfg = get_config("starcoder2-3b", smoke=True)
+    p = attn.init_gqa(rng, cfg, jnp.float32)
+    b, cap, total, w = 1, 8, 14, 8
+    x = jax.random.normal(jax.random.fold_in(rng, 2),
+                          (b, total, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32)[None],
+                           (b, total))
+    cache = attn.init_kv_cache(cfg, b, cap, jnp.float32)
+    outs = []
+    for t in range(total):
+        o, cache = attn.gqa_forward(cfg, p, x[:, t:t + 1], pos[:, t:t + 1],
+                                    window=w, cache=cache)
+        outs.append(o)
+    # compare final step with windowed full attention
+    full, _ = attn.gqa_forward(cfg, p, x, pos, window=w)
+    np.testing.assert_allclose(outs[-1][:, 0], full[:, -1],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_decode_equals_materialized(rng):
+    cfg = get_config("deepseek-v2-236b", smoke=True)
+    p = attn.init_mla(rng, cfg, jnp.float32)
+    b, s = 2, 10
+    x = jax.random.normal(jax.random.fold_in(rng, 3),
+                          (b, s + 1, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s + 1, dtype=jnp.int32)[None],
+                           (b, s + 1))
+    full, _ = attn.mla_forward(cfg, p, x, pos)            # materialized path
+    cache = attn.init_mla_cache(cfg, b, s + 2, jnp.float32)
+    _, cache = attn.mla_forward(cfg, p, x[:, :s], pos[:, :s], cache=cache)
+    dec, _ = attn.mla_forward(cfg, p, x[:, s:], pos[:, s:], cache=cache)
+    np.testing.assert_allclose(dec[:, 0], full[:, -1], rtol=3e-4, atol=3e-4)
+
+
+# ---------------- MoE ----------------
+
+def test_moe_identity_when_single_expert(rng):
+    """1 expert, top-1, ample capacity: MoE == dense expert MLP on all
+    tokens (gate weight == 1)."""
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True).with_(
+        num_experts=1, top_k=1, num_shared_experts=0, capacity_factor=8.0)
+    p = moe_mod.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 8, cfg.d_model))
+    out, aux = moe_mod.moe_forward(cfg, p, x)
+    h = jnp.einsum("bsd,df->bsf", x, p["gate"][0])
+    h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, p["up"][0])
+    want = jnp.einsum("bsf,fd->bsd", h, p["down"][0])
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+    assert np.isclose(float(aux), cfg.router_aux_coef, rtol=1e-3)  # E=1: aux=1
+
+
+@given(st.integers(0, 1000))
+def test_moe_slot_tables_invariants(seed):
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True)
+    k = jax.random.PRNGKey(seed)
+    g, t = 1, 16
+    logits = jax.random.normal(k, (g, t, cfg.num_experts))
+    gates, idx, aux = moe_mod._route(cfg, logits)
+    cap = 4
+    slot_token, slot_gate = moe_mod._slot_tables(cfg, idx, gates, cap)
+    st_np = np.asarray(slot_token)            # (G, E*C)
+    assert st_np.shape == (g, cfg.num_experts * cap)
+    # every slot is a valid token id or the dummy T
+    assert ((st_np >= 0) & (st_np <= t)).all()
+    # no token appears twice within one expert's slots
+    for e in range(cfg.num_experts):
+        s = st_np[0, e * cap:(e + 1) * cap]
+        real = s[s < t]
+        assert len(np.unique(real)) == len(real)
+    # gates of dummy slots are zero
+    assert (np.asarray(slot_gate)[st_np == t] == 0).all()
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 0-ish (min floor), over-subscribed experts drop
+    overflow tokens: output for dropped tokens comes only from other
+    experts/shared — total output norm decreases vs ample capacity."""
+    cfg = get_config("kimi-k2-1t-a32b", smoke=True).with_(
+        num_shared_experts=0)
+    k = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(k, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(k, 1), (1, 64, cfg.d_model))
+    out_ample, _ = moe_mod.moe_forward(
+        cfg.with_(capacity_factor=64.0), p, x)
+    out_tight, _ = moe_mod.moe_forward(
+        cfg.with_(capacity_factor=0.01), p, x)
+    assert (float(jnp.linalg.norm(out_tight))
+            < float(jnp.linalg.norm(out_ample)))
+
+
+def test_moe_grouping_invariance(rng):
+    """Same routing results regardless of dispatch group count."""
+    cfg = get_config("deepseek-v2-236b", smoke=True).with_(
+        capacity_factor=8.0)
+    p = moe_mod.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 2), (4, 8, cfg.d_model))
+    o1, _ = moe_mod.moe_forward(cfg, p, x, groups=1)
+    o2, _ = moe_mod.moe_forward(cfg, p, x, groups=4)
+    np.testing.assert_allclose(o1, o2, rtol=2e-4, atol=2e-4)
+
+
+# ---------------- SSM ----------------
+
+def test_ssm_decode_matches_prefill(rng):
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    p = ssm_mod.init_mamba(rng, cfg, jnp.float32)
+    b, s = 2, 9
+    x = jax.random.normal(jax.random.fold_in(rng, 1),
+                          (b, s + 1, cfg.d_model), jnp.float32)
+    y_full, _ = ssm_mod.mamba_forward(cfg, p, x)
+    _, state = ssm_mod.mamba_forward(cfg, p, x[:, :s])
+    y_dec, _ = ssm_mod.mamba_forward(cfg, p, x[:, s:], state=state)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, -1],
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_ssm_state_continuation(rng):
+    """Splitting a sequence across two prefills == one prefill."""
+    cfg = get_config("falcon-mamba-7b", smoke=True)
+    p = ssm_mod.init_mamba(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 4),
+                          (1, 16, cfg.d_model), jnp.float32)
+    y_full, st_full = ssm_mod.mamba_forward(cfg, p, x)
+    _, st1 = ssm_mod.mamba_forward(cfg, p, x[:, :7])
+    y2, st2 = ssm_mod.mamba_forward(cfg, p, x[:, 7:], state=st1)
+    np.testing.assert_allclose(y2, y_full[:, 7:], rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(st2["h"], st_full["h"], rtol=3e-4, atol=3e-4)

@@ -1,0 +1,61 @@
+"""Local optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import (adamw, constant_schedule, cosine_schedule,
+                                    get_optimizer, momentum, sgd)
+
+
+def _quad(params):
+    return jnp.sum((params["w"] - 3.0) ** 2)
+
+
+def _run(opt, steps=200):
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    for i in range(steps):
+        g = jax.grad(_quad)(params)
+        upd, state = opt.update(g, state, params, jnp.asarray(i))
+        params = jax.tree.map(lambda p, u: p - u, params, upd)
+    return params
+
+
+def test_sgd_converges():
+    p = _run(sgd(0.1))
+    np.testing.assert_allclose(p["w"], 3.0, atol=1e-3)
+
+
+def test_momentum_converges():
+    p = _run(momentum(0.02, 0.9))
+    np.testing.assert_allclose(p["w"], 3.0, atol=1e-2)
+
+
+def test_adamw_converges():
+    p = _run(adamw(0.1), steps=400)
+    np.testing.assert_allclose(p["w"], 3.0, atol=1e-2)
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(0.05, weight_decay=0.5)
+    params = {"w": jnp.full(3, 10.0)}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(3)}
+    for i in range(50):
+        upd, state = opt.update(zero_g, state, params, jnp.asarray(i))
+        params = jax.tree.map(lambda p, u: p - u, params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 10.0
+
+
+def test_get_optimizer_registry():
+    for name in ("sgd", "momentum", "adamw"):
+        assert get_optimizer(name, 0.1) is not None
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) <= 1.0 + 1e-6
+    assert float(lr(5)) < float(lr(10))
+    assert float(lr(100)) < 0.01
+    assert float(constant_schedule(0.3)(50)) == np.float32(0.3)

@@ -1,0 +1,87 @@
+"""Unit + property tests for the FedDPC projection/scaling math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projection as proj
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def _vec_tree(seed, scale=1.0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"a": jax.random.normal(k1, (7, 5)) * scale,
+            "b": [jax.random.normal(k2, (11,)) * scale]}
+
+
+def _flat(t):
+    return jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(t)])
+
+
+def test_tree_vdot_matches_flat():
+    a, b = _vec_tree(0), _vec_tree(1)
+    assert np.isclose(float(proj.tree_vdot(a, b)),
+                      float(jnp.vdot(_flat(a), _flat(b))), rtol=1e-6)
+
+
+def test_projection_coefficient_formula():
+    a, b = _vec_tree(0), _vec_tree(1)
+    coef = proj.project_coefficient(a, b)
+    want = jnp.vdot(_flat(a), _flat(b)) / jnp.vdot(_flat(b), _flat(b))
+    assert np.isclose(float(coef), float(want), rtol=1e-6)
+
+
+def test_projection_onto_zero_is_zero():
+    a = _vec_tree(0)
+    z = proj.tree_zeros_like(a)
+    assert float(proj.project_coefficient(a, z)) == 0.0
+    scaled, diag = proj.project_and_scale(a, z, lam=1.0)
+    # residual == delta; scale == lam + 1 -> scaled == 2 * delta
+    np.testing.assert_allclose(_flat(scaled), 2.0 * _flat(a), rtol=1e-5)
+
+
+@given(st.integers(0, 2**16), st.integers(0, 2**16),
+       st.floats(0.0, 2.0))
+def test_residual_orthogonal_to_prev(s1, s2, lam):
+    d, p = _vec_tree(s1), _vec_tree(s2 + 100)
+    scaled, diag = proj.project_and_scale(d, p, lam=lam)
+    dot = float(proj.tree_vdot(scaled, p))
+    norm = float(proj.tree_norm(scaled)) * float(proj.tree_norm(p))
+    if norm > 1e-6:
+        assert abs(dot) / norm < 1e-3      # cos angle ~ 0
+
+
+@given(st.integers(0, 2**16), st.floats(0.0, 2.0))
+def test_scale_at_least_lam_plus_one(seed, lam):
+    # ||resid|| <= ||delta||  =>  scale = lam + ||d||/||r|| >= lam + 1
+    d, p = _vec_tree(seed), _vec_tree(seed + 7)
+    _, diag = proj.project_and_scale(d, p, lam=lam)
+    assert float(diag["scale"]) >= lam + 1.0 - 1e-4
+
+
+def test_pythagoras_residual_norm():
+    d, p = _vec_tree(3), _vec_tree(4)
+    scaled, diag = proj.project_and_scale(d, p, lam=0.0)
+    coef = diag["coef"]
+    resid = jax.tree.map(lambda a, b: a - coef * b, d, p)
+    assert np.isclose(float(diag["norm_resid"]),
+                      float(jnp.linalg.norm(_flat(resid))), rtol=1e-4)
+
+
+def test_scaled_residual_direction():
+    d, p = _vec_tree(5), _vec_tree(6)
+    scaled, diag = proj.project_and_scale(d, p, lam=1.0)
+    coef, scale = diag["coef"], diag["scale"]
+    want = scale * (_flat(d) - coef * _flat(p))
+    np.testing.assert_allclose(_flat(scaled), want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_path_matches_reference():
+    d, p = _vec_tree(8), _vec_tree(9)
+    ref, _ = proj.project_and_scale(d, p, lam=1.0, use_kernel=False)
+    ker, _ = proj.project_and_scale(d, p, lam=1.0, use_kernel=True)
+    np.testing.assert_allclose(_flat(ref), _flat(ker), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,158 @@
+"""Sharding rules: spec correctness on a debug mesh (divisibility guards,
+name-based rules, batch/state spec classes) and roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_debug_mesh
+from repro.configs.shapes import InputShape
+from repro.roofline.analysis import collective_bytes
+from repro.sharding.rules import (ShardingPolicy, batch_specs, param_specs,
+                                  state_specs)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_debug_mesh(1, 1)
+
+
+def _spec_of(specs, *path):
+    node = specs
+    for k in path:
+        node = node[k]
+    return node
+
+
+def test_param_rules_dense(mesh):
+    cfg = get_config("starcoder2-3b", smoke=True).with_(
+        d_model=64, num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128)
+    spec = steps_mod.params_spec(cfg)
+    pol = ShardingPolicy(batch_axes=("data",))
+    # pretend a 16-way model axis via a fake axis-size map by using the
+    # real mesh but checking the *rule* output on divisible dims
+    specs = param_specs(spec, mesh, pol)
+    # mesh is 1x1: axis size 1 divides everything -> full rule output
+    assert _spec_of(specs, "embed") == P("model", None)
+    lm = _spec_of(specs, "lm_head", "w")
+    assert lm == P(None, "model")
+    layer = specs["stack"][0]
+    # stacked (scan) leaves carry a leading group dim -> spec is padded
+    assert layer["mixer"]["wq"]["w"] == P(None, None, "model")
+    assert layer["mixer"]["wo"]["w"] == P(None, "model", None)
+    assert layer["norm1"]["scale"] == P()
+
+
+def test_param_rules_divisibility_guard():
+    """On a model axis that does NOT divide a dim, the dim replicates."""
+    import jax as _jax
+    if len(_jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = make_debug_mesh(1, 1)
+    pol = ShardingPolicy(batch_axes=("data",))
+    # axis size 1 divides everything; simulate with a direct call of the
+    # internal rule using a fake axis size
+    from repro.sharding.rules import _leaf_spec
+    s = _leaf_spec("stack/0/mixer/wq/w", (64, 48), pol,
+                   {"model": 5, "data": 1})
+    assert s == P(None, None)          # 48 % 5 != 0 -> replicate
+    s2 = _leaf_spec("stack/0/mixer/wq/w", (64, 50), pol,
+                    {"model": 5, "data": 1})
+    assert s2 == P(None, "model")
+
+
+def test_moe_expert_rules():
+    from repro.sharding.rules import _leaf_spec
+    pol = ShardingPolicy(batch_axes=("data",), expert_axis="data")
+    sizes = {"model": 4, "data": 2}
+    g = _leaf_spec("stack/0/mlp/gate", (8, 64, 128), pol, sizes)
+    assert g == P("data", None, "model")
+    d = _leaf_spec("stack/0/mlp/down", (8, 128, 64), pol, sizes)
+    assert d == P("data", "model", None)
+    r = _leaf_spec("stack/0/mlp/router/w", (64, 8), pol, sizes)
+    assert r == P(None, None)
+
+
+def test_batch_specs_divisibility(mesh):
+    pol = ShardingPolicy(batch_axes=("data",))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    specs = batch_specs(batch, mesh, pol)
+    assert specs["tokens"] == P("data", None)
+    odd = {"tokens": jax.ShapeDtypeStruct((1, 16), jnp.int32)}
+    # batch 1 is divisible by axis size 1 -> still sharded (1-way)
+    assert batch_specs(odd, mesh, pol)["tokens"] == P("data", None)
+
+
+def test_state_specs_classes(mesh):
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    shape = InputShape("t", 32, 2, "decode")
+    st = steps_mod.states_spec(cfg, shape)
+    specs = state_specs(st, mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    names = {"/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path): s for path, s in flat}
+    # jamba smoke attn_every=2 -> group has both ssm state and kv cache
+    kv_specs = [s for p, s in names.items() if p.endswith("k")]
+    assert kv_specs, "expected kv cache leaves"
+    ssm_h = [s for p, s in names.items() if p.endswith("h")]
+    assert ssm_h, "expected ssm state leaves"
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = f32[512]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[256]{0}, f32[256]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %a2a = bf16[8,64]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not_coll = f32[4]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 512 * 4
+    assert out["reduce-scatter"] == 2 * 256 * 4
+    assert out["all-to-all"] == 8 * 64 * 2
+    assert out["collective-permute"] == 100
+
+
+def test_input_specs_all_shapes():
+    """input_specs produces consistent ShapeDtypeStructs for every
+    (arch x shape) — the 40 dry-run combos' argument builders."""
+    from repro.configs.base import all_arch_ids
+    from repro.configs.shapes import SHAPES
+    for arch in all_arch_ids():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            specs = steps_mod.input_specs(cfg, shape)
+            leaves = jax.tree.leaves(specs)
+            assert leaves, (arch, sname)
+            if shape.kind == "train" and not cfg.is_encoder_decoder:
+                toks = (specs["batch"]["tokens"].shape
+                        if "batch" in specs else None)
+                total = toks[1] + (cfg.num_patches
+                                   if cfg.modality == "vision" else 0)
+                assert total == shape.seq_len
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)
+            # states spec builds without allocation
+            if shape.kind != "train":
+                st = steps_mod.states_spec(cfg, shape)
+                assert jax.tree.leaves(st)
+
+
+def test_long_context_window_policy():
+    """Dense archs get the sliding window for long_500k; SSM/hybrid don't."""
+    from repro.configs.shapes import get_shape
+    long = get_shape("long_500k")
+    assert steps_mod.effective_window(
+        get_config("command-r-35b"), long) == steps_mod.WINDOW
+    assert steps_mod.effective_window(
+        get_config("falcon-mamba-7b"), long) == 0
+    assert steps_mod.effective_window(
+        get_config("jamba-1.5-large-398b"), long) == 0
+    # and the dense ring cache is window-sized, not 500k
+    assert steps_mod.cache_capacity(
+        get_config("command-r-35b"), long) == steps_mod.WINDOW
