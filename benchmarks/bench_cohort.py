@@ -1,0 +1,125 @@
+"""Serial vs cohort-vectorized round latency — the perf receipt for the
+fused round (core/round.py ``make_cohort_round``).
+
+Runs the SAME FederatedTrainer twice on a small dense task — once with
+the historical serial path (one jit dispatch per client + host-side
+stack, cfg.vectorize=False) and once with the fused cohort round — and
+records per-round wall time after warm-up to BENCH_cohort.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_cohort            # K=10, CPU
+  PYTHONPATH=src python -m benchmarks.bench_cohort --clients 32 --rounds 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import FLConfig, FederatedTrainer
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cohort.json")
+
+
+def build_task(num_clients: int, batches_per_client: int, batch: int,
+               dim: int, hidden: int, classes: int, seed: int = 0):
+    """Small MLP classification — the regime the paper's simulations live
+    in, where per-client dispatch overhead rivals the math."""
+    r = np.random.RandomState(seed)
+    scale = 1.0 / np.sqrt(dim)
+    params = {
+        "w1": jnp.asarray(r.randn(dim, hidden) * scale, jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jnp.asarray(r.randn(hidden, classes) * scale, jnp.float32),
+        "b2": jnp.zeros((classes,), jnp.float32),
+    }
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, b["y"][:, None], axis=1))
+
+    data = []
+    for c in range(num_clients):
+        rc = np.random.RandomState(seed + 1 + c)
+        data.append([{"x": rc.randn(batch, dim).astype(np.float32),
+                      "y": rc.randint(0, classes, size=batch).astype(np.int32)}
+                     for _ in range(batches_per_client)])
+    batch_fn = lambda c, t: data[c]
+    return params, loss_fn, batch_fn
+
+
+def bench(vectorize: bool, *, params, loss_fn, batch_fn, k: int,
+          rounds: int, warmup: int, algorithm: str) -> Dict:
+    cfg = FLConfig(algorithm=algorithm, rounds=warmup + rounds,
+                   clients_per_round=k, eta_l=0.05, eta_g=0.1, seed=0,
+                   eval_every=10 ** 9, vectorize=vectorize)
+    tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
+    for t in range(warmup):                       # compile + cache warm
+        tr.run_round(t)
+    times = []
+    for t in range(warmup, warmup + rounds):
+        rec = tr.run_round(t)
+        times.append(rec.seconds)
+    times = np.asarray(times)
+    return {"mean_s": float(times.mean()), "p50_s": float(np.median(times)),
+            "p90_s": float(np.percentile(times, 90)),
+            "min_s": float(times.min()), "rounds": int(rounds)}
+
+
+def run(clients: int = 10, rounds: int = 40, warmup: int = 3,
+        batches_per_client: int = 4, batch: int = 16, dim: int = 32,
+        hidden: int = 32, classes: int = 10, algorithm: str = "feddpc",
+        out: str = DEFAULT_OUT) -> Dict:
+    params, loss_fn, batch_fn = build_task(
+        clients, batches_per_client, batch, dim, hidden, classes)
+    results = {}
+    for mode, vectorize in (("serial", False), ("vectorized", True)):
+        results[mode] = bench(vectorize, params=params, loss_fn=loss_fn,
+                              batch_fn=batch_fn, k=clients, rounds=rounds,
+                              warmup=warmup, algorithm=algorithm)
+        print(f"{mode:10s} mean {results[mode]['mean_s'] * 1e3:8.3f} ms/round"
+              f"  p50 {results[mode]['p50_s'] * 1e3:8.3f} ms")
+    speedup = results["serial"]["mean_s"] / results["vectorized"]["mean_s"]
+    payload = {
+        "bench": "cohort_round_latency",
+        "backend": jax.default_backend(),
+        "algorithm": algorithm,
+        "clients_per_round": clients,
+        "batches_per_client": batches_per_client,
+        "batch": batch, "dim": dim, "hidden": hidden,
+        "serial": results["serial"],
+        "vectorized": results["vectorized"],
+        "speedup": float(speedup),
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"speedup {speedup:.2f}x  ->  {out}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--batches-per-client", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--algorithm", default="feddpc")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    a = ap.parse_args(argv)
+    run(clients=a.clients, rounds=a.rounds, warmup=a.warmup,
+        batches_per_client=a.batches_per_client, batch=a.batch,
+        algorithm=a.algorithm, out=a.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -90,11 +90,15 @@ def build_task(spec: TaskSpec, alpha: float, seed: int = 0):
 def run_sweep(spec: TaskSpec, algorithms: Sequence[str],
               alphas: Sequence[float], seed: int = 0,
               lam: float = 1.0, overrides: Optional[dict] = None,
-              verbose: bool = True) -> Dict:
+              verbose: bool = True, vectorize: bool = True) -> Dict:
     """Same initial model + same client sampling across algorithms
-    (paper §5.2.4 fairness protocol). Returns nested results dict."""
+    (paper §5.2.4 fairness protocol). Returns nested results dict.
+    vectorize=False forces the serial per-client reference path (the
+    cohort-fused round is the default; see benchmarks/bench_cohort.py for
+    the latency comparison)."""
+    overrides = {"vectorize": vectorize, **(overrides or {})}
     out = {"spec": {k: v for k, v in spec.__dict__.items()}, "algorithms": {},
-           "lam": lam}
+           "lam": lam, "vectorize": overrides["vectorize"]}
     for alpha in alphas:
         params, loss_fn, batch_fn, eval_fn, _ = build_task(spec, alpha, seed)
         for algo in algorithms:

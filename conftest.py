@@ -1,0 +1,12 @@
+"""Repo-root conftest: make `pytest` work without PYTHONPATH=src.
+
+pytest.ini's ``pythonpath = src`` covers the normal invocation; this is
+the belt-and-braces path injection for runs that bypass ini discovery
+(e.g. `pytest /abs/path/to/repo/tests` from another rootdir).
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

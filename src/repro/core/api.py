@@ -1,8 +1,21 @@
 """FederatedTrainer — simulation-mode FL driver (reproduces the paper).
 
 Orchestrates: client sampling (uniform, partial participation) -> local
-training (one jit'd program shared by all clients) -> server aggregation
-(FedDPC or any baseline) -> periodic global-model evaluation.
+training -> server aggregation (FedDPC or any baseline) -> periodic
+global-model evaluation.
+
+The default round is **cohort-vectorized** (cfg.vectorize=True): all
+clients_per_round clients' padded minibatch stacks are stacked into one
+(K, M, ...) batch pytree and the whole round — local training vmapped
+over the client axis, fused with the server step — runs as ONE jit'd
+program per round (core/round.py ``make_cohort_round``), donating the
+params/server-state buffers. cfg.vectorize=False keeps the historical
+serial path (one jit dispatch per client + a host-side stack), retained
+as the reference for the equivalence tests.
+
+Shape bucketing: M is padded to the cohort max and ``_max_batches`` only
+grows (grow-once), so the jit cache holds one program per (K, M) bucket
+and later rounds with fewer batches re-use the compiled round.
 
 Works for any (loss_fn, params, data source): the paper's vision models
 and the framework's LM architectures both plug in through the same API.
@@ -18,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import client as client_mod
+from repro.core import round as round_mod
 from repro.core.baselines import ServerAlgo, get_algorithm
 
 PyTree = Any
@@ -40,6 +54,7 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 5
     use_kernel: bool = False         # route FedDPC epilogue through Pallas
+    vectorize: bool = True           # one fused program per round (default)
 
 
 @dataclass
@@ -61,13 +76,21 @@ class FederatedTrainer:
                  cfg: FLConfig,
                  eval_fn: Optional[Callable[[PyTree], float]] = None):
         self.cfg = cfg
-        self.params = params
+        # private copy: the fused round donates the params buffers, and the
+        # caller's tree must stay valid (sweeps reuse one init across runs)
+        self.params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
         self.num_clients = num_clients
         self.batch_fn = batch_fn
         self.eval_fn = eval_fn
         self.algo: ServerAlgo = get_algorithm(
             cfg.algorithm, lam=cfg.lam, use_kernel=cfg.use_kernel)
-        self.server_state = self.algo.init(params, num_clients)
+        self.server_state = self.algo.init(self.params, num_clients)
+        # fused path: local training + server step, one program per round
+        self._cohort_round = round_mod.make_cohort_round(
+            loss_fn, self.algo, cfg.eta_l, cfg.eta_g,
+            optimizer=cfg.local_optimizer, mu=cfg.mu,
+            cm_alpha=cfg.cm_alpha, ga_beta=cfg.ga_beta)
+        # serial reference path (cfg.vectorize=False): per-client dispatch
         self.local_update = client_mod.make_local_update(
             loss_fn, cfg.eta_l, variant=self.algo.client_variant,
             optimizer=cfg.local_optimizer, mu=cfg.mu,
@@ -85,20 +108,26 @@ class FederatedTrainer:
         return self.rng.choice(self.num_clients,
                                size=self.cfg.clients_per_round, replace=False)
 
-    def _round_batches(self, clients: Sequence[int], t: int):
+    def _cohort_lists(self, clients: Sequence[int], t: int):
         per_client = [self.batch_fn(int(c), t) for c in clients]
         mx = max(len(b) for b in per_client)
         if self._max_batches is None or mx > self._max_batches:
             self._max_batches = mx          # grow-once; keeps jit cache small
-        out = [client_mod.stack_batches(b, self._max_batches)
-               for b in per_client]
-        return out
+        return per_client
 
-    # ---- public ----
+    def _round_batches(self, clients: Sequence[int], t: int):
+        return [client_mod.stack_batches(b, self._max_batches)
+                for b in self._cohort_lists(clients, t)]
 
-    def run_round(self, t: int) -> RoundRecord:
-        tic = time.perf_counter()
-        clients = self._sample_clients()
+    def _run_round_vectorized(self, clients: np.ndarray, t: int):
+        batches, masks = client_mod.stack_cohort(
+            self._cohort_lists(clients, t), self._max_batches)
+        ids = jnp.asarray(clients, jnp.int32)
+        self.params, self.server_state, losses, diag = self._cohort_round(
+            self.server_state, self.params, batches, masks, ids)
+        return float(jnp.mean(losses)), diag
+
+    def _run_round_serial(self, clients: np.ndarray, t: int):
         extra = self.algo.client_extra(self.server_state)
         deltas, losses = [], []
         for (batches, mask) in self._round_batches(clients, t):
@@ -109,8 +138,18 @@ class FederatedTrainer:
         ids = jnp.asarray(clients, jnp.int32)
         self.params, self.server_state, diag = self._server_step(
             self.server_state, self.params, stacked, ids)
+        return float(np.mean(losses)), diag
+
+    # ---- public ----
+
+    def run_round(self, t: int) -> RoundRecord:
+        tic = time.perf_counter()
+        clients = self._sample_clients()
+        run = (self._run_round_vectorized if self.cfg.vectorize
+               else self._run_round_serial)
+        train_loss, diag = run(clients, t)
         rec = RoundRecord(
-            round=t, train_loss=float(np.mean(losses)),
+            round=t, train_loss=train_loss,
             seconds=time.perf_counter() - tic,
             diagnostics={k: float(v) for k, v in diag.items()})
         if self.eval_fn and (t % self.cfg.eval_every == 0

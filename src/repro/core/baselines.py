@@ -20,6 +20,14 @@ Unified interface so the trainer can swap algorithms:
   algo.client_extra(state)    pytree broadcast to clients (e.g. Delta_{t-1})
 
 deltas are client-stacked pytrees (leading axis k'), client_ids (k',) int32.
+
+Every ``step`` runs inside the fused cohort round (core/round.py): it is
+traced together with the vmapped local training into one jit'd program
+whose state/params buffers are DONATED. Steps must therefore be pure
+functions of traced inputs — client_ids arrives as a traced int32 array
+(FedVARP's per-client table update is a gather + scatter on it), and all
+branching on k'/shape must be static. ``client_extra`` is likewise traced
+from server_state inside the program.
 """
 from __future__ import annotations
 

@@ -7,6 +7,13 @@ batches), runs the local optimizer, and returns the pseudo-gradient
 
     Delta_j = (w_{t-1} - w_j) / eta_l                    (line 12)
 
+``make_cohort_local_update`` is the same program vmapped over a leading
+client axis: batches (K, M, ...), masks (K, M) -> deltas stacked (K, ...)
+plus per-client mean losses (K,). The global params and the server-side
+``extra`` state (Delta_prev for the cm/ga variants) are broadcast to every
+client; the mask axis is per-client, so ragged cohorts (clients with
+different minibatch counts) are handled by padding to the cohort max.
+
 Client variants (selected by the server algorithm):
   plain  SGD/momentum/AdamW on the local loss
   prox   FedProx: + mu/2 ||w - w_global||^2 added to every local gradient
@@ -26,18 +33,11 @@ from repro.optim.optimizers import Optimizer, get_optimizer
 PyTree = Any
 
 
-def make_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
-                      eta_l: float,
-                      variant: str = "plain",
-                      optimizer: str = "sgd",
-                      mu: float = 0.01,
-                      cm_alpha: float = 0.1,
-                      ga_beta: float = 0.1,
-                      jit: bool = True):
-    """Returns fn(global_params, batches, mask, extra) ->
-    (delta, mean_loss)  where batches is a pytree with leading axis M
-    (minibatch stack), mask (M,) bool, extra = Delta_prev or None.
-    """
+def _build_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                        eta_l: float, variant: str, optimizer: str,
+                        mu: float, cm_alpha: float, ga_beta: float):
+    """Raw (un-jitted) per-client local update; shared by the serial and
+    the cohort-vectorized paths."""
     opt: Optimizer = get_optimizer(optimizer, eta_l)
 
     def local_update(global_params, batches, mask, extra):
@@ -51,7 +51,10 @@ def make_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
 
         def step(carry, xs):
             params, opt_state, i, loss_sum, nvalid = carry
-            batch, valid = xs
+            if mask is None:            # fixed-shape stream: no select pass
+                batch, valid = xs, None
+            else:
+                batch, valid = xs
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
             if variant == "prox":
                 grads = jax.tree.map(
@@ -65,26 +68,69 @@ def make_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             updates, new_opt_state = opt.update(grads, opt_state, params, i)
             new_params = jax.tree.map(lambda p, u: (p - u).astype(p.dtype),
                                       params, updates)
-            # masked batches are no-ops
-            keep = lambda new, old: jax.tree.map(
-                lambda a, b: jnp.where(valid, a, b), new, old)
-            params = keep(new_params, params)
-            opt_state = keep(new_opt_state, opt_state)
-            loss_sum = loss_sum + jnp.where(valid, loss, 0.0)
-            nvalid = nvalid + valid.astype(jnp.float32)
+            if valid is None:
+                params, opt_state = new_params, new_opt_state
+                loss_sum = loss_sum + loss
+                nvalid = nvalid + 1.0
+            else:
+                # masked batches are no-ops
+                keep = lambda new, old: jax.tree.map(
+                    lambda a, b: jnp.where(valid, a, b), new, old)
+                params = keep(new_params, params)
+                opt_state = keep(new_opt_state, opt_state)
+                loss_sum = loss_sum + jnp.where(valid, loss, 0.0)
+                nvalid = nvalid + valid.astype(jnp.float32)
             return (params, opt_state, i + 1, loss_sum, nvalid), None
 
         m = jax.tree.leaves(batches)[0].shape[0]
         carry0 = (w0, opt.init(w0), jnp.zeros((), jnp.int32),
                   jnp.zeros(()), jnp.zeros(()))
         (w, _, _, loss_sum, nvalid), _ = jax.lax.scan(
-            step, carry0, (batches, mask), length=m)
+            step, carry0, batches if mask is None else (batches, mask),
+            length=m)
         delta = jax.tree.map(
             lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32))
             / eta_l, global_params, w)
         return delta, loss_sum / jnp.maximum(nvalid, 1.0)
 
-    return jax.jit(local_update) if jit else local_update
+    return local_update
+
+
+def make_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                      eta_l: float,
+                      variant: str = "plain",
+                      optimizer: str = "sgd",
+                      mu: float = 0.01,
+                      cm_alpha: float = 0.1,
+                      ga_beta: float = 0.1,
+                      jit: bool = True):
+    """Returns fn(global_params, batches, mask, extra) ->
+    (delta, mean_loss)  where batches is a pytree with leading axis M
+    (minibatch stack), mask (M,) bool, extra = Delta_prev or None.
+    mask=None means every batch is valid AND skips the masked-select pass
+    over the parameters entirely (the mesh path's fixed-shape streams).
+    """
+    fn = _build_local_update(loss_fn, eta_l, variant, optimizer,
+                             mu, cm_alpha, ga_beta)
+    return jax.jit(fn) if jit else fn
+
+
+def make_cohort_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                             eta_l: float,
+                             variant: str = "plain",
+                             optimizer: str = "sgd",
+                             mu: float = 0.01,
+                             cm_alpha: float = 0.1,
+                             ga_beta: float = 0.1,
+                             jit: bool = False):
+    """Cohort-vectorized local training: fn(global_params, batches, masks,
+    extra) -> (deltas, losses) with batches (K, M, ...), masks (K, M) or
+    None (all valid, select-free), deltas client-stacked (K, ...), losses
+    (K,). params/extra broadcast."""
+    fn = _build_local_update(loss_fn, eta_l, variant, optimizer,
+                             mu, cm_alpha, ga_beta)
+    cohort = jax.vmap(fn, in_axes=(None, 0, 0, None))
+    return jax.jit(cohort) if jit else cohort
 
 
 def stack_batches(batch_list, max_batches: int):
@@ -100,3 +146,14 @@ def stack_batches(batch_list, max_batches: int):
                 [x, np.repeat(x[-1:], pad, axis=0)], axis=0), stacked)
     mask = np.arange(max_batches) < n
     return stacked, mask
+
+
+def stack_cohort(per_client_batches, max_batches: int):
+    """Stack K clients' batch lists into one (K, M, ...) pytree + (K, M)
+    mask — the input of ``make_cohort_local_update``. M = max_batches is
+    the shape bucket; ragged clients pad with masked repeats."""
+    import numpy as np
+    pairs = [stack_batches(b, max_batches) for b in per_client_batches]
+    batches = jax.tree.map(lambda *xs: np.stack(xs), *[p[0] for p in pairs])
+    masks = np.stack([p[1] for p in pairs])
+    return batches, masks

@@ -1,24 +1,28 @@
-"""Distributed FL round step — FedDPC as a collective-native epilogue on
-the production mesh (DESIGN.md §2, cross-silo mode).
+"""Fused FL round step — local training vmapped over the client axis +
+server aggregation in ONE jit'd program (DESIGN.md §2).
 
-Mesh reading: the (pod x data) axes form the CLIENT axis — each (pod,
-data) slice is one participating silo training a model-parallel replica
-(weights replicated over client axes, Megatron-sharded over ``model``).
-Partial participation = which silos show up this round; a pod boundary is
-a datacenter boundary.
+``make_cohort_round`` is the single implementation behind both execution
+modes:
 
-The whole round is ONE jit'd program:
-  1. local training: vmap over the client axis of `local_steps` SGD steps
-     (lax.scan over the client's microbatches)
-  2. FedDPC epilogue: per-client scalars <Δ_j,Δ_prev>, ||Δ_j||², ||Δ_prev||²
-     reduce over every model-sharding axis automatically under GSPMD (4
-     scalar all-reduces), the projection/scaling is elementwise on the
-     sharded update shards, and the client-mean is one all-reduce over the
-     client axes — asymptotically the same collective volume as FedAvg
-     (paper's server loop is O(4k'd) *serial*; here it is fused into the
-     data-parallel reduction).
+  simulation (core/api.py)   the FederatedTrainer's default path: the
+      cohort's padded minibatch stacks arrive as one (K, M, ...) batch
+      pytree with a (K, M) validity mask, and the whole round — K local
+      trainings + the server rule — is one dispatch, donating the
+      params/server-state buffers.
+  cross-silo mesh (``make_fl_round_step``)   the (pod x data) axes form
+      the CLIENT axis — each (pod, data) slice is one participating silo
+      training a model-parallel replica (weights replicated over client
+      axes, Megatron-sharded over ``model``). Partial participation =
+      which silos show up this round; a pod boundary is a datacenter
+      boundary.
 
-Under the single-pod mesh this trains 16 clients/round; multi-pod, 32.
+FedDPC's epilogue stays collective-native under GSPMD: per-client scalars
+<Δ_j,Δ_prev>, ||Δ_j||², ||Δ_prev||² reduce over every model-sharding axis
+automatically (4 scalar all-reduces), the projection/scaling is
+elementwise on the sharded update shards, and the client-mean is one
+all-reduce over the client axes — asymptotically the same collective
+volume as FedAvg (the paper's server loop is O(4k'd) *serial*; here it is
+fused into the data-parallel reduction).
 """
 from __future__ import annotations
 
@@ -27,52 +31,86 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import feddpc as feddpc_mod
+from repro.core import client as client_mod
+from repro.core.baselines import ServerAlgo, get_algorithm
 
 PyTree = Any
+
+
+def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                      algo: ServerAlgo, eta_l: float, eta_g: float, *,
+                      optimizer: str = "sgd", mu: float = 0.01,
+                      cm_alpha: float = 0.1, ga_beta: float = 0.1,
+                      jit: bool = True, donate: bool = True):
+    """Returns cohort_round(server_state, params, batches, masks,
+    client_ids) -> (new_params, new_server_state, losses, diag).
+
+    batches: pytree with leading axes (K, M, ...) — K participating
+    clients, M padded minibatches each; masks (K, M) bool marks the valid
+    ones (None = all valid, skipping the masked-select pass entirely).
+    client_ids (K,) int32 feeds stateful server rules (FedVARP's
+    per-client table). The server-side ``extra`` (Delta_prev for the
+    cm/ga client variants) is derived from server_state INSIDE the
+    program, so the round is one closed jit'd function of
+    (state, params, data).
+
+    With jit=True the state/params buffers are donated: the round updates
+    them in place, which keeps FedVARP's O(num_clients * d) table from
+    being double-buffered every round.
+    """
+    local = client_mod.make_cohort_local_update(
+        loss_fn, eta_l, variant=algo.client_variant, optimizer=optimizer,
+        mu=mu, cm_alpha=cm_alpha, ga_beta=ga_beta)
+
+    def cohort_round(server_state, params, batches, masks, client_ids):
+        extra = algo.client_extra(server_state)
+        deltas, losses = local(params, batches, masks, extra)
+        new_params, new_state, diag = algo.step(
+            server_state, params, deltas, client_ids, eta_g, 0)
+        return new_params, new_state, losses, diag
+
+    if not jit:
+        return cohort_round
+    return jax.jit(cohort_round, donate_argnums=(0, 1) if donate else ())
 
 
 def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                        eta_l: float, eta_g: float, lam: float = 1.0,
                        algorithm: str = "feddpc"):
-    """Returns round_step(params, delta_prev, batches) ->
+    """Mesh-path wrapper: round_step(params, delta_prev, batches) ->
     (new_params, new_delta_prev, metrics).
 
     batches: pytree whose leaves have leading axes (K, M, ...) — K
     participating clients (sharded over the mesh client axes), M local
-    steps each. loss_fn(params, batch) -> scalar.
+    steps each, all valid (no mask: the mesh path feeds fixed-shape
+    silo streams). loss_fn(params, batch) -> scalar. Supports any
+    algorithm whose server state is exactly {"delta_prev"} (feddpc,
+    fedavg, fedexp, ...); per-client-stateful rules (fedvarp) need the
+    full ``make_cohort_round`` interface.
     """
-
-    def local_update(params, batch_seq):
-        def step(w, b):
-            loss, g = jax.value_and_grad(loss_fn)(w, b)
-            w = jax.tree.map(
-                lambda p, gi: (p - eta_l * gi.astype(p.dtype)).astype(p.dtype),
-                w, g)
-            return w, loss
-
-        w_fin, losses = jax.lax.scan(step, params, batch_seq)
-        delta = jax.tree.map(
-            lambda a, b_: (a.astype(jnp.float32) - b_.astype(jnp.float32))
-            / eta_l, params, w_fin)
-        return delta, losses.mean()
+    algo = get_algorithm(algorithm, lam=lam)
+    probe = algo.init({"w": jnp.zeros(())}, 1)
+    if set(probe) != {"delta_prev"}:
+        raise ValueError(
+            f"make_fl_round_step supports algorithms whose server state is "
+            f"exactly {{'delta_prev'}}; {algorithm!r} keeps {sorted(probe)} "
+            f"— use make_cohort_round for stateful server rules")
+    cohort = make_cohort_round(loss_fn, algo, eta_l, eta_g, jit=False)
 
     def round_step(params, delta_prev, batches):
-        deltas, losses = jax.vmap(
-            lambda bs: local_update(params, bs))(batches)
-        if algorithm == "feddpc":
-            new_params, state, diag = feddpc_mod.server_step(
-                {"delta_prev": delta_prev}, params, deltas, eta_g, lam)
-        else:   # fedavg baseline (for collective-volume comparison)
-            delta_t = jax.tree.map(
-                lambda x: jnp.mean(x.astype(jnp.float32), axis=0), deltas)
-            new_params = jax.tree.map(
-                lambda w, d: (w.astype(jnp.float32) - eta_g * d
-                              ).astype(w.dtype), params, delta_t)
-            state = {"delta_prev": delta_t}
+        k = jax.tree.leaves(batches)[0].shape[0]
+        ids = jnp.arange(k, dtype=jnp.int32)
+        # masks=None: fixed-shape silo streams are all-valid, and the
+        # select-free scan avoids an extra full-parameter pass per step
+        new_params, new_state, losses, diag = cohort(
+            {"delta_prev": delta_prev}, params, batches, None, ids)
+        # fedavg is the collective-volume comparison baseline: drop its
+        # diagnostics so the unused norm reduction is DCE'd and the
+        # compiled round carries no extra all-reduce vs plain FedAvg
+        if algorithm == "fedavg":
             diag = {}
         metrics = {"train_loss": losses.mean(), **diag}
-        return new_params, state["delta_prev"], metrics
+        return new_params, new_state["delta_prev"], metrics
 
     return round_step
 

@@ -23,20 +23,23 @@ DCN_BW = 6.25e9                   # B/s per host across pods (50 Gb/s)
 HBM_BYTES = 16e9                  # v5e HBM capacity
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh_kwargs(n):
+    # AxisType landed after jax 0.4.x; Auto is the default there anyway,
+    # so on older jax we simply omit the kwarg.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return {} if axis_type is None else {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **_mesh_kwargs(2))
 
 
 def mesh_info(mesh) -> dict:

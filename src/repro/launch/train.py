@@ -103,6 +103,9 @@ def main(argv=None):
     ap.add_argument("--num-classes", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--serial", action="store_true",
+                    help="per-client dispatch instead of the fused "
+                         "cohort-vectorized round (debug/reference path)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
@@ -117,7 +120,8 @@ def main(argv=None):
         clients_per_round=max(1, int(round(k * args.participation))),
         eta_l=args.eta_l, eta_g=args.eta_g, lam=args.lam,
         batch_size=args.batch_size, local_epochs=args.local_epochs,
-        seed=args.seed, eval_every=args.eval_every)
+        seed=args.seed, eval_every=args.eval_every,
+        vectorize=not args.serial)
     trainer = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, eval_fn)
     hist = trainer.run(verbose=True)
 

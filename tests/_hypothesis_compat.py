@@ -1,0 +1,97 @@
+"""Optional-hypothesis shim.
+
+Property tests in this repo use ``hypothesis`` when it is installed (see
+requirements-dev.txt) and fall back to a tiny deterministic sampler when
+it is not, so ``pytest`` collection never dies on the import. The
+fallback mimics just the API surface these tests use:
+
+  given(*strategies)             runs the test body over max_examples
+                                 deterministic draws (seeded by the test
+                                 name), always including the boundary
+                                 draw (every strategy's minimum / first
+                                 element) as example #0
+  settings.register_profile / load_profile    max_examples only
+  st.integers / st.floats / st.sampled_from
+
+Import it as ``from _hypothesis_compat import given, settings, st``.
+"""
+from __future__ import annotations
+
+try:                                    # real hypothesis when available
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # deterministic fallback
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class settings:                                          # noqa: N801
+        _profiles = {"default": {"max_examples": 10}}
+        _active = "default"
+
+        def __init__(self, **kw):
+            pass
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            cls._active = name
+
+        @classmethod
+        def _max_examples(cls):
+            return int(cls._profiles.get(cls._active, {})
+                       .get("max_examples", 10))
+
+    class _Strategy:
+        def __init__(self, boundary, sampler):
+            self.boundary = boundary          # shrink target / edge case
+            self.sampler = sampler            # rng -> value
+
+        def draw(self, rng, i):
+            return self.boundary if i == 0 else self.sampler(rng)
+
+    class _Namespace:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                int(min_value),
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                float(min_value),
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(seq[0], lambda rng: seq[rng.randint(len(seq))])
+
+    st = _Namespace()
+
+    def given(*strategies):
+        def deco(f):
+            def runner():
+                seed = zlib.crc32(f.__name__.encode()) & 0x7FFFFFFF
+                rng = np.random.RandomState(seed)
+                for i in range(settings._max_examples()):
+                    args = [s.draw(rng, i) for s in strategies]
+                    try:
+                        f(*args)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsified on example {args!r}: {e}") from e
+            # plain attribute copy — functools.wraps would expose f's
+            # signature through __wrapped__ and make pytest treat the
+            # strategy args as fixtures
+            runner.__name__ = f.__name__
+            runner.__doc__ = f.__doc__
+            runner.__module__ = f.__module__
+            return runner
+        return deco

@@ -1,7 +1,7 @@
 """Data pipeline: Dirichlet partitioning properties + synthetic datasets."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.dirichlet import dirichlet_partition, partition_stats
 from repro.data.pipeline import build_federated_image_data, client_batches

@@ -19,6 +19,10 @@ from repro.models import transformer as tf
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 
+# multi-round runs on real models; deselect with -m "not slow" for the
+# quick tier-1 pass (the fast cohort equivalence suite is test_cohort.py)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def vision_task():

@@ -31,6 +31,7 @@ def test_serve_encdec_smoke():
     assert tokens.shape == (2, 4)
 
 
+@pytest.mark.slow
 def test_train_cli_smoke(tmp_path):
     from repro.launch.train import main
     rc = main(["--model", "lenet5", "--rounds", "2", "--clients", "6",
@@ -63,6 +64,7 @@ def test_microbatched_train_step_equivalence(rng):
         np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_fl_round_step_learns(rng):
     from repro.core.round import make_fl_round_step
     from repro.models import transformer as tf
