@@ -1,36 +1,80 @@
-"""Serial vs cohort-vectorized round latency — the perf receipt for the
-fused round (core/round.py ``make_cohort_round``).
+"""Cohort round latency sweep — the perf receipt for the fused round and
+its scaling levers (core/round.py, core/api.py, DESIGN.md §2):
 
-Runs the SAME FederatedTrainer twice on a small dense task — once with
-the historical serial path (one jit dispatch per client + host-side
-stack, cfg.vectorize=False) and once with the fused cohort round — and
-records per-round wall time after warm-up to BENCH_cohort.json.
+  {serial, vectorized, sharded} x {prefetch on/off} x {kernel on/off}
 
-  PYTHONPATH=src python -m benchmarks.bench_cohort            # K=10, CPU
-  PYTHONPATH=src python -m benchmarks.bench_cohort --clients 32 --rounds 50
+serial        historical per-client dispatch (cfg.vectorize=False)
+vectorized    one fused jit program per round on a single device
+sharded       client axis NamedSharding over the local devices
+              (cfg.shard_clients=True; force 8 host devices on CPU)
+prefetch      double-buffered host ingest (cfg.prefetch)
+kernel        FedDPC epilogue through the batched Pallas kernel
+              (cfg.use_kernel; interpret mode on CPU)
+
+Per-mode stats include ``ingest_mean_s`` — the host time run_round spends
+blocked on cohort stacking — so the prefetch win is measured directly.
+
+  PYTHONPATH=src python -m benchmarks.bench_cohort --devices 8   # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_cohort --rounds 3 --devices 8
+
+``--devices N`` must be handled BEFORE jax initializes (the device count
+locks at first init), hence the argv scan at the top of this module.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
+import sys
 from typing import Dict
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.api import FLConfig, FederatedTrainer
+def _maybe_force_devices(argv):
+    n = None
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif a.startswith("--devices="):
+            n = a.split("=", 1)[1]
+    if n and int(n) > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={int(n)}").strip()
+    return int(n) if n else None
+
+
+_maybe_force_devices(sys.argv)
+
+import jax                                              # noqa: E402
+import jax.numpy as jnp                                 # noqa: E402
+import numpy as np                                      # noqa: E402
+
+from repro.core.api import FLConfig, FederatedTrainer   # noqa: E402
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_cohort.json")
+    os.path.abspath(__file__))), "BENCH_cohort_sharded.json")
+
+# mode name -> FLConfig overrides; the sweep skips nothing silently — a
+# combo that fails records its error string in the payload.
+MODES = [
+    ("serial", dict(vectorize=False, prefetch=False)),
+    ("vectorized", dict(prefetch=False)),
+    ("vectorized+prefetch", dict(prefetch=True)),
+    ("vectorized+kernel", dict(prefetch=False, use_kernel=True)),
+    ("vectorized+prefetch+kernel", dict(prefetch=True, use_kernel=True)),
+    ("sharded", dict(shard_clients=True, prefetch=False)),
+    ("sharded+prefetch", dict(shard_clients=True, prefetch=True)),
+    ("sharded+kernel", dict(shard_clients=True, prefetch=False,
+                            use_kernel=True)),
+    ("sharded+prefetch+kernel", dict(shard_clients=True, prefetch=True,
+                                     use_kernel=True)),
+]
 
 
 def build_task(num_clients: int, batches_per_client: int, batch: int,
                dim: int, hidden: int, classes: int, seed: int = 0):
-    """Small MLP classification — the regime the paper's simulations live
-    in, where per-client dispatch overhead rivals the math."""
+    """MLP classification sized by --dim/--hidden; the sharded receipt
+    uses a >=1M-param model where the round is compute-bound."""
     r = np.random.RandomState(seed)
     scale = 1.0 / np.sqrt(dim)
     params = {
@@ -56,68 +100,104 @@ def build_task(num_clients: int, batches_per_client: int, batch: int,
     return params, loss_fn, batch_fn
 
 
-def bench(vectorize: bool, *, params, loss_fn, batch_fn, k: int,
+def bench(overrides: dict, *, params, loss_fn, batch_fn, k: int,
           rounds: int, warmup: int, algorithm: str) -> Dict:
     cfg = FLConfig(algorithm=algorithm, rounds=warmup + rounds,
                    clients_per_round=k, eta_l=0.05, eta_g=0.1, seed=0,
-                   eval_every=10 ** 9, vectorize=vectorize)
+                   eval_every=10 ** 9, **overrides)
     tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
-    for t in range(warmup):                       # compile + cache warm
-        tr.run_round(t)
-    times = []
-    for t in range(warmup, warmup + rounds):
-        rec = tr.run_round(t)
-        times.append(rec.seconds)
-    times = np.asarray(times)
+    try:
+        for t in range(warmup):                   # compile + cache warm
+            tr.run_round(t)
+        recs = [tr.run_round(t) for t in range(warmup, warmup + rounds)]
+    finally:
+        tr.close()
+    times = np.asarray([r.seconds for r in recs])
+    ingest = np.asarray([r.ingest_seconds for r in recs])
     return {"mean_s": float(times.mean()), "p50_s": float(np.median(times)),
             "p90_s": float(np.percentile(times, 90)),
-            "min_s": float(times.min()), "rounds": int(rounds)}
+            "min_s": float(times.min()),
+            "ingest_mean_s": float(ingest.mean()),
+            "rounds": int(rounds)}
 
 
-def run(clients: int = 10, rounds: int = 40, warmup: int = 3,
-        batches_per_client: int = 4, batch: int = 16, dim: int = 32,
-        hidden: int = 32, classes: int = 10, algorithm: str = "feddpc",
+def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
+        batches_per_client: int = 4, batch: int = 8, dim: int = 512,
+        hidden: int = 2048, classes: int = 10, algorithm: str = "feddpc",
         out: str = DEFAULT_OUT) -> Dict:
     params, loss_fn, batch_fn = build_task(
         clients, batches_per_client, batch, dim, hidden, classes)
+    n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
     results = {}
-    for mode, vectorize in (("serial", False), ("vectorized", True)):
-        results[mode] = bench(vectorize, params=params, loss_fn=loss_fn,
-                              batch_fn=batch_fn, k=clients, rounds=rounds,
-                              warmup=warmup, algorithm=algorithm)
-        print(f"{mode:10s} mean {results[mode]['mean_s'] * 1e3:8.3f} ms/round"
-              f"  p50 {results[mode]['p50_s'] * 1e3:8.3f} ms")
-    speedup = results["serial"]["mean_s"] / results["vectorized"]["mean_s"]
+    for mode, overrides in MODES:
+        try:
+            results[mode] = bench(
+                overrides, params=params, loss_fn=loss_fn, batch_fn=batch_fn,
+                k=clients, rounds=rounds, warmup=warmup, algorithm=algorithm)
+            print(f"{mode:28s} mean {results[mode]['mean_s']*1e3:9.3f} ms"
+                  f"  ingest {results[mode]['ingest_mean_s']*1e3:8.3f} ms")
+        except Exception as e:                    # record, never skip silently
+            results[mode] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"{mode:28s} FAILED: {results[mode]['error']}")
+
+    def mean(m):
+        return results.get(m, {}).get("mean_s")
+
+    def ing(m):
+        return results.get(m, {}).get("ingest_mean_s")
+
     payload = {
-        "bench": "cohort_round_latency",
+        "bench": "cohort_round_sharded",
         "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
         "algorithm": algorithm,
         "clients_per_round": clients,
         "batches_per_client": batches_per_client,
         "batch": batch, "dim": dim, "hidden": hidden,
-        "serial": results["serial"],
-        "vectorized": results["vectorized"],
-        "speedup": float(speedup),
+        "model_params": n_params,
+        "kernel_note": ("use_kernel modes run the Pallas epilogue in "
+                        "INTERPRET mode on CPU — a correctness artifact, "
+                        "not a perf number; the fused-pass win is a TPU "
+                        "property (see kernels/feddpc_project/kernel.py)"),
+        "modes": results,
     }
+    if mean("serial") and mean("vectorized"):
+        payload["speedup_vectorized_vs_serial"] = \
+            mean("serial") / mean("vectorized")
+    if mean("vectorized") and mean("sharded"):
+        payload["speedup_sharded_vs_vectorized"] = \
+            mean("vectorized") / mean("sharded")
+    if ing("vectorized") and ing("vectorized+prefetch") is not None:
+        payload["ingest_reduction_prefetch"] = \
+            1.0 - ing("vectorized+prefetch") / ing("vectorized")
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
-    print(f"speedup {speedup:.2f}x  ->  {out}")
+    for key in ("speedup_vectorized_vs_serial", "speedup_sharded_vs_vectorized",
+                "ingest_reduction_prefetch"):
+        if key in payload:
+            print(f"{key}: {payload[key]:.3f}")
+    print(f"-> {out}")
     return payload
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=10)
-    ap.add_argument("--rounds", type=int, default=40)
-    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--batches-per-client", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--hidden", type=int, default=2048)
     ap.add_argument("--algorithm", default="feddpc")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (must be set before jax "
+                         "initializes; handled at module import)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     a = ap.parse_args(argv)
     run(clients=a.clients, rounds=a.rounds, warmup=a.warmup,
         batches_per_client=a.batches_per_client, batch=a.batch,
-        algorithm=a.algorithm, out=a.out)
+        dim=a.dim, hidden=a.hidden, algorithm=a.algorithm, out=a.out)
     return 0
 
 

@@ -78,7 +78,10 @@ def main():
 
     flcfg = FLConfig(algorithm="feddpc", rounds=rounds,
                      clients_per_round=part, eta_l=0.05, eta_g=0.05,
-                     lam=1.0, eval_every=10)
+                     lam=1.0, eval_every=10,
+                     # this example prints the holdout NLL inline with its
+                     # round, so keep eval on the blocking path
+                     async_eval=False)
     tr = FederatedTrainer(loss_fn, params, clients, batch_fn, flcfg, eval_fn)
     t0 = time.time()
     for t in range(rounds):

@@ -17,6 +17,19 @@ Shape bucketing: M is padded to the cohort max and ``_max_batches`` only
 grows (grow-once), so the jit cache holds one program per (K, M) bucket
 and later rounds with fewer batches re-use the compiled round.
 
+Scaling levers (DESIGN.md §2), all on by construction or by one flag:
+  cfg.shard_clients  client-axis NamedSharding over the local devices —
+      the (K, M, ...) cohort stack runs data-parallel across the mesh,
+      params/server state replicated (launch/mesh.make_cohort_mesh +
+      sharding/rules.cohort_round_shardings).
+  cfg.prefetch       double-buffered host ingest: a daemon thread stages
+      round t+1's cohort (sampling + batch_fn + stacking into
+      preallocated buffers) while round t runs on device, so run_round
+      blocks only on device completion (core/client.CohortPrefetcher).
+  cfg.async_eval     eval_fn runs on a params snapshot in a worker
+      thread, overlapped with the next round; the accuracy folds into
+      its RoundRecord at the next eval boundary / finalize() / run() end.
+
 Works for any (loss_fn, params, data source): the paper's vision models
 and the framework's LM architectures both plug in through the same API.
 """
@@ -55,6 +68,13 @@ class FLConfig:
     eval_every: int = 5
     use_kernel: bool = False         # route FedDPC epilogue through Pallas
     vectorize: bool = True           # one fused program per round (default)
+    shard_clients: bool = False      # client-axis NamedSharding over devices
+    prefetch: bool = True            # double-buffered host ingest (vectorized)
+    # overlap eval_fn with the next round: accuracy folds into its
+    # RoundRecord when ready (at latest at the next eval boundary /
+    # finalize()/run() end) — read it from history, not from the record
+    # run_round just returned; set False for strictly inline eval
+    async_eval: bool = True
 
 
 @dataclass
@@ -63,6 +83,9 @@ class RoundRecord:
     train_loss: float
     test_accuracy: Optional[float] = None
     seconds: float = 0.0
+    # host time this round spent blocked on cohort ingest (sampling +
+    # batch_fn + stacking); with prefetch on it is just the staging wait
+    ingest_seconds: float = 0.0
     diagnostics: Dict[str, float] = field(default_factory=dict)
 
 
@@ -85,11 +108,18 @@ class FederatedTrainer:
         self.algo: ServerAlgo = get_algorithm(
             cfg.algorithm, lam=cfg.lam, use_kernel=cfg.use_kernel)
         self.server_state = self.algo.init(self.params, num_clients)
+        self.mesh = self._build_mesh() if cfg.shard_clients else None
         # fused path: local training + server step, one program per round
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, cfg.eta_l, cfg.eta_g,
             optimizer=cfg.local_optimizer, mu=cfg.mu,
-            cm_alpha=cfg.cm_alpha, ga_beta=cfg.ga_beta)
+            cm_alpha=cfg.cm_alpha, ga_beta=cfg.ga_beta, mesh=self.mesh)
+        if self.mesh is not None:
+            # pre-place replicated so the first round's donation matches
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(self.mesh, P())
+            self.params = jax.device_put(self.params, rep)
+            self.server_state = jax.device_put(self.server_state, rep)
         # serial reference path (cfg.vectorize=False): per-client dispatch
         self.local_update = client_mod.make_local_update(
             loss_fn, cfg.eta_l, variant=self.algo.client_variant,
@@ -100,13 +130,33 @@ class FederatedTrainer:
                 st, p, d, ids, cfg.eta_g, 0))
         self.rng = np.random.RandomState(cfg.seed)
         self.history: List[RoundRecord] = []
+        self.schedule: List[np.ndarray] = []     # sampled cohort per round
         self._max_batches: Optional[int] = None
+        self._prefetcher = None                  # built on first round
+        self._pending_eval = None                # (RoundRecord, Future)
+        self._async_eval = eval_fn is not None and cfg.async_eval
 
     # ---- internals ----
 
+    def _build_mesh(self):
+        from repro.launch import mesh as mesh_mod
+        mesh = mesh_mod.make_cohort_mesh()
+        from repro.sharding.rules import clients_divisible
+        if not clients_divisible(mesh, self.cfg.clients_per_round):
+            import warnings
+            warnings.warn(
+                f"clients_per_round={self.cfg.clients_per_round} is not a "
+                f"multiple of the {int(mesh.devices.size)}-device client "
+                "axis; falling back to the single-device cohort round")
+            return None
+        return mesh
+
     def _sample_clients(self) -> np.ndarray:
-        return self.rng.choice(self.num_clients,
-                               size=self.cfg.clients_per_round, replace=False)
+        clients = self.rng.choice(self.num_clients,
+                                  size=self.cfg.clients_per_round,
+                                  replace=False)
+        self.schedule.append(clients)
+        return clients
 
     def _cohort_lists(self, clients: Sequence[int], t: int):
         per_client = [self.batch_fn(int(c), t) for c in clients]
@@ -119,18 +169,51 @@ class FederatedTrainer:
         return [client_mod.stack_batches(b, self._max_batches)
                 for b in self._cohort_lists(clients, t)]
 
-    def _run_round_vectorized(self, clients: np.ndarray, t: int):
-        batches, masks = client_mod.stack_cohort(
-            self._cohort_lists(clients, t), self._max_batches)
-        ids = jnp.asarray(clients, jnp.int32)
-        self.params, self.server_state, losses, diag = self._cohort_round(
-            self.server_state, self.params, batches, masks, ids)
-        return float(jnp.mean(losses)), diag
+    def _produce_cohort(self, t: int, slot: dict):
+        """Prefetch-thread body: sample + fetch + stack round t's cohort
+        into the slot's preallocated buffers (round order preserves the
+        RNG-driven schedule exactly)."""
+        clients = self._sample_clients()
+        lists = self._cohort_lists(clients, t)
+        batches, masks = client_mod.stack_cohort_into(
+            lists, self._max_batches, slot)
+        return clients, batches, masks
 
-    def _run_round_serial(self, clients: np.ndarray, t: int):
+    def _run_round_vectorized(self, t: int):
+        tic = time.perf_counter()
+        if self.cfg.prefetch:
+            if self._prefetcher is None:
+                self._prefetcher = client_mod.CohortPrefetcher(
+                    self._produce_cohort, t, self.cfg.rounds)
+            (clients, batches, masks), slot = self._prefetcher.get(t)
+        else:
+            slot = None
+            clients = self._sample_clients()
+            batches, masks = client_mod.stack_cohort(
+                self._cohort_lists(clients, t), self._max_batches)
+        ingest = time.perf_counter() - tic
+        try:
+            ids = jnp.asarray(clients, jnp.int32)
+            self.params, self.server_state, losses, diag = self._cohort_round(
+                self.server_state, self.params, batches, masks, ids)
+            # syncs on the round's result: after this the device is done
+            # with the inputs and the slot is reusable for t+2
+            train_loss = float(jnp.mean(losses))
+        finally:
+            # released on error too — leaking the slot would deadlock the
+            # NEXT run_round inside the prefetcher instead of erroring
+            if slot is not None:
+                self._prefetcher.release(slot)
+        return train_loss, diag, ingest
+
+    def _run_round_serial(self, t: int):
+        clients = self._sample_clients()
+        tic = time.perf_counter()
+        round_batches = self._round_batches(clients, t)
+        ingest = time.perf_counter() - tic
         extra = self.algo.client_extra(self.server_state)
         deltas, losses = [], []
-        for (batches, mask) in self._round_batches(clients, t):
+        for (batches, mask) in round_batches:
             delta, loss = self.local_update(self.params, batches, mask, extra)
             deltas.append(delta)
             losses.append(float(loss))
@@ -138,38 +221,88 @@ class FederatedTrainer:
         ids = jnp.asarray(clients, jnp.int32)
         self.params, self.server_state, diag = self._server_step(
             self.server_state, self.params, stacked, ids)
-        return float(np.mean(losses)), diag
+        return float(np.mean(losses)), diag, ingest
+
+    def _resolve_pending_eval(self):
+        if self._pending_eval is not None:
+            rec, fut = self._pending_eval
+            self._pending_eval = None
+            rec.test_accuracy = float(fut.result())
 
     # ---- public ----
 
     def run_round(self, t: int) -> RoundRecord:
+        # fold a FINISHED async eval into its record without blocking, so
+        # manual run_round loops see accuracies at most one round late
+        # (the still-running case resolves at the next eval boundary /
+        # finalize()/run() end)
+        if self._pending_eval is not None and self._pending_eval[1].done():
+            self._resolve_pending_eval()
         tic = time.perf_counter()
-        clients = self._sample_clients()
         run = (self._run_round_vectorized if self.cfg.vectorize
                else self._run_round_serial)
-        train_loss, diag = run(clients, t)
+        train_loss, diag, ingest = run(t)
         rec = RoundRecord(
             round=t, train_loss=train_loss,
-            seconds=time.perf_counter() - tic,
+            seconds=time.perf_counter() - tic, ingest_seconds=ingest,
             diagnostics={k: float(v) for k, v in diag.items()})
         if self.eval_fn and (t % self.cfg.eval_every == 0
                              or t == self.cfg.rounds - 1):
-            rec.test_accuracy = float(self.eval_fn(self.params))
+            # previous async eval must land before its boundary passes
+            self._resolve_pending_eval()
+            if self._async_eval:
+                # snapshot: the next round DONATES self.params, so eval
+                # runs on a private copy, overlapped with t+1's ingest;
+                # the result folds into rec at the next boundary (or
+                # finalize()/run() end). One short-lived daemon thread per
+                # eval — sweeps build many trainers and a pooled worker
+                # per trainer would accumulate idle threads.
+                import threading
+                from concurrent.futures import Future
+                snap = jax.tree.map(lambda x: jnp.array(x, copy=True),
+                                    self.params)
+                fut = Future()
+
+                def _eval(fn=self.eval_fn, p=snap, fut=fut):
+                    try:
+                        fut.set_result(fn(p))
+                    except BaseException as e:
+                        fut.set_exception(e)
+
+                threading.Thread(target=_eval, daemon=True,
+                                 name="fl-eval").start()
+                self._pending_eval = (rec, fut)
+            else:
+                rec.test_accuracy = float(self.eval_fn(self.params))
         self.history.append(rec)
         return rec
+
+    def finalize(self):
+        """Land any in-flight async eval into its RoundRecord."""
+        self._resolve_pending_eval()
+
+    def close(self):
+        self.finalize()
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
 
     def run(self, verbose: bool = False) -> List[RoundRecord]:
         for t in range(self.cfg.rounds):
             rec = self.run_round(t)
             if verbose:
+                # a human is watching: land this round's async eval now so
+                # the accuracy prints with its round (trades the overlap)
+                self._resolve_pending_eval()
                 acc = ("" if rec.test_accuracy is None
                        else f"  acc={rec.test_accuracy:.4f}")
                 print(f"[{self.cfg.algorithm}] round {t:4d} "
                       f"loss={rec.train_loss:.4f}{acc}")
+        self.finalize()
         return self.history
 
     @property
     def best_accuracy(self):
+        self._resolve_pending_eval()
         accs = [(r.test_accuracy, r.round) for r in self.history
                 if r.test_accuracy is not None]
         return max(accs) if accs else (None, None)

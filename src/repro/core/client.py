@@ -19,6 +19,11 @@ Client variants (selected by the server algorithm):
   prox   FedProx: + mu/2 ||w - w_global||^2 added to every local gradient
   cm     FedCM:   g <- alpha*g + (1-alpha)*Delta_prev  (client momentum)
   ga     FedGA:   local model initialized at w - beta*eta_l*Delta_prev
+
+Host ingest (DESIGN.md §2): ``stack_batches``/``stack_cohort`` build the
+padded (K, M, ...) cohort stack; ``stack_cohort_into`` does the same into
+preallocated buffers, and ``CohortPrefetcher`` stages round t+1's stack
+in a background thread while round t runs on device.
 """
 from __future__ import annotations
 
@@ -157,3 +162,128 @@ def stack_cohort(per_client_batches, max_batches: int):
     batches = jax.tree.map(lambda *xs: np.stack(xs), *[p[0] for p in pairs])
     masks = np.stack([p[1] for p in pairs])
     return batches, masks
+
+
+def stack_cohort_into(per_client_batches, max_batches: int, slot: dict):
+    """``stack_cohort`` into PREALLOCATED host buffers (DESIGN.md §2).
+
+    ``slot`` is a mutable dict owned by the caller (one per prefetch
+    buffer): its (K, M, ...) arrays + (K, M) mask are allocated on first
+    use and reused every round — reallocation happens only when the
+    cohort shape grows/changes (grow-once M bucketing keeps that rare),
+    so the per-round np.stack allocations disappear from the ingest path.
+    Returns (batches_pytree, mask) views backed by the slot's buffers;
+    they stay valid until the slot is refilled.
+    """
+    import numpy as np
+    k, m = len(per_client_batches), max_batches
+    leaves0, treedef = jax.tree_util.tree_flatten(per_client_batches[0][0])
+    shapes = tuple((np.shape(x), np.asarray(x).dtype) for x in leaves0)
+    key = (k, m, treedef, shapes)
+    if slot.get("key") != key:
+        slot["key"] = key
+        slot["bufs"] = [np.empty((k, m) + s, dt) for s, dt in shapes]
+        slot["mask"] = np.empty((k, m), bool)
+    bufs, mask = slot["bufs"], slot["mask"]
+    for j, blist in enumerate(per_client_batches):
+        n = len(blist)
+        assert 1 <= n <= m, (n, m)
+        for i, b in enumerate(blist):
+            for buf, x in zip(bufs, jax.tree_util.tree_flatten(b)[0]):
+                buf[j, i] = x
+        if n < m:                       # ragged: pad with masked repeats
+            for buf in bufs:
+                buf[j, n:] = buf[j, n - 1]
+        mask[j] = np.arange(m) < n
+    return jax.tree_util.tree_unflatten(treedef, bufs), mask
+
+
+class CohortPrefetcher:
+    """Double-buffered host ingest for the fused cohort round.
+
+    A daemon thread runs ``produce_fn(t, slot)`` for t = start..end-1 IN
+    ROUND ORDER (so RNG-driven client sampling inside it draws the exact
+    same sequence as the blocking path), staging round t+1's cohort into
+    a free buffer slot while round t's program runs on device. With the
+    default two slots the producer stays at most one round ahead and
+    never overwrites a buffer the device may still be reading: the
+    consumer releases a slot only after it has synchronized on the
+    round's results.
+
+        item, slot = pf.get(t)     # blocks only until round t is staged
+        ... dispatch + sync ...
+        pf.release(slot)
+    """
+
+    def __init__(self, produce_fn, start: int, end: int, slots: int = 2):
+        import queue
+        import threading
+        self._end = end
+        self._ready = queue.Queue()
+        self._free = queue.Queue()
+        for _ in range(max(2, slots)):
+            self._free.put({})
+        self._exc = None
+        self._stopped = False
+        self._thread = threading.Thread(
+            target=self._loop, args=(produce_fn, start, end), daemon=True,
+            name="cohort-prefetch")
+        self._thread.start()
+
+    def _loop(self, produce_fn, start, end):
+        try:
+            for t in range(start, end):
+                slot = self._free.get()
+                if slot is None:        # stop() sentinel
+                    return
+                item = produce_fn(t, slot)
+                self._ready.put((t, item, slot))
+        except BaseException as e:      # surfaced on the next get()
+            self._exc = e
+            self._ready.put((None, None, None))
+
+    def get(self, t: int):
+        import queue
+        if t >= self._end:
+            raise RuntimeError(
+                f"round {t} is past the configured horizon ({self._end} "
+                "rounds were prefetched); raise FLConfig.rounds or set "
+                "FLConfig.prefetch=False to run extra rounds")
+        while True:
+            try:
+                got, item, slot = self._ready.get(timeout=1.0)
+                break
+            except queue.Empty:
+                # a dead producer with an empty queue would otherwise
+                # hang forever (e.g. rounds re-run after a completed run)
+                if not self._thread.is_alive():
+                    try:
+                        # drain once more: the producer's final put may
+                        # have landed between the timeout and this check
+                        got, item, slot = self._ready.get_nowait()
+                        break
+                    except queue.Empty:
+                        raise RuntimeError(
+                            f"prefetch producer exited (rounds consumed "
+                            f"or stopped) — round {t} was never staged; "
+                            "set FLConfig.prefetch=False to re-run rounds"
+                        ) from self._exc
+        if got is None:                 # producer-failure sentinel; a round
+            # staged BEFORE the failure is still valid and returned above.
+            # Re-poison so every later get() fails too instead of hanging.
+            self._ready.put((None, None, None))
+            raise RuntimeError("cohort prefetch thread failed") from self._exc
+        if got != t:
+            raise RuntimeError(
+                f"prefetched round {got} but round {t} was requested — "
+                "prefetching requires run_round(t) in sequential order "
+                "(set FLConfig.prefetch=False for out-of-order rounds)")
+        return item, slot
+
+    def release(self, slot: dict):
+        self._free.put(slot)
+
+    def stop(self):
+        if not self._stopped:
+            self._stopped = True
+            self._free.put(None)        # unblock the producer if waiting

@@ -40,15 +40,30 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     """
     delta_prev = state["delta_prev"]
 
-    scaled, diag = jax.vmap(
-        lambda d: proj.project_and_scale(d, delta_prev, lam,
-                                         use_kernel=use_kernel))(deltas)
-    # aggregate: mean over the client axis (Eq. 4)
-    delta_t = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
-                           scaled)
-    new_params = jax.tree.map(
-        lambda w, d: (w.astype(jnp.float32) - eta_g * d).astype(w.dtype),
-        params, delta_t)
+    # reduction pass: per-client scalars (4 dots each, vmapped over K)
+    coefs, scales, diag = jax.vmap(
+        lambda d: proj.projection_scalars(d, delta_prev, lam))(deltas)
+    if use_kernel:
+        # epilogue pass: residual+scale, client-mean (Eq. 4) AND the param
+        # update fused into ONE grid over the stacked deltas
+        # (kernels/feddpc_project.batched_epilogue) — one HBM pass instead
+        # of K per-client kernel calls + two more full passes.
+        from repro.kernels.feddpc_project import ops as k_ops
+        new_params, delta_t = k_ops.batched_server_epilogue(
+            deltas, delta_prev, params, coefs, scales, eta_g)
+    else:
+        def bc(s, x):
+            return s.reshape((-1,) + (1,) * (x.ndim - 1))
+
+        # scaled residual + mean over the client axis (Eq. 4)
+        delta_t = jax.tree.map(
+            lambda d, p: jnp.mean(
+                bc(scales, d) * (d.astype(jnp.float32)
+                                 - bc(coefs, d) * p.astype(jnp.float32)[None]),
+                axis=0), deltas, delta_prev)
+        new_params = jax.tree.map(
+            lambda w, d: (w.astype(jnp.float32) - eta_g * d).astype(w.dtype),
+            params, delta_t)
     new_state = {"delta_prev": delta_t}
     diagnostics = {
         "mean_coef": diag["coef"].mean(),

@@ -80,6 +80,34 @@ def project_coefficient(delta: PyTree, delta_prev: PyTree) -> jnp.ndarray:
     return jnp.where(den > EPS, num / jnp.maximum(den, EPS), 0.0)
 
 
+def projection_scalars(delta: PyTree, delta_prev: PyTree, lam: float
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """The reduction half of FedDPC's per-client modification: the three
+    dots <d,prev>, ||d||², ||prev||² and everything derived from them.
+
+    Returns (coef, scale, diagnostics) — the epilogue (residual + scaling,
+    applied either in jnp or by the Pallas kernel) only needs the two
+    scalars. ||delta||² is reduced ONCE and reused for both ||delta|| and
+    the Pythagoras residual norm; ||resid||² = ||d||² - coef²||prev||²
+    avoids a full extra pass over the parameters.
+    """
+    num = tree_vdot(delta, delta_prev)
+    sq_prev = tree_sqnorm(delta_prev)
+    sq_d = tree_sqnorm(delta)
+    coef = jnp.where(sq_prev > EPS, num / jnp.maximum(sq_prev, EPS), 0.0)
+    norm_d = jnp.sqrt(sq_d)
+    sq_resid = jnp.maximum(sq_d - coef * coef * sq_prev, 0.0)
+    norm_r = jnp.sqrt(sq_resid)
+    scale = lam + norm_d / jnp.maximum(norm_r, EPS)
+    diag = {"coef": coef, "norm_delta": norm_d, "norm_resid": norm_r,
+            "scale": scale,
+            "cos_angle": jnp.where(norm_d > EPS,
+                                   coef * jnp.sqrt(sq_prev)
+                                   / jnp.maximum(norm_d, EPS),
+                                   0.0)}
+    return coef, scale, diag
+
+
 def project_and_scale(delta: PyTree, delta_prev: PyTree, lam: float,
                       use_kernel: bool = False) -> Tuple[PyTree, dict]:
     """Paper Algorithm 1 lines 17–17b for ONE client update:
@@ -89,14 +117,7 @@ def project_and_scale(delta: PyTree, delta_prev: PyTree, lam: float,
 
     Returns (scaled_residual, diagnostics).
     """
-    coef = project_coefficient(delta, delta_prev)
-    norm_d = tree_norm(delta)
-    # ||resid||^2 = ||d||^2 - coef^2 ||prev||^2  (Pythagoras) — avoids a
-    # second full pass over the parameters to compute the residual norm.
-    sq_prev = tree_sqnorm(delta_prev)
-    sq_resid = jnp.maximum(tree_sqnorm(delta) - coef * coef * sq_prev, 0.0)
-    norm_r = jnp.sqrt(sq_resid)
-    scale = lam + norm_d / jnp.maximum(norm_r, EPS)
+    coef, scale, diag = projection_scalars(delta, delta_prev, lam)
 
     if use_kernel:
         from repro.kernels.feddpc_project import ops as k_ops
@@ -106,9 +127,4 @@ def project_and_scale(delta: PyTree, delta_prev: PyTree, lam: float,
             lambda d, p: (scale * (d.astype(jnp.float32)
                                    - coef * p.astype(jnp.float32))).astype(d.dtype),
             delta, delta_prev)
-    diag = {"coef": coef, "norm_delta": norm_d, "norm_resid": norm_r,
-            "scale": scale,
-            "cos_angle": jnp.where(norm_d > EPS,
-                                   coef * jnp.sqrt(sq_prev) / jnp.maximum(norm_d, EPS),
-                                   0.0)}
     return scaled, diag

@@ -41,7 +41,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       algo: ServerAlgo, eta_l: float, eta_g: float, *,
                       optimizer: str = "sgd", mu: float = 0.01,
                       cm_alpha: float = 0.1, ga_beta: float = 0.1,
-                      jit: bool = True, donate: bool = True):
+                      jit: bool = True, donate: bool = True,
+                      mesh=None, client_axis: str = "clients"):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids) -> (new_params, new_server_state, losses, diag).
 
@@ -57,6 +58,13 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     With jit=True the state/params buffers are donated: the round updates
     them in place, which keeps FedVARP's O(num_clients * d) table from
     being double-buffered every round.
+
+    With ``mesh`` set (a mesh carrying ``client_axis``, e.g.
+    launch/mesh.make_cohort_mesh), the K axis of batches/masks/client_ids
+    gets a client-axis NamedSharding and the round runs data-parallel
+    across the mesh devices with params/server-state replicated
+    (sharding/rules.cohort_round_shardings — DESIGN.md §2). K should be a
+    multiple of the axis size (GSPMD would pad uneven shards).
     """
     local = client_mod.make_cohort_local_update(
         loss_fn, eta_l, variant=algo.client_variant, optimizer=optimizer,
@@ -71,12 +79,18 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
 
     if not jit:
         return cohort_round
-    return jax.jit(cohort_round, donate_argnums=(0, 1) if donate else ())
+    kw = {"donate_argnums": (0, 1) if donate else ()}
+    if mesh is not None:
+        from repro.sharding.rules import cohort_round_shardings
+        kw["in_shardings"], kw["out_shardings"] = cohort_round_shardings(
+            mesh, client_axis)
+    return jax.jit(cohort_round, **kw)
 
 
 def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                        eta_l: float, eta_g: float, lam: float = 1.0,
-                       algorithm: str = "feddpc"):
+                       algorithm: str = "feddpc", *,
+                       mesh=None, client_axis: str = "clients"):
     """Mesh-path wrapper: round_step(params, delta_prev, batches) ->
     (new_params, new_delta_prev, metrics).
 
@@ -87,6 +101,15 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     algorithm whose server state is exactly {"delta_prev"} (feddpc,
     fedavg, fedexp, ...); per-client-stateful rules (fedvarp) need the
     full ``make_cohort_round`` interface.
+
+    Two sharding modes share this one implementation:
+      * mesh=None (default): returns the raw python fn — the cross-silo
+        dry-run jits it with full Megatron param shardings externally
+        (launch/dryrun.fl_round_dryrun).
+      * mesh=<1-D client mesh>: returns a jit'd round with the same
+        client-axis NamedSharding layout as the simulation trainer
+        (batches sharded on K over ``client_axis``, params/delta_prev
+        replicated) — the unified sharded round of DESIGN.md §2.
     """
     algo = get_algorithm(algorithm, lam=lam)
     probe = algo.init({"w": jnp.zeros(())}, 1)
@@ -112,7 +135,15 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         metrics = {"train_loss": losses.mean(), **diag}
         return new_params, new_state["delta_prev"], metrics
 
-    return round_step
+    if mesh is None:
+        return round_step
+    # same layout as the simulation trainer: (state, params, batches, ...)
+    # -> here state==delta_prev and metrics are scalars (replicated)
+    from repro.sharding.rules import cohort_round_shardings
+    (st_s, p_s, b_s, _, _), (po_s, so_s, _, m_s) = cohort_round_shardings(
+        mesh, client_axis)
+    return jax.jit(round_step, in_shardings=(p_s, st_s, b_s),
+                   out_shardings=(po_s, so_s, m_s))
 
 
 def fl_round_input_specs(cfg, *, clients: int, local_steps: int,

@@ -12,6 +12,13 @@ subtraction with the adaptive scaling (4d -> 3d bytes). TPU adaptation:
 updates are processed as (rows, 128)-tiled blocks resident in VMEM —
 lane-aligned, VPU elementwise, no MXU involvement.
 
+``batched_epilogue`` extends pass 2 to the WHOLE cohort (DESIGN.md §2):
+one grid over the stacked (K, M, 128) deltas fuses the per-client
+residual+scale with the client-mean and the global param update, so the
+entire server epilogue is a single HBM pass over (K+2)·d floats instead
+of K separate per-client kernel launches under vmap plus two more full
+passes for the mean and the parameter update.
+
 Validated in interpret mode on CPU against ref.py.
 """
 from __future__ import annotations
@@ -50,6 +57,70 @@ def fused_dots(d2: jnp.ndarray, p2: jnp.ndarray, *, rows: int = DEFAULT_ROWS,
         out_shape=jax.ShapeDtypeStruct((grid[0], 3), jnp.float32),
         interpret=interpret,
     )(d2, p2)
+
+
+def _batched_epilogue_kernel(coef_ref, scale_ref, eta_ref, d_ref, p_ref,
+                             w_ref, w_out_ref, dt_out_ref):
+    """Whole-cohort server epilogue on one (rows, 128) tile:
+
+        dt  = mean_j scale_j * (d_j - coef_j * prev)      (residual+scale+mean)
+        w'  = w - eta_g * dt                              (global param update)
+
+    d_ref block is (K, rows, 128) — all K clients' tile resident at once,
+    so the stacked deltas are read exactly ONCE per round.
+    """
+    d = d_ref[...].astype(jnp.float32)                    # (K, r, 128)
+    p = p_ref[...].astype(jnp.float32)                    # (r, 128)
+    coef = coef_ref[...].astype(jnp.float32)[:, None, None]
+    scale = scale_ref[...].astype(jnp.float32)[:, None, None]
+    dt = jnp.mean(scale * (d - coef * p[None]), axis=0)
+    dt_out_ref[...] = dt.astype(dt_out_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    w_out_ref[...] = (w - eta_ref[0] * dt).astype(w_out_ref.dtype)
+
+
+def batched_epilogue(d3: jnp.ndarray, p2: jnp.ndarray, w2: jnp.ndarray,
+                     coefs, scales, eta_g, *, rows: int = None,
+                     interpret: bool = True):
+    """Fused FedDPC server epilogue over the STACKED cohort in one grid.
+
+    d3: (K, M, 128) client-stacked deltas; p2/w2: (M, 128) delta_prev /
+    params; coefs/scales: (K,) per-client scalars from the reduction pass.
+    Returns (new_w2, delta_t2), both (M, 128): one HBM pass over the
+    (K+2)·M·128 input floats instead of K separate epilogue calls (which
+    re-read prev K times and leave the mean + param update as extra
+    passes). K·rows·128 f32 must fit VMEM, so the row block shrinks as K
+    grows (default 512/K, floor 8). M must be a multiple of the row block
+    (ops.py pads; full blocks avoid partial-block padding semantics).
+    """
+    k, m, lane = d3.shape
+    assert lane == LANE, d3.shape
+    rows = min(rows or max(8, DEFAULT_ROWS // max(1, k)), m)
+    while m % rows:                 # largest divisor <= target (trace-time)
+        rows -= 1
+    grid = (pl.cdiv(m, rows),)
+    coefs = jnp.asarray(coefs, jnp.float32).reshape(k)
+    scales = jnp.asarray(scales, jnp.float32).reshape(k)
+    eta = jnp.asarray(eta_g, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _batched_epilogue_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),       # coefs (broadcast)
+            pl.BlockSpec((k,), lambda i: (0,)),       # scales
+            pl.BlockSpec((1,), lambda i: (0,)),       # eta_g
+            pl.BlockSpec((k, rows, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+        # delta_t is server STATE: emitted f32 to match the jnp path's
+        # f32 accumulation whatever the input dtypes
+        out_shape=[jax.ShapeDtypeStruct((m, lane), w2.dtype),
+                   jax.ShapeDtypeStruct((m, lane), jnp.float32)],
+        interpret=interpret,
+    )(coefs, scales, eta, d3, p2, w2)
 
 
 def _epilogue_kernel(coef_ref, scale_ref, d_ref, p_ref, out_ref):

@@ -62,6 +62,52 @@ def project_and_scale_flat(d: jnp.ndarray, p: jnp.ndarray, lam: float = 1.0,
     return _from_2d(out2, n, d.shape, d.dtype)
 
 
+def _to_2d_batched(x: jnp.ndarray, rows: int):
+    """(K, ...) -> (K, M, 128) with M a multiple of `rows` (full blocks;
+    zero padding is an exact no-op for the epilogue: dt == 0 there)."""
+    k = x.shape[0]
+    flat = x.reshape(k, -1)
+    n = flat.shape[1]
+    chunk = K.LANE * rows
+    pad = (-n) % chunk
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(k, -1, K.LANE), n
+
+
+def batched_server_epilogue(deltas, delta_prev, params, coefs, scales,
+                            eta_g, interpret: bool = None):
+    """Whole-cohort FedDPC server epilogue (kernel.batched_epilogue per
+    leaf): deltas client-stacked (K, ...), delta_prev/params plain trees,
+    coefs/scales (K,) from the reduction pass. Returns
+    (new_params, delta_t) in one fused HBM pass over the stacked deltas —
+    the use_kernel=True route of core/feddpc.server_step. delta_t comes
+    back f32 regardless of input dtypes (it is server STATE — matching
+    the jnp path's f32 accumulation). interpret=None auto-selects: real
+    kernel on TPU, interpret mode elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat_d, treedef = jax.tree_util.tree_flatten(deltas)
+    flat_p = jax.tree.leaves(delta_prev)
+    flat_w = jax.tree.leaves(params)
+    new_w, new_dt = [], []
+    for d, p, w in zip(flat_d, flat_p, flat_w):
+        k = d.shape[0]
+        rows = max(8, K.DEFAULT_ROWS // max(1, k))
+        d3, n = _to_2d_batched(d, rows)
+        rows = min(rows, d3.shape[1])
+        p2 = jnp.pad(p.reshape(-1), (0, d3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w2 = jnp.pad(w.reshape(-1), (0, d3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w_out2, dt2 = K.batched_epilogue(d3, p2, w2, coefs, scales, eta_g,
+                                         rows=rows, interpret=interpret)
+        new_w.append(_from_2d(w_out2, n, w.shape, w.dtype))
+        new_dt.append(_from_2d(dt2, n, p.shape, jnp.float32))
+    return (jax.tree_util.tree_unflatten(treedef, new_w),
+            jax.tree_util.tree_unflatten(treedef, new_dt))
+
+
 def residual_scale_tree(delta, delta_prev, coef, scale, interpret: bool = True):
     """Per-leaf fused epilogue with precomputed scalars (pytree entry used
     by core/projection.project_and_scale(use_kernel=True))."""

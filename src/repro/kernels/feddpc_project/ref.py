@@ -17,6 +17,19 @@ def epilogue_ref(d2, p2, coef, scale):
                      - coef * p2.astype(jnp.float32))).astype(d2.dtype)
 
 
+def batched_epilogue_ref(d3, p2, w2, coefs, scales, eta_g):
+    """Oracle for kernel.batched_epilogue: d3 (K, M, 128) stacked deltas,
+    p2/w2 (M, 128) -> (new_w2, delta_t2)."""
+    df = d3.astype(jnp.float32)
+    pf = p2.astype(jnp.float32)
+    c = jnp.asarray(coefs, jnp.float32)[:, None, None]
+    s = jnp.asarray(scales, jnp.float32)[:, None, None]
+    dt = jnp.mean(s * (df - c * pf[None]), axis=0)
+    new_w = (w2.astype(jnp.float32)
+             - jnp.asarray(eta_g, jnp.float32) * dt).astype(w2.dtype)
+    return new_w, dt                    # delta_t stays f32 (server state)
+
+
 def project_and_scale_flat_ref(d: jnp.ndarray, p: jnp.ndarray, lam: float,
                                eps: float = 1e-12):
     """Whole FedDPC per-client modification on a FLAT vector (oracle for

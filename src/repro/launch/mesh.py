@@ -36,6 +36,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
+def make_cohort_mesh(num_devices: int = None, axis: str = "clients"):
+    """1-D mesh over the local devices for the simulation trainer's
+    client-axis sharding (DESIGN.md §2): the fused cohort round's
+    (K, M, ...) batch stack is data-parallel over ``axis`` while params /
+    server state replicate. On CPU CI this is exercised with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,), **_mesh_kwargs(1))
+
+
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"),

@@ -1,2 +1,3 @@
 from repro.sharding.rules import (ShardingPolicy, param_specs, batch_specs,
-                                  state_specs)
+                                  state_specs, cohort_round_shardings,
+                                  clients_divisible)

@@ -236,3 +236,35 @@ def state_specs(states: PyTree, mesh: Mesh,
 def to_named(specs: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------- cohort (simulation FL) round ----------------
+
+def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients"):
+    """In/out sharding PREFIX trees for the fused cohort round
+    (core/round.py ``make_cohort_round``), signature
+    (server_state, params, batches, masks, client_ids) ->
+    (new_params, new_state, losses, diag).
+
+    The client-stacked inputs (batches/masks/ids: leading axis K) shard
+    over ``client_axis``; params and server state replicate — FedDPC's
+    epilogue then lowers to 4 scalar all-reduces + one all-reduce for the
+    client mean (DESIGN.md §2). Prefix shardings apply to every leaf, so
+    the same pair covers any batch pytree / server-state shape.
+
+    Returns (in_shardings, out_shardings) ready for jax.jit.
+    """
+    if client_axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {client_axis!r} axis")
+    rep = NamedSharding(mesh, P())
+    cli = NamedSharding(mesh, P(client_axis))
+    # losses (K,) stay client-sharded; diagnostics are scalars -> replicated
+    return (rep, rep, cli, cli, cli), (rep, rep, cli, rep)
+
+
+def clients_divisible(mesh: Mesh, k: int, client_axis: str = "clients") -> bool:
+    """GSPMD pads uneven shards; we keep the simulation path on the exact
+    divisible layout (same guard philosophy as the param rules)."""
+    return k % int(np.prod(
+        [s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+         if a == client_axis])) == 0

@@ -1,0 +1,106 @@
+"""Subprocess body for the sharded-cohort equivalence test.
+
+Runs on 8 FORCED host devices (the XLA flag must be set before jax
+initializes, which is why this lives in its own process rather than in
+the main pytest interpreter): the client-axis-sharded cohort round must
+reproduce the single-device vectorized round bit-for-tolerance for every
+algorithm the sharded path supports, and the mesh-unified
+``make_fl_round_step`` must match its raw (unsharded) counterpart.
+
+Invoked by tests/test_cohort.py::test_sharded_round_matches_single_device.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+
+from repro.core.api import FLConfig, FederatedTrainer       # noqa: E402
+from repro.core.round import make_fl_round_step             # noqa: E402
+from repro.launch.mesh import make_cohort_mesh              # noqa: E402
+
+NUM_CLIENTS = 16
+K = 8                       # divisible by the 8-device client axis
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def ragged_batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 3) + 1)]
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-6):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def check_trainer(algo: str):
+    runs = {}
+    for shard in (False, True):
+        cfg = FLConfig(algorithm=algo, rounds=3, clients_per_round=K,
+                       eta_l=0.05, eta_g=0.1, seed=7, eval_every=10 ** 9,
+                       shard_clients=shard)
+        tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                              ragged_batch_fn, cfg)
+        tr.run()
+        tr.close()
+        runs[shard] = tr
+    assert runs[True].mesh is not None, "sharded run fell back to 1 device"
+    assert_trees_close(runs[True].params, runs[False].params)
+    assert_trees_close(runs[True].server_state, runs[False].server_state)
+    for rv, rs in zip(runs[True].history, runs[False].history):
+        assert np.isclose(rv.train_loss, rs.train_loss, rtol=1e-4, atol=1e-6)
+        for key in rv.diagnostics:
+            assert np.isclose(rv.diagnostics[key], rs.diagnostics[key],
+                              rtol=1e-3, atol=1e-4), (algo, key)
+    print(f"[sharded==single] {algo} OK")
+
+
+def check_fl_round_step():
+    """Mesh-unified make_fl_round_step == the raw (externally-jitted) one."""
+    params = make_params()
+    delta0 = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    r = np.random.RandomState(3)
+    batches = {"x": jnp.asarray(r.randn(K, 2, 8, 4), jnp.float32),
+               "y": jnp.asarray(r.randn(K, 2, 8, 3), jnp.float32)}
+    plain = make_fl_round_step(loss_fn, 0.05, 0.1, algorithm="feddpc")
+    sharded = make_fl_round_step(loss_fn, 0.05, 0.1, algorithm="feddpc",
+                                 mesh=make_cohort_mesh())
+    p0, d0, m0 = jax.jit(plain)(params, delta0, batches)
+    p1, d1, m1 = sharded(params, delta0, batches)
+    assert_trees_close(p0, p1)
+    assert_trees_close(d0, d1)
+    assert np.isclose(float(m0["train_loss"]), float(m1["train_loss"]),
+                      rtol=1e-5)
+    print("[sharded==single] make_fl_round_step OK")
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    for algo in ("feddpc", "fedavg", "fedexp"):
+        check_trainer(algo)
+    check_fl_round_step()
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

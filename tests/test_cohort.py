@@ -7,6 +7,10 @@ training + server step) into one jit'd program (core/round.py
 state, per-round losses, and diagnostics — plus the FedDPC invariants on
 the fused path and the shape-bucketing (grow-once) compile guarantee.
 """
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -150,6 +154,74 @@ def test_ragged_cohort_matches_per_client():
         d_ser, l_ser = serial(params, b, m, None)
         assert_trees_close(jax.tree.map(lambda x: x[j], d_vec), d_ser)
         assert np.isclose(float(l_vec[j]), float(l_ser), rtol=1e-5)
+
+
+def test_prefetch_matches_blocking():
+    """Double-buffered ingest determinism: same seed => identical client
+    schedule, losses, and final state as the blocking stack_cohort path
+    (the prefetch thread draws the sampling RNG in round order)."""
+    for algo in ("feddpc", "fedvarp"):          # stateless + stateful rules
+        pf = run_trainer(algo, True, rounds=4, prefetch=True)
+        bl = run_trainer(algo, True, rounds=4, prefetch=False)
+        assert len(pf.schedule) >= 4 and len(bl.schedule) >= 4
+        for a, b in zip(bl.schedule[:4], pf.schedule[:4]):
+            assert (a == b).all(), (algo, a, b)
+        for rp, rb in zip(pf.history, bl.history):
+            assert np.isclose(rp.train_loss, rb.train_loss,
+                              rtol=1e-6, atol=1e-8), algo
+        assert_trees_close(pf.params, bl.params)
+        assert_trees_close(pf.server_state, bl.server_state)
+        pf.close()
+
+
+def test_prefetch_out_of_order_round_raises():
+    cfg = FLConfig(algorithm="feddpc", rounds=4, clients_per_round=K,
+                   eta_l=0.05, eta_g=0.1, seed=0, eval_every=10 ** 9,
+                   prefetch=True)
+    tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, cfg)
+    tr.run_round(0)
+    with pytest.raises(RuntimeError, match="sequential"):
+        tr.run_round(2)
+    tr.close()
+
+
+def test_async_eval_matches_sync():
+    """Async eval runs on a pre-donation snapshot and folds into the same
+    RoundRecord the blocking path fills."""
+    def eval_fn(p):
+        return float(jnp.mean(jnp.tanh(p["w"])))
+
+    hists = {}
+    for async_eval in (False, True):
+        cfg = FLConfig(algorithm="feddpc", rounds=5, clients_per_round=K,
+                       eta_l=0.05, eta_g=0.1, seed=7, eval_every=2,
+                       async_eval=async_eval)
+        tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                              ragged_batch_fn, cfg, eval_fn)
+        hists[async_eval] = tr.run()
+        tr.close()
+    for ra, rs in zip(hists[True], hists[False]):
+        assert (ra.test_accuracy is None) == (rs.test_accuracy is None)
+        if ra.test_accuracy is not None:
+            assert np.isclose(ra.test_accuracy, rs.test_accuracy,
+                              rtol=1e-6, atol=1e-8)
+
+
+def test_sharded_round_matches_single_device():
+    """Client-axis sharded round == single-device round on a FORCED
+    8-host-device mesh for feddpc/fedavg/fedexp. The device count locks at
+    jax init, so the check runs in a subprocess (tests/_sharded_cohort_check)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests",
+                                      "_sharded_cohort_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL OK" in proc.stdout
 
 
 def test_grow_once_keeps_jit_cache_bounded():

@@ -26,6 +26,70 @@ def test_feddpc_project_sweep(n, dtype, rng):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("k,n", [(1, 128), (3, 1000), (8, 70001)])
+def test_feddpc_batched_epilogue_sweep(k, n, rng):
+    """kernel.batched_epilogue (one grid over the stacked cohort) vs the
+    pure-jnp oracle, across block-boundary/pad shapes."""
+    from repro.kernels.feddpc_project import kernel as fp_kernel
+    ks = jax.random.split(rng, 5)
+    m = -(-n // 128)
+    rows = max(8, fp_kernel.DEFAULT_ROWS // k)
+    m += (-m) % rows                              # full blocks, like ops.py
+    d3 = jax.random.normal(ks[0], (k, m, 128))
+    p2 = jax.random.normal(ks[1], (m, 128))
+    w2 = jax.random.normal(ks[2], (m, 128))
+    coefs = jax.random.normal(ks[3], (k,))
+    scales = 1.0 + jnp.abs(jax.random.normal(ks[4], (k,)))
+    got_w, got_dt = fp_kernel.batched_epilogue(d3, p2, w2, coefs, scales, 0.3)
+    want_w, want_dt = fp_ref.batched_epilogue_ref(d3, p2, w2, coefs, scales,
+                                                  0.3)
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_dt, want_dt, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("round1", [True, False])
+def test_feddpc_batched_server_step_matches_jnp(round1, rng):
+    """feddpc.server_step(use_kernel=True) — the single-HBM-pass batched
+    epilogue — matches the jnp path, including the K>1 zero-delta_prev
+    round-1 case (projection degenerates to 0, scale to lam+1)."""
+    from repro.core import feddpc
+    ks = jax.random.split(rng, 3)
+    params = {"w": jax.random.normal(ks[0], (40, 37)),
+              "b": jax.random.normal(ks[1], (37,))}
+    deltas = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(ks[2], x.ndim),
+                                    (5,) + x.shape), params)
+    prev = (jax.tree.map(jnp.zeros_like, params) if round1
+            else jax.tree.map(lambda x: x * 0.3, params))
+    outs = {}
+    for uk in (False, True):
+        outs[uk] = feddpc.server_step({"delta_prev": prev}, params, deltas,
+                                      0.1, 1.0, use_kernel=uk)
+    for a, b in zip(jax.tree.leaves(outs[False][:2]),
+                    jax.tree.leaves(outs[True][:2])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    for key, va in outs[False][2].items():
+        np.testing.assert_allclose(np.asarray(va),
+                                   np.asarray(outs[True][2][key]),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_feddpc_batched_server_step_bf16_state_stays_f32(rng):
+    """delta_prev is server STATE: both epilogue paths must keep it f32
+    even for bf16 params/deltas (regression: the kernel path used to
+    inherit the input dtype)."""
+    from repro.core import feddpc
+    ks = jax.random.split(rng, 2)
+    params = {"w": jax.random.normal(ks[0], (33, 40), jnp.bfloat16)}
+    deltas = {"w": jax.random.normal(ks[1], (4, 33, 40), jnp.bfloat16)}
+    prev = feddpc.init_state(params)["delta_prev"]
+    for uk in (False, True):
+        _, state, _ = feddpc.server_step({"delta_prev": prev}, params,
+                                         deltas, 0.1, 1.0, use_kernel=uk)
+        assert state["delta_prev"]["w"].dtype == jnp.float32, uk
+
+
 def test_feddpc_fused_dots(rng):
     k1, k2 = jax.random.split(rng)
     d = jax.random.normal(k1, (5000,))
