@@ -3,13 +3,13 @@ its scaling levers (core/round.py, core/api.py, DESIGN.md §2):
 
   {serial, vectorized, sharded} x {prefetch on/off} x {kernel on/off}
 
-serial        historical per-client dispatch (cfg.vectorize=False)
+serial        historical per-client dispatch (ExecConfig.vectorize=False)
 vectorized    one fused jit program per round on a single device
 sharded       client axis NamedSharding over the local devices
-              (cfg.shard_clients=True; force 8 host devices on CPU)
-prefetch      double-buffered host ingest (cfg.prefetch)
+              (ExecConfig.shard_clients=True; force 8 host devices on CPU)
+prefetch      double-buffered host ingest (ExecConfig.prefetch)
 kernel        FedDPC epilogue through the batched Pallas kernel
-              (cfg.use_kernel; interpret mode on CPU)
+              (FedDPCHyper.use_kernel; interpret mode on CPU)
 
 Per-mode stats include ``ingest_mean_s`` — the host time run_round spends
 blocked on cohort stacking — so the prefetch win is measured directly.
@@ -49,12 +49,15 @@ import jax                                              # noqa: E402
 import jax.numpy as jnp                                 # noqa: E402
 import numpy as np                                      # noqa: E402
 
-from repro.core.api import FLConfig, FederatedTrainer   # noqa: E402
+from repro.core.api import (AlgoConfig, ExecConfig,     # noqa: E402
+                            FederatedTrainer)
+from repro.core.baselines import default_hyper          # noqa: E402
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_cohort_sharded.json")
 
-# mode name -> FLConfig overrides; the sweep skips nothing silently — a
+# mode name -> config overrides (use_kernel routes into the feddpc hyper,
+# the rest are ExecConfig fields); the sweep skips nothing silently — a
 # combo that fails records its error string in the payload.
 MODES = [
     ("serial", dict(vectorize=False, prefetch=False)),
@@ -102,16 +105,17 @@ def build_task(num_clients: int, batches_per_client: int, batch: int,
 
 def bench(overrides: dict, *, params, loss_fn, batch_fn, k: int,
           rounds: int, warmup: int, algorithm: str) -> Dict:
-    cfg = FLConfig(algorithm=algorithm, rounds=warmup + rounds,
-                   clients_per_round=k, eta_l=0.05, eta_g=0.1, seed=0,
-                   eval_every=10 ** 9, **overrides)
-    tr = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None)
-    try:
+    exec_kw = dict(overrides)
+    hyper = default_hyper(algorithm,
+                          use_kernel=exec_kw.pop("use_kernel", False))
+    cfg = ExecConfig(rounds=warmup + rounds, clients_per_round=k, seed=0,
+                     eval_every=10 ** 9, **exec_kw)
+    algo = AlgoConfig(name=algorithm, eta_l=0.05, eta_g=0.1, hyper=hyper)
+    with FederatedTrainer(loss_fn, params, k, batch_fn, cfg, None,
+                          algo=algo) as tr:
         for t in range(warmup):                   # compile + cache warm
             tr.run_round(t)
         recs = [tr.run_round(t) for t in range(warmup, warmup + rounds)]
-    finally:
-        tr.close()
     times = np.asarray([r.seconds for r in recs])
     ingest = np.asarray([r.ingest_seconds for r in recs])
     return {"mean_s": float(times.mean()), "p50_s": float(np.median(times)),

@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import FLConfig, FederatedTrainer
-from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.baselines import default_hyper
+from repro.data.pipeline import StreamingImageSource, \
+    build_federated_image_data
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 
@@ -77,14 +79,11 @@ def build_task(spec: TaskSpec, alpha: float, seed: int = 0):
         seed=seed, noise=spec.noise)
     params = init_vision(vc, jax.random.PRNGKey(seed))
     loss_fn = functools.partial(vision_loss_fn, vc)
-
-    def batch_fn(c, t):
-        return list(client_batches(data, c, spec.batch_size, t))
-
+    source = StreamingImageSource(data, spec.batch_size)
     te_x = jnp.asarray(data.test_images)
     te_y = jnp.asarray(data.test_labels)
     eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
-    return params, loss_fn, batch_fn, eval_fn, data
+    return params, loss_fn, source, eval_fn, data
 
 
 def run_sweep(spec: TaskSpec, algorithms: Sequence[str],
@@ -95,12 +94,16 @@ def run_sweep(spec: TaskSpec, algorithms: Sequence[str],
     (paper §5.2.4 fairness protocol). Returns nested results dict.
     vectorize=False forces the serial per-client reference path (the
     cohort-fused round is the default; see benchmarks/bench_cohort.py for
-    the latency comparison)."""
-    overrides = {"vectorize": vectorize, **(overrides or {})}
+    the latency comparison). ``overrides`` are extra ExecConfig kwargs."""
+    exec_kw = {"vectorize": vectorize, **(overrides or {})}
     out = {"spec": {k: v for k, v in spec.__dict__.items()}, "algorithms": {},
-           "lam": lam, "vectorize": overrides["vectorize"]}
+           "lam": lam, "vectorize": exec_kw["vectorize"]}
+
+    def hyper_for(algo):
+        return default_hyper(algo, lam=lam)
+
     for alpha in alphas:
-        params, loss_fn, batch_fn, eval_fn, _ = build_task(spec, alpha, seed)
+        params, loss_fn, source, eval_fn, _ = build_task(spec, alpha, seed)
         for algo in algorithms:
             # per-algorithm lr grid (best train loss + best acc, paper
             # protocol); short probe runs pick eta, then the full run
@@ -108,32 +111,35 @@ def run_sweep(spec: TaskSpec, algorithms: Sequence[str],
             if len(spec.eta_grid) > 1:
                 probe_rounds = max(4, spec.rounds // 4)
                 for eta in spec.eta_grid:
-                    pcfg = FLConfig(
-                        algorithm=algo, rounds=probe_rounds,
+                    pcfg = ExecConfig(
+                        rounds=probe_rounds,
                         clients_per_round=spec.clients_per_round,
-                        eta_l=eta, eta_g=eta, lam=lam,
                         batch_size=spec.batch_size, seed=seed,
-                        eval_every=max(1, probe_rounds // 2),
-                        **(overrides or {}))
-                    ptr = FederatedTrainer(loss_fn, params, spec.num_clients,
-                                           batch_fn, pcfg, eval_fn)
-                    phist = ptr.run()
-                    pacc, _ = ptr.best_accuracy
+                        eval_every=max(1, probe_rounds // 2), **exec_kw)
+                    with FederatedTrainer(
+                            loss_fn, params, spec.num_clients, source, pcfg,
+                            eval_fn, algo=AlgoConfig(
+                                name=algo, eta_l=eta, eta_g=eta,
+                                hyper=hyper_for(algo))) as ptr:
+                        phist = ptr.run()
+                        pacc, _ = ptr.best_accuracy
                     score = (pacc or 0.0) - 0.05 * phist[-1].train_loss
                     if np.isfinite(phist[-1].train_loss) and score > best_score:
                         best_score, best_eta = score, eta
-            cfg = FLConfig(
-                algorithm=algo, rounds=spec.rounds,
+            cfg = ExecConfig(
+                rounds=spec.rounds,
                 clients_per_round=spec.clients_per_round,
-                eta_l=best_eta, eta_g=best_eta, lam=lam,
                 batch_size=spec.batch_size, seed=seed,
-                eval_every=spec.eval_every, **(overrides or {}))
+                eval_every=spec.eval_every, **exec_kw)
             t0 = time.perf_counter()
-            tr = FederatedTrainer(loss_fn, params, spec.num_clients,
-                                  batch_fn, cfg, eval_fn)
-            hist = tr.run()
-            dt = time.perf_counter() - t0
-            best, at = tr.best_accuracy
+            with FederatedTrainer(
+                    loss_fn, params, spec.num_clients, source, cfg, eval_fn,
+                    algo=AlgoConfig(name=algo, eta_l=best_eta,
+                                    eta_g=best_eta,
+                                    hyper=hyper_for(algo))) as tr:
+                hist = tr.run()
+                dt = time.perf_counter() - t0
+                best, at = tr.best_accuracy
             accs = [(r.round, r.test_accuracy) for r in hist
                     if r.test_accuracy is not None]
             thresh = 0.9 * max(a for _, a in accs) if accs else 0.0

@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import get_config
-from repro.core.api import FLConfig, FederatedTrainer
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.baselines import FedDPCHyper
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_dataset
 from repro.models import transformer as tf
@@ -38,6 +38,7 @@ def main():
         rounds = args.rounds or 8
         clients, part, seq, bsz = 8, 4, 64, 4
         docs = 256
+        eta = 0.01      # the smoke config diverges at the full-run LR
     else:
         # ~100M params: 12 layers x d_model 768, vocab 16384
         cfg = get_config("starcoder2-3b").with_(
@@ -46,6 +47,7 @@ def main():
         rounds = args.rounds or 200
         clients, part, seq, bsz = 20, 5, 256, 8
         docs = 2000
+        eta = 0.05
 
     params = tf.init_lm(cfg, jax.random.PRNGKey(0), jnp.float32)
     n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
@@ -76,28 +78,31 @@ def main():
         l = loss_fn(p, {"tokens": holdout[:, :-1], "labels": holdout[:, 1:]})
         return -l                       # "accuracy" slot = -holdout loss
 
-    flcfg = FLConfig(algorithm="feddpc", rounds=rounds,
-                     clients_per_round=part, eta_l=0.05, eta_g=0.05,
-                     lam=1.0, eval_every=10,
-                     # this example prints the holdout NLL inline with its
-                     # round, so keep eval on the blocking path
-                     async_eval=False)
-    tr = FederatedTrainer(loss_fn, params, clients, batch_fn, flcfg, eval_fn)
+    algo = AlgoConfig(name="feddpc", eta_l=eta, eta_g=eta,
+                      hyper=FedDPCHyper(lam=1.0))
+    exec_cfg = ExecConfig(rounds=rounds, clients_per_round=part,
+                          eval_every=10,
+                          # this example prints the holdout NLL inline with
+                          # its round, so keep eval on the blocking path
+                          async_eval=False)
     t0 = time.time()
-    for t in range(rounds):
-        rec = tr.run_round(t)
-        if t % 10 == 0 or t == rounds - 1:
-            ho = f"  holdout_nll={-rec.test_accuracy:.4f}" \
-                if rec.test_accuracy is not None else ""
-            print(f"round {t:4d} loss={rec.train_loss:.4f}{ho} "
-                  f"({rec.seconds:.1f}s)")
-        if t and t % 25 == 0:
-            ckpt.save(args.ckpt_dir, t, {"params": tr.params,
-                                         "server": tr.server_state})
-    print(f"done in {time.time()-t0:.0f}s; "
-          f"loss {tr.history[0].train_loss:.3f} -> "
-          f"{tr.history[-1].train_loss:.3f}")
-    assert tr.history[-1].train_loss < tr.history[0].train_loss
+    with FederatedTrainer(loss_fn, params, clients, batch_fn, exec_cfg,
+                          eval_fn, algo=algo) as tr:
+        for t in range(rounds):
+            rec = tr.run_round(t)
+            if t % 10 == 0 or t == rounds - 1:
+                ho = f"  holdout_nll={-rec.test_accuracy:.4f}" \
+                    if rec.test_accuracy is not None else ""
+                print(f"round {t:4d} loss={rec.train_loss:.4f}{ho} "
+                      f"({rec.seconds:.1f}s)")
+            if t and t % 25 == 0:
+                # full TrainerState: `FederatedTrainer.resume(ckpt_dir,
+                # ...)` continues this run exactly where it stopped
+                tr.save(args.ckpt_dir)
+        print(f"done in {time.time()-t0:.0f}s; "
+              f"loss {tr.history[0].train_loss:.3f} -> "
+              f"{tr.history[-1].train_loss:.3f}")
+        assert tr.history[-1].train_loss < tr.history[0].train_loss
 
 
 if __name__ == "__main__":

@@ -9,9 +9,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import FLConfig, FederatedTrainer
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
 from repro.data.dirichlet import partition_stats
-from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.data.pipeline import StreamingImageSource, \
+    build_federated_image_data
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 
@@ -25,15 +26,17 @@ def run_one(alpha, participation, algo, seed=0):
         test_per_class=15, seed=seed)
     params = init_vision(vc, jax.random.PRNGKey(seed))
     loss_fn = functools.partial(vision_loss_fn, vc)
-    bf = lambda c, t: list(client_batches(data, c, 48, t))
+    source = StreamingImageSource(data, batch_size=48)
     te_x, te_y = jnp.asarray(data.test_images), jnp.asarray(data.test_labels)
     eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
-    cfg = FLConfig(algorithm=algo, rounds=ROUNDS,
-                   clients_per_round=max(1, int(20 * participation)),
-                   eta_l=0.02, eta_g=0.02, eval_every=3, seed=seed)
-    tr = FederatedTrainer(loss_fn, params, 20, bf, cfg, eval_fn)
-    tr.run()
-    best, _ = tr.best_accuracy
+    cfg = ExecConfig(rounds=ROUNDS,
+                     clients_per_round=max(1, int(20 * participation)),
+                     eval_every=3, seed=seed)
+    with FederatedTrainer(loss_fn, params, 20, source, cfg, eval_fn,
+                          algo=AlgoConfig(name=algo, eta_l=0.02,
+                                          eta_g=0.02)) as tr:
+        tr.run()
+        best, _ = tr.best_accuracy
     tv = partition_stats(data.train_labels,
                          data.client_indices)["mean_tv_from_uniform"]
     return best, tv

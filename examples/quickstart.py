@@ -1,4 +1,5 @@
-"""Quickstart: FedDPC vs FedAvg on a heterogeneous federated image task.
+"""Quickstart: FedDPC vs FedAvg on a heterogeneous federated image task,
+on the composable engine surface (DESIGN.md §3).
 
   PYTHONPATH=src python examples/quickstart.py
 
@@ -6,50 +7,74 @@ Trains LeNet5 over 15 federated rounds with Dirichlet(0.2)-partitioned
 synthetic images, 10 of 30 clients participating per round — the paper's
 setting at laptop scale — and shows FedDPC's faster loss reduction.
 
+The pieces compose explicitly:
+  * ``StreamingImageSource`` streams per-client batches into the cohort
+    prefetcher (no pre-materialized lists);
+  * ``UniformSampler`` is the paper's participation model — swap in
+    ``WeightedSampler(source.client_weights(), 10)`` or
+    ``MarkovSampler(30, 10)`` to study other participation regimes;
+  * ``AlgoConfig(name=..., hyper=...)`` resolves the server rule through
+    the algorithm registry (``FedDPCHyper(lam=...)`` etc.);
+  * ``ExecConfig`` carries the execution levers (the fused vectorized
+    round is the default; ``vectorize=False`` restores the serial
+    reference path — see benchmarks/bench_cohort.py for the gap).
+
 Each round runs as ONE fused jit'd program: the 10-client cohort is
-stacked on the client axis and local training is vmapped over it
-(FLConfig(vectorize=False) restores the serial per-client path; see
-benchmarks/bench_cohort.py for the latency gap).
+stacked on the client axis and local training is vmapped over it.
 """
+import argparse
 import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import FLConfig, FederatedTrainer
-from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.baselines import FedDPCHyper
+from repro.core.samplers import UniformSampler
+from repro.data.pipeline import StreamingImageSource, \
+    build_federated_image_data
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 
 
-def main():
+def main(rounds: int = 15, num_clients: int = 30, cohort: int = 10):
     vc = VisionConfig(name="quickstart", family="lenet5", num_classes=10)
     data = build_federated_image_data(
-        num_classes=10, num_clients=30, alpha=0.2,       # heterogeneous!
+        num_classes=10, num_clients=num_clients, alpha=0.2,  # heterogeneous!
         samples_per_class=100, test_per_class=20, seed=0)
     params = init_vision(vc, jax.random.PRNGKey(0))
     loss_fn = functools.partial(vision_loss_fn, vc)
-
-    def batch_fn(client, round_num):
-        return list(client_batches(data, client, 64, round_num))
+    source = StreamingImageSource(data, batch_size=64)
 
     te_x, te_y = jnp.asarray(data.test_images), jnp.asarray(data.test_labels)
     eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
 
-    for algo in ("fedavg", "feddpc"):
-        cfg = FLConfig(algorithm=algo, rounds=15, clients_per_round=10,
-                       eta_l=0.02, eta_g=0.02, lam=1.0, eval_every=5)
-        trainer = FederatedTrainer(loss_fn, params, data.num_clients,
-                                   batch_fn, cfg, eval_fn)
-        hist = trainer.run(verbose=True)
-        best, at = trainer.best_accuracy
-        # median: robust to the rounds that recompile when the minibatch
-        # bucket (_max_batches) grows past its round-0 value
-        sec = sorted(r.seconds for r in hist[1:])[(len(hist) - 1) // 2]
-        print(f"--> {algo}: best test acc {best:.4f} @ round {at}, "
+    for name in ("fedavg", "feddpc"):
+        algo = AlgoConfig(name=name, eta_l=0.02, eta_g=0.02,
+                          hyper=FedDPCHyper(lam=1.0) if name == "feddpc"
+                          else None)
+        cfg = ExecConfig(rounds=rounds, clients_per_round=cohort,
+                         eval_every=5)
+        with FederatedTrainer(loss_fn, params, data.num_clients, source,
+                              cfg, eval_fn, algo=algo,
+                              sampler=UniformSampler(data.num_clients,
+                                                     cohort)) as trainer:
+            hist = trainer.run(verbose=True)
+            best, at = trainer.best_accuracy
+        # median over post-round-0 rounds: robust to the rounds that
+        # recompile when the minibatch bucket grows past its round-0
+        # value (round 0 alone when --rounds 1)
+        timed = hist[1:] or hist
+        sec = sorted(r.seconds for r in timed)[(len(timed) - 1) // 2]
+        print(f"--> {name}: best test acc {best:.4f} @ round {at}, "
               f"final loss {hist[-1].train_loss:.4f}, "
               f"{sec * 1e3:.1f} ms/round (median)\n")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--clients", type=int, default=30)
+    ap.add_argument("--cohort", type=int, default=10)
+    a = ap.parse_args()
+    main(a.rounds, a.clients, a.cohort)

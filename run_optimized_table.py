@@ -28,5 +28,7 @@ run("jamba-1.5-large-398b", "decode_32k")
 run("jamba-1.5-large-398b", "long_500k")
 run("falcon-mamba-7b", "decode_32k")
 
-json.dump(rows, open("/root/repo/results_roofline_optimized.json", "w"), indent=1)
+# context-managed like the trainer-driven scripts: no leaked handles
+with open("/root/repo/results_roofline_optimized.json", "w") as f:
+    json.dump(rows, f, indent=1)
 print(f"{len(rows)} optimized rows written")

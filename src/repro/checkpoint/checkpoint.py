@@ -3,6 +3,19 @@
 Paths are keyed ``step_<n>/state.npz``; pytree structure is recorded via
 jax.tree_util key paths so restore round-trips arbitrary nested
 dict/tuple/list states (FL server state = {params, delta_prev, round}).
+
+Two sidecar channels ride along with the device state (both written
+atomically into the same step dir, both rotated with it):
+
+  * ``aux_arrays`` -> aux.npz — HOST-side numpy state round-tripped with
+    exact dtypes (no jnp casting: e.g. the trainer's MT19937 key vector
+    must come back uint32 and the cached gaussian float64);
+  * ``aux_json``   -> aux.json — JSON-able metadata (round history,
+    sampler state, config echoes).
+
+This is what makes ``FederatedTrainer.save()/resume()`` reproduce an
+uninterrupted run: params/server_state go through the pytree channel,
+RNG/round/schedule/history through the sidecars (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -25,21 +38,71 @@ def _flatten_with_paths(tree):
     return keys, vals, treedef
 
 
-def save(ckpt_dir: str, step: int, state: PyTree, keep: int = 3) -> str:
+def save(ckpt_dir: str, step: int, state: PyTree, keep: int = 3,
+         aux_arrays: Optional[dict] = None, aux_json: Any = None) -> str:
+    """Atomic: everything lands in ``step_<n>.tmp`` first and is renamed
+    into place only after the last byte is written, so a crash mid-save
+    leaves the previous intact steps selectable by ``latest_step`` (the
+    ``step_(\\d+)`` pattern never matches a torn .tmp dir)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+    tmp = path + ".tmp"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
     keys, vals, _ = _flatten_with_paths(state)
     arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
-    np.savez(os.path.join(path, "state.npz"), **arrays)
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    if aux_arrays is not None:
+        np.savez(os.path.join(tmp, "aux.npz"),
+                 **{k: np.asarray(v) for k, v in aux_arrays.items()})
+    if aux_json is not None:
+        with open(os.path.join(tmp, "aux.json"), "w") as f:
+            json.dump(aux_json, f, default=float)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "keys": keys}, f)
+    old = None
+    if os.path.exists(path):        # re-saving the same step: keep the
+        old = path + ".old"         # previous copy until the new one is
+        shutil.rmtree(old, ignore_errors=True)   # fully in place
+        os.rename(path, old)
+    os.rename(tmp, path)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     _rotate(ckpt_dir, keep)
     return path
+
+
+def load_aux(ckpt_dir: str, step: Optional[int] = None):
+    """Load the (aux_arrays, aux_json) sidecars for ``step`` (latest if
+    None). Missing sidecars come back as ({}, None)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    arrays = {}
+    npz_path = os.path.join(path, "aux.npz")
+    if os.path.exists(npz_path):
+        with np.load(npz_path) as z:
+            arrays = {k: z[k] for k in z.files}
+    meta = None
+    json_path = os.path.join(path, "aux.json")
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            meta = json.load(f)
+    return arrays, meta
 
 
 def _steps(ckpt_dir: str):
     if not os.path.isdir(ckpt_dir):
         return []
+    # crash recovery for the re-save window in save(): if the process
+    # died after the old copy was set aside but before the new one was
+    # renamed in, step_N is absent and step_N.old holds the only intact
+    # copy — restore it so the step stays selectable
+    for d in os.listdir(ckpt_dir):
+        if re.fullmatch(r"step_(\d+)\.old", d):
+            bare = os.path.join(ckpt_dir, d[:-4])
+            if not os.path.exists(bare):
+                os.rename(os.path.join(ckpt_dir, d), bare)
     out = []
     for d in os.listdir(ckpt_dir):
         m = re.fullmatch(r"step_(\d+)", d)

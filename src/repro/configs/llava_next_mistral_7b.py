@@ -1,7 +1,7 @@
 """LLaVA-NeXT (Mistral-7B backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf].
 
 VLM: the Mistral-7B language trunk consumes pre-projected anyres patch
-embeddings from the (stubbed) vision tower — see DESIGN.md §6.
+embeddings from the (stubbed) vision tower — see DESIGN.md §7.
 """
 from repro.configs.base import ArchConfig
 

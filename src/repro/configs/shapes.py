@@ -6,7 +6,7 @@ Each shape names a step kind:
   decode_32k  -> serve_decode    (ONE new token against a seq_len cache)
   long_500k   -> serve_decode    (sub-quadratic attention required; dense
                                   archs use the sliding-window variant,
-                                  SSM/hybrid decode natively — DESIGN.md §6)
+                                  SSM/hybrid decode natively — DESIGN.md §7)
 """
 from dataclasses import dataclass
 

@@ -1,3 +1,30 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public surface (DESIGN.md §3): one import point for the composable
+# FL engine — trainer + configs, samplers, data sources, and the
+# algorithm registry with its hyperparameter dataclasses.
+from repro.core.api import (AlgoConfig, ExecConfig, FLConfig,
+                            FederatedTrainer, RoundRecord, TrainerState)
+from repro.core.baselines import (ALGORITHM_NAMES, AdaptiveHyper,
+                                  FedCMHyper, FedDPCHyper, FedDPCMHyper,
+                                  FedExPHyper, FedGAHyper, FedProxHyper,
+                                  ServerAlgo, default_hyper, get_algorithm,
+                                  make_algorithm, register_algorithm)
+from repro.core.datasources import (DataSource, IteratorDataSource,
+                                    ListDataSource, as_data_source)
+from repro.core.samplers import (ClientSampler, CyclicSampler, MarkovSampler,
+                                 UniformSampler, WeightedSampler)
+
+__all__ = [
+    "AlgoConfig", "ExecConfig", "FLConfig", "FederatedTrainer",
+    "RoundRecord", "TrainerState",
+    "ALGORITHM_NAMES", "AdaptiveHyper", "FedCMHyper", "FedDPCHyper",
+    "FedDPCMHyper", "FedExPHyper", "FedGAHyper", "FedProxHyper",
+    "ServerAlgo", "default_hyper", "get_algorithm", "make_algorithm",
+    "register_algorithm",
+    "DataSource", "IteratorDataSource", "ListDataSource", "as_data_source",
+    "ClientSampler", "CyclicSampler", "MarkovSampler", "UniformSampler",
+    "WeightedSampler",
+]

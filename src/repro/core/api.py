@@ -1,15 +1,33 @@
 """FederatedTrainer — simulation-mode FL driver (reproduces the paper).
 
-Orchestrates: client sampling (uniform, partial participation) -> local
-training -> server aggregation (FedDPC or any baseline) -> periodic
-global-model evaluation.
+Composable engine (DESIGN.md §3): the trainer orchestrates four
+pluggable pieces behind one loop —
 
-The default round is **cohort-vectorized** (cfg.vectorize=True): all
+  ClientSampler (core/samplers.py)   WHO participates each round:
+      uniform / weighted-by-data-size / cyclic block / Markov
+      availability; ``sampler.sample(rng, round) -> ids``.
+  DataSource (core/datasources.py)   WHERE batches come from:
+      ``source.client_batches(client, round)``; materialized on the
+      ingest path, so a streaming source (data/pipeline.
+      StreamingImageSource) overlaps disk IO with device compute
+      through the cohort prefetcher.
+  algorithm registry (core/baselines.py)   HOW updates aggregate:
+      ``AlgoConfig(name, hyper=FedDPCHyper(...))`` resolves through
+      ``make_algorithm``; per-algorithm hyperparameter dataclasses
+      replace the old flat lam/mu/... kwargs.
+  ExecConfig                         HOW the loop executes: rounds,
+      cohort size, vectorize/shard/prefetch/async-eval levers.
+
+The flat ``FLConfig`` is kept as a deprecated-but-working shim: passing
+it to ``FederatedTrainer`` warns and splits into (AlgoConfig, ExecConfig)
+with round-for-round identical results.
+
+The default round is **cohort-vectorized** (exec.vectorize=True): all
 clients_per_round clients' padded minibatch stacks are stacked into one
 (K, M, ...) batch pytree and the whole round — local training vmapped
 over the client axis, fused with the server step — runs as ONE jit'd
 program per round (core/round.py ``make_cohort_round``), donating the
-params/server-state buffers. cfg.vectorize=False keeps the historical
+params/server-state buffers. exec.vectorize=False keeps the historical
 serial path (one jit dispatch per client + a host-side stack), retained
 as the reference for the equivalence tests.
 
@@ -18,26 +36,38 @@ grows (grow-once), so the jit cache holds one program per (K, M) bucket
 and later rounds with fewer batches re-use the compiled round.
 
 Scaling levers (DESIGN.md §2), all on by construction or by one flag:
-  cfg.shard_clients  client-axis NamedSharding over the local devices —
+  exec.shard_clients  client-axis NamedSharding over the local devices —
       the (K, M, ...) cohort stack runs data-parallel across the mesh,
-      params/server state replicated (launch/mesh.make_cohort_mesh +
-      sharding/rules.cohort_round_shardings).
-  cfg.prefetch       double-buffered host ingest: a daemon thread stages
-      round t+1's cohort (sampling + batch_fn + stacking into
+      params/server state replicated. K that does not divide the axis is
+      PADDED with masked dummy clients to the next multiple (the server
+      rules exclude them via the derived client validity mask).
+  exec.prefetch       double-buffered host ingest: a daemon thread stages
+      round t+1's cohort (sampling + source reads + stacking into
       preallocated buffers) while round t runs on device, so run_round
       blocks only on device completion (core/client.CohortPrefetcher).
-  cfg.async_eval     eval_fn runs on a params snapshot in a worker
+  exec.async_eval     eval_fn runs on a params snapshot in a worker
       thread, overlapped with the next round; the accuracy folds into
       its RoundRecord at the next eval boundary / finalize() / run() end.
+
+Checkpointing: ``save(dir)`` writes the full ``TrainerState`` (params,
+server state, RNG + sampler state, round, shape bucket, history) through
+checkpoint/checkpoint.py; ``FederatedTrainer.resume(dir, ...)`` restores
+it into a fresh trainer whose continued run reproduces the uninterrupted
+one round for round.
+
+The trainer is a context manager — ``with FederatedTrainer(...) as tr:``
+guarantees the prefetch thread and any pending eval future are released.
 
 Works for any (loss_fn, params, data source): the paper's vision models
 and the framework's LM architectures both plug in through the same API.
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +75,53 @@ import numpy as np
 
 from repro.core import client as client_mod
 from repro.core import round as round_mod
-from repro.core.baselines import ServerAlgo, get_algorithm
+from repro.core.baselines import ServerAlgo, default_hyper, make_algorithm
+from repro.core.datasources import DataSource, as_data_source
+from repro.core.samplers import ClientSampler, UniformSampler
 
 PyTree = Any
 
 
 @dataclass
+class AlgoConfig:
+    """WHAT to optimize: the server rule + its hyperparameters.
+
+    ``hyper`` is the algorithm's registered dataclass (baselines.
+    FedDPCHyper, FedProxHyper, ...) or a kwargs dict for it; None takes
+    registry defaults."""
+    name: str = "feddpc"
+    eta_l: float = 0.1               # client learning rate
+    eta_g: float = 1.0               # server learning rate
+    local_optimizer: str = "sgd"
+    hyper: Any = None
+
+
+@dataclass
+class ExecConfig:
+    """HOW to run it: loop shape + the execution levers of DESIGN.md §2."""
+    rounds: int = 50
+    clients_per_round: int = 10
+    seed: int = 0
+    eval_every: int = 5
+    vectorize: bool = True           # one fused program per round (default)
+    shard_clients: bool = False      # client-axis NamedSharding over devices
+    prefetch: bool = True            # double-buffered host ingest (vectorized)
+    # overlap eval_fn with the next round: accuracy folds into its
+    # RoundRecord when ready (at latest at the next eval boundary /
+    # finalize()/run() end) — read it from history, not from the record
+    # run_round just returned; set False for strictly inline eval
+    async_eval: bool = True
+    # data-shape hints for drivers that build sources from raw datasets
+    # (the trainer itself never reads them)
+    batch_size: int = 256
+    local_epochs: int = 1
+
+
+@dataclass
 class FLConfig:
+    """DEPRECATED flat config — the pre-registry surface. Passing it to
+    ``FederatedTrainer`` warns and splits into (AlgoConfig, ExecConfig);
+    results are round-for-round identical to the split spelling."""
     algorithm: str = "feddpc"
     rounds: int = 50
     clients_per_round: int = 10
@@ -67,14 +137,29 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 5
     use_kernel: bool = False         # route FedDPC epilogue through Pallas
-    vectorize: bool = True           # one fused program per round (default)
-    shard_clients: bool = False      # client-axis NamedSharding over devices
-    prefetch: bool = True            # double-buffered host ingest (vectorized)
-    # overlap eval_fn with the next round: accuracy folds into its
-    # RoundRecord when ready (at latest at the next eval boundary /
-    # finalize()/run() end) — read it from history, not from the record
-    # run_round just returned; set False for strictly inline eval
+    vectorize: bool = True
+    shard_clients: bool = False
+    prefetch: bool = True
     async_eval: bool = True
+
+    def split(self) -> Tuple[AlgoConfig, ExecConfig]:
+        """Map the flat knobs onto the composable configs; the per-
+        algorithm hypers pick up whichever flat field used to feed them."""
+        hyper = default_hyper(
+            self.algorithm, lam=self.lam, use_kernel=self.use_kernel,
+            mu=self.mu, cm_alpha=self.cm_alpha, ga_beta=self.ga_beta)
+        algo = AlgoConfig(name=self.algorithm, eta_l=self.eta_l,
+                          eta_g=self.eta_g,
+                          local_optimizer=self.local_optimizer, hyper=hyper)
+        exe = ExecConfig(rounds=self.rounds,
+                         clients_per_round=self.clients_per_round,
+                         seed=self.seed, eval_every=self.eval_every,
+                         vectorize=self.vectorize,
+                         shard_clients=self.shard_clients,
+                         prefetch=self.prefetch, async_eval=self.async_eval,
+                         batch_size=self.batch_size,
+                         local_epochs=self.local_epochs)
+        return algo, exe
 
 
 @dataclass
@@ -84,82 +169,152 @@ class RoundRecord:
     test_accuracy: Optional[float] = None
     seconds: float = 0.0
     # host time this round spent blocked on cohort ingest (sampling +
-    # batch_fn + stacking); with prefetch on it is just the staging wait
+    # source reads + stacking); with prefetch on it is just the staging wait
     ingest_seconds: float = 0.0
     diagnostics: Dict[str, float] = field(default_factory=dict)
 
 
+@dataclass
+class TrainerState:
+    """Everything needed to continue a run exactly where it stopped:
+    the checkpoint unit of ``FederatedTrainer.save()/resume()``.
+
+    ``round`` is the NEXT round to run; ``rng_state`` / ``sampler_state``
+    are the values they held BEFORE that round's cohort was sampled (the
+    prefetcher stages ahead, so the trainer snapshots them at sampling
+    time — resuming re-draws the staged-but-unconsumed rounds exactly)."""
+    params: PyTree
+    server_state: PyTree
+    round: int
+    max_batches: Optional[int]
+    rng_state: tuple                     # np.random.RandomState.get_state()
+    sampler_state: Dict
+    schedule: List[np.ndarray]
+    history: List[RoundRecord]
+
+
+def _coerce_cfg(cfg, algo) -> Tuple[AlgoConfig, ExecConfig]:
+    """Resolve the (cfg, algo) pair __init__ and resume() both accept:
+    a deprecated flat FLConfig warns (attributed to the END caller,
+    stacklevel=3 — the CI gate errors on warnings raised FROM repro.*)
+    and splits; an ExecConfig pairs with ``algo`` or defaults."""
+    if isinstance(cfg, FLConfig):
+        if algo is not None:
+            raise ValueError("pass either a flat FLConfig or "
+                             "algo=AlgoConfig(...), not both")
+        warnings.warn(
+            "FLConfig is deprecated: pass ExecConfig(...) plus "
+            "algo=AlgoConfig(name=..., hyper=...) (see DESIGN.md §3 "
+            "for the migration table)", DeprecationWarning, stacklevel=3)
+        return cfg.split()
+    if cfg is None or isinstance(cfg, ExecConfig):
+        return (algo if algo is not None else AlgoConfig(),
+                cfg if cfg is not None else ExecConfig())
+    raise TypeError(f"cfg must be ExecConfig or FLConfig, "
+                    f"got {type(cfg).__name__}")
+
+
 class FederatedTrainer:
-    """loss_fn(params, batch) -> scalar; batches come from
-    ``batch_fn(client, round)`` -> list of batch pytrees (numpy).
-    eval_fn(params) -> float accuracy (optional)."""
+    """loss_fn(params, batch) -> scalar; eval_fn(params) -> accuracy.
+
+    ``data`` is a DataSource (or a legacy ``batch_fn(client, round) ->
+    list`` callable, auto-wrapped in ListDataSource).  ``cfg`` is an
+    ExecConfig (pair it with ``algo=AlgoConfig(...)``) or a deprecated
+    flat FLConfig.  ``sampler`` defaults to the paper's uniform-without-
+    replacement participation."""
 
     def __init__(self, loss_fn: Callable, params: PyTree, num_clients: int,
-                 batch_fn: Callable[[int, int], List[dict]],
-                 cfg: FLConfig,
-                 eval_fn: Optional[Callable[[PyTree], float]] = None):
-        self.cfg = cfg
+                 data, cfg=None,
+                 eval_fn: Optional[Callable[[PyTree], float]] = None, *,
+                 algo: Optional[AlgoConfig] = None,
+                 sampler: Optional[ClientSampler] = None):
+        algo_cfg, exec_cfg = _coerce_cfg(cfg, algo)
+        self.cfg = exec_cfg                   # execution knobs
+        self.algo_cfg = algo_cfg
         # private copy: the fused round donates the params buffers, and the
         # caller's tree must stay valid (sweeps reuse one init across runs)
         self.params = jax.tree.map(lambda x: jnp.array(x, copy=True), params)
         self.num_clients = num_clients
-        self.batch_fn = batch_fn
+        self.source: DataSource = as_data_source(data)
         self.eval_fn = eval_fn
-        self.algo: ServerAlgo = get_algorithm(
-            cfg.algorithm, lam=cfg.lam, use_kernel=cfg.use_kernel)
+        self.sampler: ClientSampler = sampler if sampler is not None else \
+            UniformSampler(num_clients, exec_cfg.clients_per_round)
+        self.algo: ServerAlgo = make_algorithm(algo_cfg.name, algo_cfg.hyper)
         self.server_state = self.algo.init(self.params, num_clients)
-        self.mesh = self._build_mesh() if cfg.shard_clients else None
+        self.mesh = self._build_mesh() if exec_cfg.shard_clients else None
+        # uneven cohorts on the sharded path: pad K up to the next multiple
+        # of the client axis with masked dummy clients (DESIGN.md §2)
+        k = exec_cfg.clients_per_round
+        ndev = 1 if self.mesh is None else int(self.mesh.devices.size)
+        self._pad_to = -(-k // ndev) * ndev
         # fused path: local training + server step, one program per round
         self._cohort_round = round_mod.make_cohort_round(
-            loss_fn, self.algo, cfg.eta_l, cfg.eta_g,
-            optimizer=cfg.local_optimizer, mu=cfg.mu,
-            cm_alpha=cfg.cm_alpha, ga_beta=cfg.ga_beta, mesh=self.mesh)
+            loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
+            optimizer=algo_cfg.local_optimizer, mesh=self.mesh,
+            pad_clients=self._pad_to > k)
         if self.mesh is not None:
             # pre-place replicated so the first round's donation matches
             from jax.sharding import NamedSharding, PartitionSpec as P
             rep = NamedSharding(self.mesh, P())
             self.params = jax.device_put(self.params, rep)
             self.server_state = jax.device_put(self.server_state, rep)
-        # serial reference path (cfg.vectorize=False): per-client dispatch
+        # serial reference path (exec.vectorize=False): per-client dispatch
+        from repro.core.baselines import client_kwargs
         self.local_update = client_mod.make_local_update(
-            loss_fn, cfg.eta_l, variant=self.algo.client_variant,
-            optimizer=cfg.local_optimizer, mu=cfg.mu,
-            cm_alpha=cfg.cm_alpha, ga_beta=cfg.ga_beta)
+            loss_fn, algo_cfg.eta_l, variant=self.algo.client_variant,
+            optimizer=algo_cfg.local_optimizer, **client_kwargs(self.algo))
         self._server_step = jax.jit(
             lambda st, p, d, ids: self.algo.step(
-                st, p, d, ids, cfg.eta_g, 0))
-        self.rng = np.random.RandomState(cfg.seed)
+                st, p, d, ids, algo_cfg.eta_g, 0))
+        self.rng = np.random.RandomState(exec_cfg.seed)
         self.history: List[RoundRecord] = []
         self.schedule: List[np.ndarray] = []     # sampled cohort per round
         self._max_batches: Optional[int] = None
+        self._start_round = 0                    # advanced by restore()
         self._prefetcher = None                  # built on first round
         self._pending_eval = None                # (RoundRecord, Future)
-        self._async_eval = eval_fn is not None and cfg.async_eval
+        self._async_eval = eval_fn is not None and exec_cfg.async_eval
+        # sampling-time snapshots for save(): the prefetcher draws the RNG
+        # ahead of consumed rounds, so each round's pre-draw state is
+        # captured under this lock (see save())
+        self._sample_lock = threading.Lock()
+        self._round_caps: Dict[int, dict] = {}
 
     # ---- internals ----
 
     def _build_mesh(self):
         from repro.launch import mesh as mesh_mod
-        mesh = mesh_mod.make_cohort_mesh()
-        from repro.sharding.rules import clients_divisible
-        if not clients_divisible(mesh, self.cfg.clients_per_round):
-            import warnings
-            warnings.warn(
-                f"clients_per_round={self.cfg.clients_per_round} is not a "
-                f"multiple of the {int(mesh.devices.size)}-device client "
-                "axis; falling back to the single-device cohort round")
-            return None
-        return mesh
+        return mesh_mod.make_cohort_mesh()
 
-    def _sample_clients(self) -> np.ndarray:
-        clients = self.rng.choice(self.num_clients,
-                                  size=self.cfg.clients_per_round,
-                                  replace=False)
-        self.schedule.append(clients)
+    def _sample_clients(self, t: int) -> np.ndarray:
+        with self._sample_lock:
+            self._round_caps[t] = {
+                "rng": self.rng.get_state(),
+                "sampler": self.sampler.state_dict(),
+                "max_batches": self._max_batches,
+            }
+            for old in [r for r in self._round_caps if r < t - 4]:
+                del self._round_caps[old]
+            clients = np.asarray(self.sampler.sample(self.rng, t))
+            k = self.cfg.clients_per_round
+            if clients.shape != (k,):
+                raise ValueError(
+                    f"sampler returned shape {clients.shape}; the fused "
+                    f"round needs exactly clients_per_round={k} ids")
+            if clients.min() < 0 or clients.max() >= self.num_clients:
+                raise ValueError(f"sampler returned out-of-range ids "
+                                 f"(num_clients={self.num_clients})")
+            if len(np.unique(clients)) != k:
+                # duplicates would double-count a delta in every mean and
+                # desync FedVARP's table scatter from its correction term
+                raise ValueError(f"sampler returned duplicate client ids: "
+                                 f"{clients.tolist()}")
+            self.schedule.append(clients)
         return clients
 
     def _cohort_lists(self, clients: Sequence[int], t: int):
-        per_client = [self.batch_fn(int(c), t) for c in clients]
+        per_client = [list(self.source.client_batches(int(c), t))
+                      for c in clients]
         mx = max(len(b) for b in per_client)
         if self._max_batches is None or mx > self._max_batches:
             self._max_batches = mx          # grow-once; keeps jit cache small
@@ -169,14 +324,22 @@ class FederatedTrainer:
         return [client_mod.stack_batches(b, self._max_batches)
                 for b in self._cohort_lists(clients, t)]
 
+    def _pad_ids(self, clients: np.ndarray) -> jnp.ndarray:
+        ids = np.asarray(clients, np.int32)
+        if self._pad_to > ids.shape[0]:
+            # out-of-range sentinel ids: FedVARP's scatter DROPS them
+            ids = np.concatenate([ids, np.full(self._pad_to - ids.shape[0],
+                                               self.num_clients, np.int32)])
+        return jnp.asarray(ids)
+
     def _produce_cohort(self, t: int, slot: dict):
         """Prefetch-thread body: sample + fetch + stack round t's cohort
         into the slot's preallocated buffers (round order preserves the
         RNG-driven schedule exactly)."""
-        clients = self._sample_clients()
+        clients = self._sample_clients(t)
         lists = self._cohort_lists(clients, t)
         batches, masks = client_mod.stack_cohort_into(
-            lists, self._max_batches, slot)
+            lists, self._max_batches, slot, pad_to=self._pad_to)
         return clients, batches, masks
 
     def _run_round_vectorized(self, t: int):
@@ -188,17 +351,19 @@ class FederatedTrainer:
             (clients, batches, masks), slot = self._prefetcher.get(t)
         else:
             slot = None
-            clients = self._sample_clients()
+            clients = self._sample_clients(t)
             batches, masks = client_mod.stack_cohort(
-                self._cohort_lists(clients, t), self._max_batches)
+                self._cohort_lists(clients, t), self._max_batches,
+                pad_to=self._pad_to)
         ingest = time.perf_counter() - tic
         try:
-            ids = jnp.asarray(clients, jnp.int32)
+            ids = self._pad_ids(clients)
             self.params, self.server_state, losses, diag = self._cohort_round(
                 self.server_state, self.params, batches, masks, ids)
             # syncs on the round's result: after this the device is done
-            # with the inputs and the slot is reusable for t+2
-            train_loss = float(jnp.mean(losses))
+            # with the inputs and the slot is reusable for t+2; dummy
+            # padded clients sit past the real K and report loss 0
+            train_loss = float(jnp.mean(losses[:len(clients)]))
         finally:
             # released on error too — leaking the slot would deadlock the
             # NEXT run_round inside the prefetcher instead of erroring
@@ -207,7 +372,7 @@ class FederatedTrainer:
         return train_loss, diag, ingest
 
     def _run_round_serial(self, t: int):
-        clients = self._sample_clients()
+        clients = self._sample_clients(t)
         tic = time.perf_counter()
         round_batches = self._round_batches(clients, t)
         ingest = time.perf_counter() - tic
@@ -257,7 +422,6 @@ class FederatedTrainer:
                 # finalize()/run() end). One short-lived daemon thread per
                 # eval — sweeps build many trainers and a pooled worker
                 # per trainer would accumulate idle threads.
-                import threading
                 from concurrent.futures import Future
                 snap = jax.tree.map(lambda x: jnp.array(x, copy=True),
                                     self.params)
@@ -282,12 +446,22 @@ class FederatedTrainer:
         self._resolve_pending_eval()
 
     def close(self):
+        """Release trainer-owned resources (prefetch thread, pending eval
+        future). The data source is CALLER-owned — sweeps share one
+        source across trainers — and is never closed here."""
         self.finalize()
         if self._prefetcher is not None:
             self._prefetcher.stop()
 
+    def __enter__(self) -> "FederatedTrainer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
     def run(self, verbose: bool = False) -> List[RoundRecord]:
-        for t in range(self.cfg.rounds):
+        for t in range(self._start_round, self.cfg.rounds):
             rec = self.run_round(t)
             if verbose:
                 # a human is watching: land this round's async eval now so
@@ -295,10 +469,16 @@ class FederatedTrainer:
                 self._resolve_pending_eval()
                 acc = ("" if rec.test_accuracy is None
                        else f"  acc={rec.test_accuracy:.4f}")
-                print(f"[{self.cfg.algorithm}] round {t:4d} "
+                print(f"[{self.algo.name}] round {t:4d} "
                       f"loss={rec.train_loss:.4f}{acc}")
         self.finalize()
         return self.history
+
+    @property
+    def start_round(self) -> int:
+        """First round ``run()`` will execute — 0 for a fresh trainer,
+        the checkpointed next round after ``restore()``/``resume()``."""
+        return self._start_round
 
     @property
     def best_accuracy(self):
@@ -306,3 +486,171 @@ class FederatedTrainer:
         accs = [(r.test_accuracy, r.round) for r in self.history
                 if r.test_accuracy is not None]
         return max(accs) if accs else (None, None)
+
+    # ---- checkpointing (TrainerState <-> checkpoint/checkpoint.py) ----
+
+    def state(self) -> TrainerState:
+        """Snapshot the checkpoint unit. The prefetcher may have staged
+        (and therefore sampled) rounds beyond the last consumed one; the
+        snapshot rolls RNG/sampler/schedule back to the next UNCONSUMED
+        round using the per-round captures taken at sampling time, so a
+        resumed trainer re-draws the staged rounds identically."""
+        self.finalize()
+        with self._sample_lock:
+            # history carries every consumed round (including restored
+            # ones after a resume), so its length IS the next round —
+            # provided rounds were consumed sequentially; reject anything
+            # else loudly instead of writing a silently-wrong checkpoint
+            next_round = len(self.history)
+            if [r.round for r in self.history] != list(range(next_round)):
+                raise ValueError(
+                    "save() requires rounds to have been run sequentially "
+                    "from 0 (run_round(0), run_round(1), ...); history "
+                    f"holds rounds {[r.round for r in self.history]}")
+            cap = self._round_caps.get(next_round)
+            if cap is None:     # nothing staged past the consumed rounds
+                cap = {"rng": self.rng.get_state(),
+                       "sampler": self.sampler.state_dict(),
+                       "max_batches": self._max_batches}
+            schedule = [np.asarray(c) for c in self.schedule[:next_round]]
+        return TrainerState(
+            params=self.params, server_state=self.server_state,
+            round=next_round, max_batches=cap["max_batches"],
+            rng_state=cap["rng"], sampler_state=cap["sampler"],
+            schedule=schedule, history=list(self.history))
+
+    def _algo_echo(self) -> dict:
+        """JSON echo of everything that parameterizes the compiled round
+        — a resume with ANY of these changed cannot continue the run."""
+        return {
+            "eta_l": self.algo_cfg.eta_l,
+            "eta_g": self.algo_cfg.eta_g,
+            "local_optimizer": self.algo_cfg.local_optimizer,
+            "hyper": {"class": type(self.algo.hyper).__name__,
+                      **asdict(self.algo.hyper)},
+        }
+
+    def save(self, ckpt_dir: str, keep: int = 3) -> str:
+        """Write the full TrainerState; ``resume(ckpt_dir, ...)`` then
+        reproduces the uninterrupted run exactly."""
+        from repro.checkpoint import checkpoint as ckpt
+        st = self.state()
+        rng = st.rng_state
+        k = self.cfg.clients_per_round
+        aux_arrays = {
+            "rng_keys": np.asarray(rng[1], np.uint32),
+            "rng_pos": np.int64(rng[2]),
+            "rng_has_gauss": np.int64(rng[3]),
+            "rng_cached": np.float64(rng[4]),
+            "round": np.int64(st.round),
+            "max_batches": np.int64(-1 if st.max_batches is None
+                                    else st.max_batches),
+            "schedule": (np.stack(st.schedule).astype(np.int64)
+                         if st.schedule else np.zeros((0, k), np.int64)),
+        }
+        aux_json = {
+            "format": 1,
+            "algorithm": self.algo.name,
+            "algo_config": self._algo_echo(),
+            "num_clients": self.num_clients,
+            "clients_per_round": k,
+            "sampler": {"class": type(self.sampler).__name__,
+                        "config": self.sampler.config_dict(),
+                        "state": st.sampler_state},
+            "history": [asdict(r) for r in st.history],
+        }
+        return ckpt.save(ckpt_dir, st.round,
+                         {"params": st.params,
+                          "server_state": st.server_state},
+                         keep=keep, aux_arrays=aux_arrays, aux_json=aux_json)
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None
+                ) -> "FederatedTrainer":
+        """Load a TrainerState saved by ``save`` into this (freshly
+        constructed) trainer; ``run()`` then continues from the saved
+        round. Configs/loss_fn/source are NOT checkpointed — construct
+        the trainer exactly as the original run did."""
+        if self._prefetcher is not None or self.history or self.schedule:
+            # a used trainer has a live prefetch thread drawing this RNG
+            # and staged rounds past the restore point — rewinding it in
+            # place would race and/or desync; restore only into a fresh
+            # construction (what resume() does)
+            raise RuntimeError(
+                "restore() requires a freshly constructed trainer that "
+                "has not run any rounds — use FederatedTrainer.resume()")
+        from repro.checkpoint import checkpoint as ckpt
+        like = {"params": self.params, "server_state": self.server_state}
+        state = ckpt.restore(ckpt_dir, like, step=step)
+        arrays, meta = ckpt.load_aux(ckpt_dir, step)
+        if meta is None or "rng_keys" not in arrays:
+            raise ValueError(f"{ckpt_dir} has no TrainerState sidecars — "
+                             "was it written by FederatedTrainer.save()?")
+        if meta["algorithm"] != self.algo.name:
+            raise ValueError(f"checkpoint is for {meta['algorithm']!r}, "
+                             f"trainer runs {self.algo.name!r}")
+        for field_name, mine in (("num_clients", self.num_clients),
+                                 ("clients_per_round",
+                                  self.cfg.clients_per_round),
+                                 ("algo_config", self._algo_echo())):
+            saved = meta.get(field_name)
+            if saved is not None and saved != mine:
+                # a different population / cohort size / algorithm
+                # parameterization cannot continue the run — fail here,
+                # not rounds later (or silently diverge)
+                raise ValueError(
+                    f"checkpoint has {field_name}={saved}, trainer was "
+                    f"built with {mine} — resume with the original "
+                    "configuration")
+        saved_sampler = meta["sampler"].get("class")
+        if saved_sampler != type(self.sampler).__name__:
+            # a mismatched sampler would silently discard checkpointed
+            # sampler state (e.g. the Markov availability chain) and
+            # break the bitwise-resume guarantee
+            raise ValueError(
+                f"checkpoint was sampled by {saved_sampler}, trainer uses "
+                f"{type(self.sampler).__name__} — resume with the same "
+                "sampler the original run used")
+        saved_cfg = meta["sampler"].get("config")
+        if saved_cfg is not None and saved_cfg != self.sampler.config_dict():
+            # same class, different construction (Markov transition
+            # probabilities, weight vector, ...) — also diverges silently
+            raise ValueError(
+                f"checkpoint sampler was built as {saved_cfg}, trainer's "
+                f"is {self.sampler.config_dict()} — resume with the "
+                "original sampler parameters")
+        self.params = state["params"]
+        self.server_state = state["server_state"]
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(self.mesh, P())
+            self.params = jax.device_put(self.params, rep)
+            self.server_state = jax.device_put(self.server_state, rep)
+        self.rng.set_state(("MT19937",
+                            np.asarray(arrays["rng_keys"], np.uint32),
+                            int(arrays["rng_pos"]),
+                            int(arrays["rng_has_gauss"]),
+                            float(arrays["rng_cached"])))
+        mb = int(arrays["max_batches"])
+        self._max_batches = None if mb < 0 else mb
+        self._start_round = int(arrays["round"])
+        self.schedule = [row for row in np.asarray(arrays["schedule"])]
+        self.history = [RoundRecord(**r) for r in meta["history"]]
+        if meta["sampler"].get("state"):
+            self.sampler.load_state_dict(meta["sampler"]["state"])
+        self._round_caps.clear()
+        return self
+
+    @classmethod
+    def resume(cls, ckpt_dir: str, loss_fn: Callable, params: PyTree,
+               num_clients: int, data, cfg=None, eval_fn=None, *,
+               algo: Optional[AlgoConfig] = None,
+               sampler: Optional[ClientSampler] = None,
+               step: Optional[int] = None) -> "FederatedTrainer":
+        """Fresh-process resume: construct the trainer exactly as the
+        original run did, then restore the saved TrainerState. ``run()``
+        continues from the checkpointed round and reproduces the
+        uninterrupted run bit for bit."""
+        algo, cfg = _coerce_cfg(cfg, algo)
+        tr = cls(loss_fn, params, num_clients, data, cfg, eval_fn,
+                 algo=algo, sampler=sampler)
+        return tr.restore(ckpt_dir, step=step)

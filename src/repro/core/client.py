@@ -153,18 +153,34 @@ def stack_batches(batch_list, max_batches: int):
     return stacked, mask
 
 
-def stack_cohort(per_client_batches, max_batches: int):
+def stack_cohort(per_client_batches, max_batches: int, pad_to: int = None):
     """Stack K clients' batch lists into one (K, M, ...) pytree + (K, M)
     mask — the input of ``make_cohort_local_update``. M = max_batches is
-    the shape bucket; ragged clients pad with masked repeats."""
+    the shape bucket; ragged clients pad with masked repeats.
+
+    ``pad_to`` > K appends DUMMY clients (copies of the last real row
+    with an all-False mask row) so uneven cohorts shard over a client
+    axis whose size does not divide K (DESIGN.md §2): a fully-masked
+    client runs a no-op local scan (delta == 0) and the server rules
+    exclude it from every mean via the derived client validity mask.
+    """
     import numpy as np
     pairs = [stack_batches(b, max_batches) for b in per_client_batches]
     batches = jax.tree.map(lambda *xs: np.stack(xs), *[p[0] for p in pairs])
     masks = np.stack([p[1] for p in pairs])
+    k = len(per_client_batches)
+    if pad_to is not None and pad_to > k:
+        pad = pad_to - k
+        batches = jax.tree.map(
+            lambda x: np.concatenate(
+                [x, np.repeat(x[-1:], pad, axis=0)], axis=0), batches)
+        masks = np.concatenate(
+            [masks, np.zeros((pad,) + masks.shape[1:], bool)], axis=0)
     return batches, masks
 
 
-def stack_cohort_into(per_client_batches, max_batches: int, slot: dict):
+def stack_cohort_into(per_client_batches, max_batches: int, slot: dict,
+                      pad_to: int = None):
     """``stack_cohort`` into PREALLOCATED host buffers (DESIGN.md §2).
 
     ``slot`` is a mutable dict owned by the caller (one per prefetch
@@ -174,16 +190,20 @@ def stack_cohort_into(per_client_batches, max_batches: int, slot: dict):
     so the per-round np.stack allocations disappear from the ingest path.
     Returns (batches_pytree, mask) views backed by the slot's buffers;
     they stay valid until the slot is refilled.
+
+    ``pad_to`` appends dummy clients exactly as ``stack_cohort`` does
+    (copies of the last real row, all-False mask rows).
     """
     import numpy as np
     k, m = len(per_client_batches), max_batches
+    kp = k if pad_to is None else max(pad_to, k)
     leaves0, treedef = jax.tree_util.tree_flatten(per_client_batches[0][0])
     shapes = tuple((np.shape(x), np.asarray(x).dtype) for x in leaves0)
-    key = (k, m, treedef, shapes)
+    key = (kp, m, treedef, shapes)
     if slot.get("key") != key:
         slot["key"] = key
-        slot["bufs"] = [np.empty((k, m) + s, dt) for s, dt in shapes]
-        slot["mask"] = np.empty((k, m), bool)
+        slot["bufs"] = [np.empty((kp, m) + s, dt) for s, dt in shapes]
+        slot["mask"] = np.empty((kp, m), bool)
     bufs, mask = slot["bufs"], slot["mask"]
     for j, blist in enumerate(per_client_batches):
         n = len(blist)
@@ -195,6 +215,10 @@ def stack_cohort_into(per_client_batches, max_batches: int, slot: dict):
             for buf in bufs:
                 buf[j, n:] = buf[j, n - 1]
         mask[j] = np.arange(m) < n
+    for j in range(k, kp):              # dummy clients: masked copies
+        for buf in bufs:
+            buf[j] = buf[k - 1]
+        mask[j] = False
     return jax.tree_util.tree_unflatten(treedef, bufs), mask
 
 
@@ -247,8 +271,8 @@ class CohortPrefetcher:
         if t >= self._end:
             raise RuntimeError(
                 f"round {t} is past the configured horizon ({self._end} "
-                "rounds were prefetched); raise FLConfig.rounds or set "
-                "FLConfig.prefetch=False to run extra rounds")
+                "rounds were prefetched); raise ExecConfig.rounds or set "
+                "ExecConfig.prefetch=False to run extra rounds")
         while True:
             try:
                 got, item, slot = self._ready.get(timeout=1.0)
@@ -266,7 +290,7 @@ class CohortPrefetcher:
                         raise RuntimeError(
                             f"prefetch producer exited (rounds consumed "
                             f"or stopped) — round {t} was never staged; "
-                            "set FLConfig.prefetch=False to re-run rounds"
+                            "set ExecConfig.prefetch=False to re-run rounds"
                         ) from self._exc
         if got is None:                 # producer-failure sentinel; a round
             # staged BEFORE the failure is still valid and returned above.
@@ -277,7 +301,7 @@ class CohortPrefetcher:
             raise RuntimeError(
                 f"prefetched round {got} but round {t} was requested — "
                 "prefetching requires run_round(t) in sequential order "
-                "(set FLConfig.prefetch=False for out-of-order rounds)")
+                "(set ExecConfig.prefetch=False for out-of-order rounds)")
         return item, slot
 
     def release(self, slot: dict):

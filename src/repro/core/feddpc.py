@@ -29,12 +29,21 @@ def init_state(params: PyTree) -> Dict[str, PyTree]:
 
 
 def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
-                eta_g: float, lam: float = 1.0, use_kernel: bool = False
+                eta_g: float, lam: float = 1.0, use_kernel: bool = False,
+                client_mask=None
                 ) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jnp.ndarray]]:
     """One FedDPC aggregation.
 
     deltas: client-stacked pytree — every leaf has leading axis k'
     (participating clients), leaf[j] = Delta_{jt} = (w_{t-1} - w_{jt})/eta_l.
+
+    client_mask (k',) bool marks the REAL rows when the sharded path pads
+    the cohort (DESIGN.md §2).  The per-client transform
+    scale_j * (d_j - coef_j * prev) is linear in (scale_j, coef_j), so
+    masking folds EXACTLY into the reduction-pass scalars: dummy rows get
+    scale=coef=0 and the survivors renormalize by k'/n_valid — the
+    unchanged mean-over-k' epilogue (jnp or Pallas) then computes the
+    mean over real clients only, with no kernel changes.
 
     Returns (new_params, new_state, diagnostics).
     """
@@ -43,6 +52,14 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     # reduction pass: per-client scalars (4 dots each, vmapped over K)
     coefs, scales, diag = jax.vmap(
         lambda d: proj.projection_scalars(d, delta_prev, lam))(deltas)
+    if client_mask is None:
+        diag_mean = jnp.mean
+    else:
+        mf = client_mask.astype(jnp.float32)
+        nvalid = jnp.maximum(mf.sum(), 1.0)
+        coefs = coefs * mf
+        scales = scales * mf * (mf.shape[0] / nvalid)
+        diag_mean = lambda x: jnp.sum(x * mf) / nvalid
     if use_kernel:
         # epilogue pass: residual+scale, client-mean (Eq. 4) AND the param
         # update fused into ONE grid over the stacked deltas
@@ -66,10 +83,10 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
             params, delta_t)
     new_state = {"delta_prev": delta_t}
     diagnostics = {
-        "mean_coef": diag["coef"].mean(),
-        "mean_cos_angle": diag["cos_angle"].mean(),
-        "mean_scale": diag["scale"].mean(),
-        "mean_norm_delta": diag["norm_delta"].mean(),
+        "mean_coef": diag_mean(diag["coef"]),
+        "mean_cos_angle": diag_mean(diag["cos_angle"]),
+        "mean_scale": diag_mean(diag["scale"]),
+        "mean_norm_delta": diag_mean(diag["norm_delta"]),
         "norm_global_update": proj.tree_norm(delta_t),
         # orthogonality invariant: <Delta_t, Delta_{t-1}> ~ 0 after round 1
         "global_dot_prev": proj.tree_vdot(delta_t, delta_prev),
@@ -77,7 +94,8 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     return new_params, new_state, diagnostics
 
 
-def server_step_projection_only(state, params, deltas, eta_g
+def server_step_projection_only(state, params, deltas, eta_g,
+                                client_mask=None
                                 ) -> Tuple[PyTree, Dict, Dict]:
     """Ablation: orthogonal projection WITHOUT adaptive scaling (paper Fig 6,
     blue line). Equivalent to lam-scaling with scale == 1."""
@@ -91,8 +109,7 @@ def server_step_projection_only(state, params, deltas, eta_g
             d, delta_prev)
 
     resid = jax.vmap(one)(deltas)
-    delta_t = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0),
-                           resid)
+    delta_t = proj.masked_client_mean(resid, client_mask)
     new_params = jax.tree.map(
         lambda w, d: (w.astype(jnp.float32) - eta_g * d).astype(w.dtype),
         params, delta_t)

@@ -72,6 +72,25 @@ def tree_zeros_like(a: PyTree) -> PyTree:
     return jax.tree.map(jnp.zeros_like, a)
 
 
+def masked_client_mean(tree: PyTree, client_mask=None) -> PyTree:
+    """f32 mean over the leading (client) axis of every leaf; with
+    ``client_mask`` (K,) bool the mean runs over the True rows only —
+    padded dummy clients (DESIGN.md §2) contribute zero to the numerator
+    AND the denominator. The single implementation every server rule's
+    aggregation goes through."""
+    if client_mask is None:
+        return jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree)
+    mf = client_mask.astype(jnp.float32)
+    nvalid = jnp.maximum(mf.sum(), 1.0)
+
+    def one(x):
+        w = mf.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0) / nvalid
+
+    return jax.tree.map(one, tree)
+
+
 def project_coefficient(delta: PyTree, delta_prev: PyTree) -> jnp.ndarray:
     """coef such that Proj_{prev}(delta) = coef * prev. Zero-safe: when
     ||prev|| == 0 (round 1, Delta_0 -> 0) the projection is 0."""

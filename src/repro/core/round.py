@@ -32,17 +32,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import client as client_mod
-from repro.core.baselines import ServerAlgo, get_algorithm
+from repro.core.baselines import ServerAlgo, client_kwargs, make_algorithm
 
 PyTree = Any
 
 
 def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       algo: ServerAlgo, eta_l: float, eta_g: float, *,
-                      optimizer: str = "sgd", mu: float = 0.01,
-                      cm_alpha: float = 0.1, ga_beta: float = 0.1,
+                      optimizer: str = "sgd",
                       jit: bool = True, donate: bool = True,
-                      mesh=None, client_axis: str = "clients"):
+                      mesh=None, client_axis: str = "clients",
+                      pad_clients: bool = False):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids) -> (new_params, new_server_state, losses, diag).
 
@@ -64,17 +64,29 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     gets a client-axis NamedSharding and the round runs data-parallel
     across the mesh devices with params/server-state replicated
     (sharding/rules.cohort_round_shardings — DESIGN.md §2). K should be a
-    multiple of the axis size (GSPMD would pad uneven shards).
+    multiple of the axis size; with ``pad_clients=True`` the caller pads
+    the cohort stack itself (dummy rows with all-False mask rows and
+    out-of-range client_ids) and the round derives a per-client validity
+    mask from ``masks`` so dummy clients stay out of every server mean
+    and out of FedVARP's table.
+
+    The per-variant local-training knobs (mu / cm_alpha / ga_beta) come
+    from the algorithm's own hyperparameters (``algo.client_hparams``);
+    anything the algorithm leaves unset keeps the local-update builder's
+    defaults.
     """
     local = client_mod.make_cohort_local_update(
         loss_fn, eta_l, variant=algo.client_variant, optimizer=optimizer,
-        mu=mu, cm_alpha=cm_alpha, ga_beta=ga_beta)
+        **client_kwargs(algo))
 
     def cohort_round(server_state, params, batches, masks, client_ids):
         extra = algo.client_extra(server_state)
         deltas, losses = local(params, batches, masks, extra)
+        cm = (masks.any(axis=1)
+              if pad_clients and masks is not None else None)
         new_params, new_state, diag = algo.step(
-            server_state, params, deltas, client_ids, eta_g, 0)
+            server_state, params, deltas, client_ids, eta_g, 0,
+            client_mask=cm)
         return new_params, new_state, losses, diag
 
     if not jit:
@@ -111,7 +123,8 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         (batches sharded on K over ``client_axis``, params/delta_prev
         replicated) — the unified sharded round of DESIGN.md §2.
     """
-    algo = get_algorithm(algorithm, lam=lam)
+    hyper = {"lam": lam} if algorithm in ("feddpc", "feddpc_m") else None
+    algo = make_algorithm(algorithm, hyper)
     probe = algo.init({"w": jnp.zeros(())}, 1)
     if set(probe) != {"delta_prev"}:
         raise ValueError(

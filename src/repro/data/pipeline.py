@@ -4,6 +4,12 @@ Mirrors the paper's setup: each client holds a Dirichlet-skewed shard;
 every local epoch shuffles with a round-dependent seed; batches are padded
 by wrap-around so a client with fewer samples than the batch size still
 yields one full batch (matches FedAvg-style implementations).
+
+``StreamingImageSource`` is the DataSource (DESIGN.md §3) view of this
+pipeline: it hands the trainer the ``client_batches`` GENERATOR, so the
+gather/slice work materializes lazily on the ingest path — inside the
+cohort prefetcher's thread when prefetching is on, overlapping data IO
+with the device round instead of requiring pre-built per-client lists.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ from typing import Dict, Iterator, List
 
 import numpy as np
 
+from repro.core.datasources import DataSource
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_image_dataset
 
@@ -59,3 +66,27 @@ def client_batches(data: FederatedImageData, client: int, batch_size: int,
             sel = idx[order[start:start + batch_size]]
             yield {"images": data.train_images[sel],
                    "labels": data.train_labels[sel]}
+
+
+class StreamingImageSource(DataSource):
+    """Streams ``client_batches`` straight into the trainer's ingest path
+    (core/datasources.DataSource protocol): batches materialize as the
+    cohort stacker consumes the generator — with prefetch on, on the
+    prefetch thread, so shard gathering overlaps device compute.
+
+    ``client_weights()`` exposes shard sizes for ``WeightedSampler``
+    (participation proportional to data size)."""
+
+    def __init__(self, data: FederatedImageData, batch_size: int,
+                 local_epochs: int = 1):
+        self.data = data
+        self.batch_size = batch_size
+        self.local_epochs = local_epochs
+
+    def client_batches(self, client: int, round: int):
+        return client_batches(self.data, client, self.batch_size, round,
+                              self.local_epochs)
+
+    def client_weights(self) -> np.ndarray:
+        return np.asarray([len(ix) for ix in self.data.client_indices],
+                          np.float64)

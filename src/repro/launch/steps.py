@@ -6,7 +6,7 @@ Shapes map to step kinds (configs/shapes.py):
   decode_32k  -> decode_step   ONE token against a seq_len cache
   long_500k   -> decode_step   sub-quadratic: SSM/hybrid decode natively;
                                dense archs use the sliding-window variant
-                               (ring cache of WINDOW tokens — DESIGN.md §6)
+                               (ring cache of WINDOW tokens — DESIGN.md §7)
 
 Everything here is ShapeDtypeStruct-only until jit/lower time: no real
 allocation ever happens for the full-size configs.

@@ -5,6 +5,13 @@ paper's experiments on synthetic heterogeneous data).
       --model lenet5 --algorithm feddpc --rounds 50 --alpha 0.2 \
       --clients 100 --participation 0.1 --eta-l 0.01 --eta-g 0.01
 
+Built on the composable engine (DESIGN.md §3): the participation model is
+selectable (--sampler uniform|weighted|cyclic|markov), vision data
+streams through ``StreamingImageSource`` (batches materialize on the
+prefetch thread), and --ckpt-dir/--ckpt-every/--resume checkpoint the
+full TrainerState so an interrupted run continues exactly where it
+stopped.
+
 Also supports federated *LM* training with any assigned architecture's
 smoke config (--model starcoder2-3b etc.) — the beyond-paper scenario
 (cross-silo federated pretraining).
@@ -20,10 +27,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ARCH_IDS, get_config
-from repro.core.api import FLConfig, FederatedTrainer
-from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.baselines import default_hyper
+from repro.core.datasources import ListDataSource
+from repro.core.samplers import (CyclicSampler, MarkovSampler,
+                                 UniformSampler, WeightedSampler)
+from repro.data.pipeline import StreamingImageSource, \
+    build_federated_image_data
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_dataset
 from repro.models import transformer as tf
@@ -41,15 +52,12 @@ def build_vision_task(args):
         samples_per_class=args.samples_per_class, seed=args.seed)
     params = init_vision(vc, jax.random.PRNGKey(args.seed))
     loss_fn = functools.partial(vision_loss_fn, vc)
-
-    def batch_fn(c, t):
-        return list(client_batches(data, c, args.batch_size, t,
-                                   args.local_epochs))
-
+    # streaming: per-round batches materialize on the ingest path
+    source = StreamingImageSource(data, args.batch_size, args.local_epochs)
     te_x = jnp.asarray(data.test_images)
     te_y = jnp.asarray(data.test_labels)
     eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
-    return params, loss_fn, batch_fn, eval_fn, data.num_clients
+    return params, loss_fn, source, eval_fn, data.num_clients
 
 
 def build_lm_task(args):
@@ -81,7 +89,24 @@ def build_lm_task(args):
     def eval_fn(p):    # negative perplexity proxy -> "accuracy" slot
         return -loss_fn(p, ho_batch)
 
-    return params, loss_fn, batch_fn, eval_fn, args.clients
+    return params, loss_fn, ListDataSource(batch_fn), eval_fn, args.clients
+
+
+def build_sampler(args, source, num_clients: int, cohort: int):
+    if args.sampler == "uniform":
+        return UniformSampler(num_clients, cohort)
+    if args.sampler == "weighted":
+        if isinstance(source, StreamingImageSource):
+            weights = source.client_weights()
+        else:   # LM task: uniform shard sizes, degenerate but valid
+            weights = np.ones(num_clients)
+        return WeightedSampler(weights, cohort)
+    if args.sampler == "cyclic":
+        return CyclicSampler(num_clients, cohort)
+    if args.sampler == "markov":
+        return MarkovSampler(num_clients, cohort,
+                             p_on=args.markov_p_on, p_off=args.markov_p_off)
+    raise ValueError(args.sampler)
 
 
 def main(argv=None):
@@ -92,6 +117,10 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--participation", type=float, default=0.1)
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "weighted", "cyclic", "markov"])
+    ap.add_argument("--markov-p-on", type=float, default=0.5)
+    ap.add_argument("--markov-p-off", type=float, default=0.5)
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--eta-l", type=float, default=0.01)
     ap.add_argument("--eta-g", type=float, default=0.01)
@@ -108,29 +137,55 @@ def main(argv=None):
                          "cohort-vectorized round (debug/reference path)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save the TrainerState every N rounds (0 = only "
+                         "at the end, and only when --ckpt-dir is set)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest TrainerState from --ckpt-dir "
+                         "and continue the run exactly where it stopped")
     args = ap.parse_args(argv)
 
     if args.model in ("lenet5", "resnet18-gn"):
-        params, loss_fn, batch_fn, eval_fn, k = build_vision_task(args)
+        params, loss_fn, source, eval_fn, k = build_vision_task(args)
     else:
-        params, loss_fn, batch_fn, eval_fn, k = build_lm_task(args)
+        params, loss_fn, source, eval_fn, k = build_lm_task(args)
 
-    cfg = FLConfig(
-        algorithm=args.algorithm, rounds=args.rounds,
-        clients_per_round=max(1, int(round(k * args.participation))),
-        eta_l=args.eta_l, eta_g=args.eta_g, lam=args.lam,
-        batch_size=args.batch_size, local_epochs=args.local_epochs,
-        seed=args.seed, eval_every=args.eval_every,
-        vectorize=not args.serial)
-    trainer = FederatedTrainer(loss_fn, params, k, batch_fn, cfg, eval_fn)
-    hist = trainer.run(verbose=True)
+    cohort = max(1, int(round(k * args.participation)))
+    algo = AlgoConfig(name=args.algorithm, eta_l=args.eta_l,
+                      eta_g=args.eta_g,
+                      hyper=default_hyper(args.algorithm, lam=args.lam))
+    cfg = ExecConfig(
+        rounds=args.rounds, clients_per_round=cohort, seed=args.seed,
+        eval_every=args.eval_every, vectorize=not args.serial,
+        batch_size=args.batch_size, local_epochs=args.local_epochs)
+    sampler = build_sampler(args, source, k, cohort)
 
-    if args.ckpt_dir:
-        ckpt.save(args.ckpt_dir, args.rounds,
-                  {"params": trainer.params,
-                   "server_state": trainer.server_state})
-        print("checkpoint written to", args.ckpt_dir)
-    best, at = trainer.best_accuracy
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume needs --ckpt-dir")
+        trainer = FederatedTrainer.resume(
+            args.ckpt_dir, loss_fn, params, k, source, cfg, eval_fn,
+            algo=algo, sampler=sampler)
+        print(f"resumed from {args.ckpt_dir} at round {trainer.start_round}")
+    else:
+        trainer = FederatedTrainer(loss_fn, params, k, source, cfg, eval_fn,
+                                   algo=algo, sampler=sampler)
+    with trainer:
+        if args.ckpt_dir and args.ckpt_every > 0:
+            for t in range(trainer.start_round, args.rounds):
+                rec = trainer.run_round(t)
+                print(f"[{args.algorithm}] round {t:4d} "
+                      f"loss={rec.train_loss:.4f}")
+                if (t + 1) % args.ckpt_every == 0:
+                    trainer.save(args.ckpt_dir)
+            trainer.finalize()
+            hist = trainer.history
+        else:
+            hist = trainer.run(verbose=True)
+        if args.ckpt_dir:
+            path = trainer.save(args.ckpt_dir)
+            print("checkpoint written to", path)
+        best, at = trainer.best_accuracy
     print(f"best eval {best} @ round {at}")
     if args.out:
         with open(args.out, "w") as f:

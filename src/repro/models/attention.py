@@ -7,7 +7,7 @@ Pure-functional; caches are explicit pytrees so serve_decode is a pure step:
 
 Capacity C == seq_len for full attention, C == window for the sliding-window
 (long-context) variant: the cache is a ring buffer, so a 500k-token stream
-costs O(window) memory (DESIGN.md §6).
+costs O(window) memory (DESIGN.md §7).
 
 Full-sequence attention has three implementations:
   * "reference": plain einsum (small smoke shapes)

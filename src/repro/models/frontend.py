@@ -1,4 +1,4 @@
-"""Modality frontend STUBS (the one sanctioned stub — DESIGN.md §6).
+"""Modality frontend STUBS (the one sanctioned stub — DESIGN.md §7).
 
 The assignment exercises the language/decoder transformer backbone; the
 vision tower (ViT/SigLIP + projector) and the audio codec (mel + conv) are

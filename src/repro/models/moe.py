@@ -1,7 +1,7 @@
 """Mixture-of-Experts layer: top-k router + capacity-slotted gather/scatter
 dispatch.
 
-Design notes (DESIGN.md §2, §7):
+Design notes (DESIGN.md §2, §8):
 
 * One-hot einsum dispatch (GShard style) costs O(T * E * C * D) FLOPs —
   quadratic in group token count. For the 384-expert Kimi-K2 config that

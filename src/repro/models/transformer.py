@@ -4,7 +4,7 @@ Supports every assigned family: dense GQA, MLA, MoE, pure-SSM, hybrid
 (jamba 1:7 attn:mamba interleave), and the VLM variant (prefix patch
 embeddings from the stubbed frontend).
 
-Layer-stack compilation strategy (DESIGN.md §6): the per-layer spec
+Layer-stack compilation strategy (DESIGN.md §7): the per-layer spec
 (mixer kind, MoE?) is analysed into (prefix_layers, period P, groups G)
 and the periodic part is executed with ``lax.scan`` over G stacked groups
 — one compiled body regardless of depth, keeping 512-device dry-run HLO

@@ -1,4 +1,4 @@
-"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §8).
+"""Three-term roofline from a compiled dry-run artifact (DESIGN.md §9).
 
   compute    = HLO_FLOPs        / (chips * PEAK_FLOPS_BF16)
   memory     = HLO_bytes        / (chips * HBM_BW)

@@ -1,3 +1,2 @@
 from repro.sharding.rules import (ShardingPolicy, param_specs, batch_specs,
-                                  state_specs, cohort_round_shardings,
-                                  clients_divisible)
+                                  state_specs, cohort_round_shardings)

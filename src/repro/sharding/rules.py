@@ -1,6 +1,6 @@
 """PartitionSpec rules for every parameter / activation / cache class.
 
-Name-based rules (DESIGN.md §7) with divisibility guards: a dim is only
+Name-based rules (DESIGN.md §8) with divisibility guards: a dim is only
 sharded if it divides evenly by the axis size; otherwise that dim falls
 back to replication. Rules are written *from the end* of the shape so the
 same rule covers plain leaves and lax.scan-stacked leaves (leading G dim
@@ -262,9 +262,3 @@ def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients"):
     return (rep, rep, cli, cli, cli), (rep, rep, cli, rep)
 
 
-def clients_divisible(mesh: Mesh, k: int, client_axis: str = "clients") -> bool:
-    """GSPMD pads uneven shards; we keep the simulation path on the exact
-    divisible layout (same guard philosophy as the param rules)."""
-    return k % int(np.prod(
-        [s for a, s in zip(mesh.axis_names, mesh.devices.shape)
-         if a == client_axis])) == 0

@@ -1,0 +1,108 @@
+"""Subprocess body for the checkpoint/resume equivalence test.
+
+Three phases, each a FRESH python process (fresh jit caches, fresh RNGs —
+the real crash/requeue scenario), orchestrated by
+tests/test_resume.py::test_resume_matches_uninterrupted:
+
+  full    run all ROUNDS rounds uninterrupted; dump finals to <out>.npz
+  part    run the first SPLIT rounds, trainer.save(ckpt_dir)
+  resume  FederatedTrainer.resume(ckpt_dir, ...), run to the end; dump
+          finals to <out>.npz
+
+The comparison (in pytest) asserts params, server state, the sampled
+schedule, and per-round losses are EXACTLY equal — bitwise — for a
+stateless (feddpc), a per-client-stateful (fedvarp), and an adaptive-LR
+(fedexp) server rule, with prefetch on (the checkpoint must roll the RNG
+back past staged-but-unconsumed rounds) and a Markov sampler whose
+availability chain is itself checkpointed state.
+"""
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.samplers import MarkovSampler
+
+NUM_CLIENTS = 8
+K = 3
+ROUNDS = 6
+SPLIT = 3
+ALGOS = ("feddpc", "fedvarp", "fedexp")
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def ragged_batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 3) + 1)]
+
+
+def build(algo):
+    cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                     eval_every=10 ** 9, prefetch=True)
+    return FederatedTrainer(
+        loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn, cfg,
+        algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
+        sampler=MarkovSampler(NUM_CLIENTS, K, p_on=0.6, p_off=0.4))
+
+
+def dump(out_path, trainers):
+    arrays = {}
+    for algo, tr in trainers.items():
+        for i, leaf in enumerate(jax.tree.leaves(tr.params)):
+            arrays[f"{algo}/params/{i}"] = np.asarray(leaf)
+        for i, leaf in enumerate(jax.tree.leaves(tr.server_state)):
+            arrays[f"{algo}/state/{i}"] = np.asarray(leaf)
+        arrays[f"{algo}/schedule"] = np.stack(tr.schedule[:ROUNDS])
+        arrays[f"{algo}/losses"] = np.asarray(
+            [r.train_loss for r in tr.history], np.float64)
+    np.savez(out_path, **arrays)
+
+
+def main(phase, workdir):
+    trainers = {}
+    for algo in ALGOS:
+        ckpt_dir = os.path.join(workdir, f"ckpt_{algo}")
+        if phase == "full":
+            with build(algo) as tr:
+                tr.run()
+        elif phase == "part":
+            with build(algo) as tr:
+                for t in range(SPLIT):
+                    tr.run_round(t)
+                tr.save(ckpt_dir)
+        elif phase == "resume":
+            cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                             eval_every=10 ** 9, prefetch=True)
+            with FederatedTrainer.resume(
+                    ckpt_dir, loss_fn, make_params(), NUM_CLIENTS,
+                    ragged_batch_fn, cfg,
+                    algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
+                    sampler=MarkovSampler(NUM_CLIENTS, K, p_on=0.6,
+                                          p_off=0.4)) as tr:
+                assert tr._start_round == SPLIT, tr._start_round
+                tr.run()
+        else:
+            raise SystemExit(f"unknown phase {phase!r}")
+        trainers[algo] = tr
+    if phase in ("full", "resume"):
+        dump(os.path.join(workdir, f"{phase}.npz"), trainers)
+    print(f"PHASE {phase} OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

@@ -4,8 +4,12 @@ Runs on 8 FORCED host devices (the XLA flag must be set before jax
 initializes, which is why this lives in its own process rather than in
 the main pytest interpreter): the client-axis-sharded cohort round must
 reproduce the single-device vectorized round bit-for-tolerance for every
-algorithm the sharded path supports, and the mesh-unified
-``make_fl_round_step`` must match its raw (unsharded) counterpart.
+algorithm the sharded path supports — including UNEVEN cohorts, which
+pad to the next axis multiple with masked dummy clients — and the
+mesh-unified ``make_fl_round_step`` must match its raw (unsharded)
+counterpart.  A weighted sampler + streaming data source also run
+end-to-end through the sharded, prefetched round (the ISSUE 3
+acceptance path).
 
 Invoked by tests/test_cohort.py::test_sharded_round_matches_single_device.
 """
@@ -19,8 +23,10 @@ import numpy as np          # noqa: E402
 import jax                  # noqa: E402
 import jax.numpy as jnp     # noqa: E402
 
-from repro.core.api import FLConfig, FederatedTrainer       # noqa: E402
+from repro.core.api import (AlgoConfig, ExecConfig,         # noqa: E402
+                            FederatedTrainer)
 from repro.core.round import make_fl_round_step             # noqa: E402
+from repro.core.samplers import WeightedSampler             # noqa: E402
 from repro.launch.mesh import make_cohort_mesh              # noqa: E402
 
 NUM_CLIENTS = 16
@@ -53,18 +59,20 @@ def assert_trees_close(a, b, rtol=1e-5, atol=1e-6):
                                    rtol=rtol, atol=atol)
 
 
-def check_trainer(algo: str):
+def check_trainer(algo: str, k: int = K):
     runs = {}
     for shard in (False, True):
-        cfg = FLConfig(algorithm=algo, rounds=3, clients_per_round=K,
-                       eta_l=0.05, eta_g=0.1, seed=7, eval_every=10 ** 9,
-                       shard_clients=shard)
-        tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
-                              ragged_batch_fn, cfg)
-        tr.run()
-        tr.close()
+        cfg = ExecConfig(rounds=3, clients_per_round=k,
+                         seed=7, eval_every=10 ** 9, shard_clients=shard)
+        with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                              ragged_batch_fn, cfg,
+                              algo=AlgoConfig(name=algo, eta_l=0.05,
+                                              eta_g=0.1)) as tr:
+            tr.run()
         runs[shard] = tr
     assert runs[True].mesh is not None, "sharded run fell back to 1 device"
+    if k % 8:
+        assert runs[True]._pad_to == -(-k // 8) * 8, runs[True]._pad_to
     assert_trees_close(runs[True].params, runs[False].params)
     assert_trees_close(runs[True].server_state, runs[False].server_state)
     for rv, rs in zip(runs[True].history, runs[False].history):
@@ -72,7 +80,39 @@ def check_trainer(algo: str):
         for key in rv.diagnostics:
             assert np.isclose(rv.diagnostics[key], rs.diagnostics[key],
                               rtol=1e-3, atol=1e-4), (algo, key)
-    print(f"[sharded==single] {algo} OK")
+    print(f"[sharded==single] {algo} K={k} OK")
+
+
+def check_sampler_and_streaming_source():
+    """Non-uniform sampler + streaming source end-to-end through the
+    sharded, prefetched, PADDED cohort round (K=6 on the 8-device axis)."""
+    from repro.data.pipeline import (StreamingImageSource,
+                                     build_federated_image_data)
+    from repro.models.vision import VisionConfig, init_vision, vision_loss_fn
+    import functools
+
+    vc = VisionConfig(name="smoke", family="lenet5", num_classes=4,
+                      image_size=16)
+    data = build_federated_image_data(
+        num_classes=4, num_clients=NUM_CLIENTS, alpha=0.3,
+        samples_per_class=30, test_per_class=5, seed=0, image_size=16)
+    source = StreamingImageSource(data, batch_size=16)
+    sampler = WeightedSampler(source.client_weights(), cohort_size=6)
+    params = init_vision(vc, jax.random.PRNGKey(0))
+    loss = functools.partial(vision_loss_fn, vc)
+    cfg = ExecConfig(rounds=3, clients_per_round=6, seed=1,
+                     eval_every=10 ** 9, shard_clients=True, prefetch=True)
+    with FederatedTrainer(loss, params, NUM_CLIENTS, source, cfg,
+                          algo=AlgoConfig(eta_l=0.05, eta_g=0.05),
+                          sampler=sampler) as tr:
+        hist = tr.run()
+    assert len(hist) == 3
+    assert all(np.isfinite(r.train_loss) for r in hist)
+    assert tr._pad_to == 8 and tr.mesh is not None
+    sizes = np.asarray([len(ix) for ix in data.client_indices])
+    for cohort in tr.schedule[:3]:
+        assert (sizes[cohort] > 0).all()    # zero-size clients never drawn
+    print("[sharded] weighted sampler + streaming source OK")
 
 
 def check_fl_round_step():
@@ -98,7 +138,12 @@ def main():
     assert len(jax.devices()) == 8, jax.devices()
     for algo in ("feddpc", "fedavg", "fedexp"):
         check_trainer(algo)
+    # uneven cohorts: K=6 pads to 8 with masked dummy clients (the old
+    # path warned and fell back to a single device here)
+    for algo in ("feddpc", "fedvarp"):
+        check_trainer(algo, k=6)
     check_fl_round_step()
+    check_sampler_and_streaming_source()
     print("ALL OK")
 
 

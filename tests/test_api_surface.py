@@ -1,0 +1,373 @@
+"""The composable engine surface (DESIGN.md §3): algorithm registry,
+pluggable samplers, data sources, config split, cohort padding, and the
+deprecated flat-FLConfig shim's round-for-round equivalence."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.api import (AlgoConfig, ExecConfig, FLConfig,
+                            FederatedTrainer)
+from repro.core.baselines import (FedDPCHyper, FedProxHyper, ServerAlgo,
+                                  make_algorithm, register_algorithm)
+from repro.core.client import stack_cohort
+from repro.core.datasources import (DataSource, IteratorDataSource,
+                                    ListDataSource, as_data_source)
+from repro.core.round import make_cohort_round
+from repro.core.samplers import (CyclicSampler, MarkovSampler,
+                                 UniformSampler, WeightedSampler)
+
+NUM_CLIENTS = 6
+K = 3
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def ragged_batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 3) + 1)]
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------- FLConfig shim == new spelling ----------------
+
+@pytest.mark.parametrize("algo,flat_kw", [
+    ("feddpc", {"lam": 1.3}),
+    ("fedprox", {"mu": 0.05}),
+    ("fedvarp", {}),
+])
+def test_flat_config_shim_equivalent(algo, flat_kw):
+    """Old surface warns but produces ROUND-FOR-ROUND identical results
+    to the ExecConfig/AlgoConfig/ListDataSource/UniformSampler spelling
+    (ISSUE 3 acceptance criterion)."""
+    with pytest.warns(DeprecationWarning, match="FLConfig is deprecated"):
+        old = FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+            FLConfig(algorithm=algo, rounds=3, clients_per_round=K,
+                     eta_l=0.05, eta_g=0.1, seed=7, eval_every=10 ** 9,
+                     **flat_kw))
+    with old:
+        old.run()
+    hyper = {"feddpc": FedDPCHyper(lam=1.3),
+             "fedprox": FedProxHyper(mu=0.05)}.get(algo)
+    with FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS,
+            ListDataSource(ragged_batch_fn),
+            ExecConfig(rounds=3, clients_per_round=K, seed=7,
+                       eval_every=10 ** 9),
+            algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1, hyper=hyper),
+            sampler=UniformSampler(NUM_CLIENTS, K)) as new:
+        new.run()
+    assert_trees_equal(old.params, new.params)
+    assert_trees_equal(old.server_state, new.server_state)
+    assert [r.train_loss for r in old.history] == \
+        [r.train_loss for r in new.history]
+    for a, b in zip(old.schedule, new.schedule):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_flconfig_and_algoconfig_conflict():
+    with pytest.raises(ValueError, match="not both"):
+        FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                         ragged_batch_fn, FLConfig(), algo=AlgoConfig())
+
+
+# ---------------- registry ----------------
+
+def test_registry_unknown_name():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        make_algorithm("fednope")
+
+
+def test_registry_hyper_coercion_and_type_check():
+    a = make_algorithm("feddpc", {"lam": 2.0})
+    assert a.hyper == FedDPCHyper(lam=2.0)
+    with pytest.raises(TypeError):
+        make_algorithm("fedprox", FedDPCHyper())
+    with pytest.raises(ValueError, match="already registered"):
+        register_algorithm("fedavg")(lambda h: None)
+
+
+def test_registered_custom_algorithm_runs_in_trainer():
+    """register_algorithm is the extension point: a user-defined rule
+    plugs into the trainer (and the fused round) by name."""
+    name = "_test_halfavg"
+    if name not in baselines._REGISTRY:          # idempotent across reruns
+        @register_algorithm(name)
+        def _build(h):
+            def step(state, params, deltas, client_ids, eta_g, t,
+                     client_mask=None, **_):
+                delta = baselines._mean_over_clients(deltas, client_mask)
+                half = jax.tree.map(lambda d: 0.5 * d, delta)
+                return (baselines._apply(params, half, eta_g),
+                        {"delta_prev": half}, {})
+            return ServerAlgo(name, baselines._fedavg_init, step)
+    with FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+            ExecConfig(rounds=2, clients_per_round=K, eval_every=10 ** 9),
+            algo=AlgoConfig(name=name, eta_l=0.05, eta_g=0.1)) as tr:
+        hist = tr.run()
+    assert np.isfinite(hist[-1].train_loss)
+
+
+def test_client_hparams_flow_from_hyper():
+    """FedProx's mu reaches the local update through the algorithm's
+    hyper dataclass — two mu values give different trajectories."""
+    outs = {}
+    for mu in (0.0, 5.0):
+        with FederatedTrainer(
+                loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+                ExecConfig(rounds=2, clients_per_round=K, seed=1,
+                           eval_every=10 ** 9),
+                algo=AlgoConfig(name="fedprox", eta_l=0.05, eta_g=0.1,
+                                hyper=FedProxHyper(mu=mu))) as tr:
+            tr.run()
+        outs[mu] = tr.params
+    assert not np.allclose(np.asarray(outs[0.0]["w"]),
+                           np.asarray(outs[5.0]["w"]))
+
+
+# ---------------- samplers ----------------
+
+def test_uniform_sampler_matches_legacy_draw():
+    rng_a, rng_b = np.random.RandomState(3), np.random.RandomState(3)
+    s = UniformSampler(NUM_CLIENTS, K)
+    for t in range(4):
+        legacy = rng_a.choice(NUM_CLIENTS, size=K, replace=False)
+        assert (s.sample(rng_b, t) == legacy).all()
+
+
+def test_weighted_sampler_excludes_zero_weight():
+    s = WeightedSampler([0.0, 1.0, 1.0, 3.0, 5.0], 3)
+    rng = np.random.RandomState(0)
+    for t in range(20):
+        ids = s.sample(rng, t)
+        assert len(set(ids.tolist())) == 3 and 0 not in ids
+    with pytest.raises(ValueError):
+        WeightedSampler([0.0, 0.0, 1.0], 2)
+
+
+def test_cyclic_sampler_covers_all_clients():
+    s = CyclicSampler(5, 2)
+    rng = np.random.RandomState(0)
+    seen = set()
+    for t in range(5):
+        ids = s.sample(rng, t)
+        assert (s.sample(rng, t) == ids).all()       # deterministic, no RNG
+        seen.update(ids.tolist())
+    assert seen == set(range(5))
+
+
+def test_markov_sampler_constant_k_and_state_roundtrip():
+    s = MarkovSampler(10, 4, p_on=0.3, p_off=0.6)
+    rng = np.random.RandomState(1)
+    for t in range(6):
+        ids = s.sample(rng, t)
+        assert ids.shape == (4,) and len(set(ids.tolist())) == 4
+    twin = MarkovSampler(10, 4, p_on=0.3, p_off=0.6)
+    twin.load_state_dict(s.state_dict())
+    rng_a, rng_b = np.random.RandomState(9), np.random.RandomState(9)
+    for t in range(6, 10):
+        assert (s.sample(rng_a, t) == twin.sample(rng_b, t)).all()
+
+
+def test_nonuniform_sampler_drives_trainer():
+    with FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+            ExecConfig(rounds=4, clients_per_round=2, eval_every=10 ** 9),
+            algo=AlgoConfig(eta_l=0.05, eta_g=0.1),
+            sampler=CyclicSampler(NUM_CLIENTS, 2)) as tr:
+        tr.run()
+    assert (np.asarray(tr.schedule[0]) == [0, 1]).all()
+    assert (np.asarray(tr.schedule[1]) == [2, 3]).all()
+
+
+def test_bad_sampler_output_raises():
+    class Bad(UniformSampler):
+        def sample(self, rng, t):
+            return np.arange(K + 1)                  # wrong cohort size
+    tr = FederatedTrainer(
+        loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+        ExecConfig(rounds=2, clients_per_round=K, prefetch=False,
+                   eval_every=10 ** 9),
+        algo=AlgoConfig(eta_l=0.05, eta_g=0.1),
+        sampler=Bad(NUM_CLIENTS, K))
+    with pytest.raises(ValueError, match="clients_per_round"):
+        tr.run_round(0)
+    tr.close()
+
+
+# ---------------- data sources ----------------
+
+def test_as_data_source_coercion():
+    src = as_data_source(ragged_batch_fn)
+    assert isinstance(src, ListDataSource)
+    assert as_data_source(src) is src
+    with pytest.raises(TypeError):
+        as_data_source(42)
+
+
+def test_streaming_source_matches_list_source():
+    """A generator-backed source produces the identical run (consumed on
+    the ingest path) as the materialized list source."""
+    def gen(c, t):
+        yield from ragged_batch_fn(c, t)
+
+    runs = {}
+    for key, src in (("list", ListDataSource(ragged_batch_fn)),
+                     ("stream", IteratorDataSource(gen))):
+        with FederatedTrainer(
+                loss_fn, make_params(), NUM_CLIENTS, src,
+                ExecConfig(rounds=3, clients_per_round=K, seed=2,
+                           eval_every=10 ** 9),
+                algo=AlgoConfig(eta_l=0.05, eta_g=0.1)) as tr:
+            tr.run()
+        runs[key] = tr
+    assert_trees_equal(runs["list"].params, runs["stream"].params)
+    assert [r.train_loss for r in runs["list"].history] == \
+        [r.train_loss for r in runs["stream"].history]
+
+
+def test_streaming_image_source_runs():
+    import functools
+    from repro.data.pipeline import (StreamingImageSource,
+                                     build_federated_image_data)
+    from repro.models.vision import (VisionConfig, init_vision,
+                                     vision_loss_fn)
+    vc = VisionConfig(name="t", family="lenet5", num_classes=4,
+                      image_size=16)
+    data = build_federated_image_data(
+        num_classes=4, num_clients=NUM_CLIENTS, alpha=0.3,
+        samples_per_class=20, test_per_class=5, seed=0, image_size=16)
+    src = StreamingImageSource(data, batch_size=16)
+    assert src.client_weights().sum() == 4 * 20
+    with FederatedTrainer(
+            functools.partial(vision_loss_fn, vc),
+            init_vision(vc, jax.random.PRNGKey(0)), NUM_CLIENTS, src,
+            ExecConfig(rounds=2, clients_per_round=K, eval_every=10 ** 9),
+            algo=AlgoConfig(eta_l=0.05, eta_g=0.05),
+            sampler=WeightedSampler(src.client_weights(), K)) as tr:
+        hist = tr.run()
+    assert np.isfinite(hist[-1].train_loss)
+
+
+# ---------------- cohort padding (single-device semantics) ----------------
+
+@pytest.mark.parametrize("algo,hyper", [
+    ("feddpc", None), ("feddpc", FedDPCHyper(use_kernel=True)),
+    ("fedvarp", None), ("fedexp", None)])
+def test_padded_cohort_matches_unpadded(algo, hyper):
+    """Dummy clients (all-False mask rows, out-of-range ids) must not
+    perturb the client mean, FedExP's count, or FedVARP's table."""
+    pad_to, num = 5, 10
+    params = make_params()
+    lists = [ragged_batch_fn(c, 0) for c in range(K)]
+    mx = max(len(b) for b in lists)
+    b_plain, m_plain = stack_cohort(lists, mx)
+    b_pad, m_pad = stack_cohort(lists, mx, pad_to=pad_to)
+    assert m_pad.shape[0] == pad_to and not m_pad[K:].any()
+    a = make_algorithm(algo, hyper)
+    st1 = st2 = a.init(params, num)
+    p1 = p2 = params
+    plain = make_cohort_round(loss_fn, a, 0.05, 0.1, donate=False)
+    padded = make_cohort_round(loss_fn, a, 0.05, 0.1, donate=False,
+                               pad_clients=True)
+    ids = jnp.arange(K, dtype=jnp.int32)
+    ids_pad = jnp.concatenate([ids, jnp.full((pad_to - K,), num, jnp.int32)])
+    for _ in range(2):      # second round exercises delta_prev / the table
+        p1, st1, l1, d1 = plain(st1, p1, b_plain, jnp.asarray(m_plain), ids)
+        p2, st2, l2, d2 = padded(st2, p2, b_pad, jnp.asarray(m_pad), ids_pad)
+    for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=1e-6)
+    for x, y in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2)[:K], rtol=1e-6)
+    assert not np.asarray(l2)[K:].any()      # dummies report zero loss
+    for key in d1:
+        np.testing.assert_allclose(float(d1[key]), float(d2[key]),
+                                   rtol=1e-3, atol=1e-4, err_msg=key)
+
+
+# ---------------- context manager / lifecycle ----------------
+
+def test_context_manager_closes_prefetcher():
+    with FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+            ExecConfig(rounds=3, clients_per_round=K, prefetch=True,
+                       eval_every=10 ** 9),
+            algo=AlgoConfig(eta_l=0.05, eta_g=0.1)) as tr:
+        tr.run_round(0)
+        assert tr._prefetcher is not None
+    assert tr._prefetcher._stopped
+
+
+def test_resume_with_wrong_sampler_raises(tmp_path):
+    """A checkpoint drawn by one sampler cannot silently resume under
+    another — the checkpointed sampler state would be discarded and the
+    bitwise-resume guarantee broken."""
+    ec = ExecConfig(rounds=4, clients_per_round=K, eval_every=10 ** 9)
+    ac = AlgoConfig(eta_l=0.05, eta_g=0.1)
+    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, ec, algo=ac,
+                          sampler=MarkovSampler(NUM_CLIENTS, K)) as tr:
+        tr.run_round(0)
+        tr.save(str(tmp_path))
+    with pytest.raises(ValueError, match="MarkovSampler"):
+        FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                NUM_CLIENTS, ragged_batch_fn, ec, algo=ac)
+    # a changed cohort size cannot continue the run either
+    ec_wrong = ExecConfig(rounds=4, clients_per_round=K + 1,
+                          eval_every=10 ** 9)
+    with pytest.raises(ValueError, match="clients_per_round"):
+        FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                NUM_CLIENTS, ragged_batch_fn, ec_wrong,
+                                algo=ac,
+                                sampler=MarkovSampler(NUM_CLIENTS, K + 1))
+
+
+def test_save_restores_in_process(tmp_path):
+    """Fast single-process sanity for save/restore (the fresh-process
+    bitwise test is tests/test_resume.py)."""
+    ec = ExecConfig(rounds=4, clients_per_round=K, seed=11,
+                    eval_every=10 ** 9)
+    ac = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, ec, algo=ac) as full:
+        full.run()
+    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, ec, algo=ac) as part:
+        part.run_round(0)
+        part.run_round(1)
+        part.save(str(tmp_path))
+    res = FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                  NUM_CLIENTS, ragged_batch_fn, ec, algo=ac)
+    with res:
+        assert res._start_round == 2
+        res.run()
+    assert_trees_equal(full.params, res.params)
+    assert [r.train_loss for r in full.history] == \
+        [r.train_loss for r in res.history]
+    for a, b in zip(full.schedule, res.schedule):
+        assert (np.asarray(a) == np.asarray(b)).all()
