@@ -1,7 +1,7 @@
 """Cohort round latency sweep — the perf receipt for the fused round and
 its scaling levers (core/round.py, core/api.py, DESIGN.md §2):
 
-  {serial, vectorized, sharded} x {prefetch on/off} x {kernel on/off}
+  {serial, vectorized, sharded[, sharded2d]} x {prefetch} x {kernel}
 
 serial        historical per-client dispatch (ExecConfig.vectorize=False)
 vectorized    one fused jit program per round on a single device
@@ -10,6 +10,10 @@ sharded       client axis NamedSharding over the local devices
 prefetch      double-buffered host ingest (ExecConfig.prefetch)
 kernel        FedDPC epilogue through the batched Pallas kernel
               (FedDPCHyper.use_kernel; interpret mode on CPU)
+sharded2d     --model-shards M > 1: the two-axis (clients x model) mesh —
+              params/server state shard per leaf over a model axis of M
+              inside each client slice (ExecConfig.shard_model); the
+              receipt lands in BENCH_cohort_2axis.json
 
 Per-mode stats include ``ingest_mean_s`` — the host time run_round spends
 blocked on cohort stacking — so the prefetch win is measured directly.
@@ -53,8 +57,10 @@ from repro.core.api import (AlgoConfig, ExecConfig,     # noqa: E402
                             FederatedTrainer)
 from repro.core.baselines import default_hyper          # noqa: E402
 
-DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_cohort_sharded.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_cohort_sharded.json")
+# --model-shards sweeps land in their own receipt
+DEFAULT_OUT_2AXIS = os.path.join(_ROOT, "BENCH_cohort_2axis.json")
 
 # mode name -> config overrides (use_kernel routes into the feddpc hyper,
 # the rest are ExecConfig fields); the sweep skips nothing silently — a
@@ -72,6 +78,23 @@ MODES = [
     ("sharded+prefetch+kernel", dict(shard_clients=True, prefetch=True,
                                      use_kernel=True)),
 ]
+
+
+def modes_for(model_shards: int):
+    """The sweep's mode list; --model-shards M > 1 appends the two-axis
+    (clients x model) regimes (DESIGN.md §2) — params/server state shard
+    per leaf over a model axis of M within each client slice. The kernel
+    mode is included to measure the documented fall-back to the
+    reference epilogue under model-sharded leaves."""
+    if model_shards <= 1:
+        return MODES
+    two = dict(shard_clients=True, shard_model=model_shards)
+    return MODES + [
+        ("sharded2d", dict(two, prefetch=False)),
+        ("sharded2d+prefetch", dict(two, prefetch=True)),
+        ("sharded2d+prefetch+kernel", dict(two, prefetch=True,
+                                           use_kernel=True)),
+    ]
 
 
 def build_task(num_clients: int, batches_per_client: int, batch: int,
@@ -128,12 +151,13 @@ def bench(overrides: dict, *, params, loss_fn, batch_fn, k: int,
 def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
         batches_per_client: int = 4, batch: int = 8, dim: int = 512,
         hidden: int = 2048, classes: int = 10, algorithm: str = "feddpc",
-        out: str = DEFAULT_OUT) -> Dict:
+        model_shards: int = 1, out: str = None) -> Dict:
+    out = out or (DEFAULT_OUT_2AXIS if model_shards > 1 else DEFAULT_OUT)
     params, loss_fn, batch_fn = build_task(
         clients, batches_per_client, batch, dim, hidden, classes)
     n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
     results = {}
-    for mode, overrides in MODES:
+    for mode, overrides in modes_for(model_shards):
         try:
             results[mode] = bench(
                 overrides, params=params, loss_fn=loss_fn, batch_fn=batch_fn,
@@ -151,9 +175,11 @@ def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
         return results.get(m, {}).get("ingest_mean_s")
 
     payload = {
-        "bench": "cohort_round_sharded",
+        "bench": ("cohort_round_2axis" if model_shards > 1
+                  else "cohort_round_sharded"),
         "backend": jax.default_backend(),
         "devices": len(jax.devices()),
+        "model_shards": model_shards,
         "algorithm": algorithm,
         "clients_per_round": clients,
         "batches_per_client": batches_per_client,
@@ -174,9 +200,13 @@ def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
     if ing("vectorized") and ing("vectorized+prefetch") is not None:
         payload["ingest_reduction_prefetch"] = \
             1.0 - ing("vectorized+prefetch") / ing("vectorized")
+    if mean("vectorized") and mean("sharded2d"):
+        payload["speedup_sharded2d_vs_vectorized"] = \
+            mean("vectorized") / mean("sharded2d")
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     for key in ("speedup_vectorized_vs_serial", "speedup_sharded_vs_vectorized",
+                "speedup_sharded2d_vs_vectorized",
                 "ingest_reduction_prefetch"):
         if key in payload:
             print(f"{key}: {payload[key]:.3f}")
@@ -197,11 +227,18 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host devices (must be set before jax "
                          "initializes; handled at module import)")
-    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help=">1 appends the two-axis (clients x model) "
+                         "sweep; receipts default to "
+                         "BENCH_cohort_2axis.json")
+    ap.add_argument("--out", default=None,
+                    help="defaults to BENCH_cohort_sharded.json, or "
+                         "BENCH_cohort_2axis.json with --model-shards")
     a = ap.parse_args(argv)
     run(clients=a.clients, rounds=a.rounds, warmup=a.warmup,
         batches_per_client=a.batches_per_client, batch=a.batch,
-        dim=a.dim, hidden=a.hidden, algorithm=a.algorithm, out=a.out)
+        dim=a.dim, hidden=a.hidden, algorithm=a.algorithm,
+        model_shards=a.model_shards, out=a.out)
     return 0
 
 

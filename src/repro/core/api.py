@@ -41,6 +41,10 @@ Scaling levers (DESIGN.md §2), all on by construction or by one flag:
       params/server state replicated. K that does not divide the axis is
       PADDED with masked dummy clients to the next multiple (the server
       rules exclude them via the derived client validity mask).
+  exec.shard_model    M > 1 composes a `model` axis with the client axis
+      (a (devices//M, M) two-axis mesh): params/server state shard PER
+      LEAF over `model` (§8 rules + trailing-dim fallback) inside each
+      client slice — the layout for models larger than one device's HBM.
   exec.prefetch       double-buffered host ingest: a daemon thread stages
       round t+1's cohort (sampling + source reads + stacking into
       preallocated buffers) while round t runs on device, so run_round
@@ -105,6 +109,11 @@ class ExecConfig:
     eval_every: int = 5
     vectorize: bool = True           # one fused program per round (default)
     shard_clients: bool = False      # client-axis NamedSharding over devices
+    # model-axis shards per client slice: >1 builds the two-axis
+    # (clients, model) mesh (DESIGN.md §2) — params/server state shard per
+    # leaf over `model` (the >HBM regime), batches stay on the client
+    # axis. Must divide the device count; implies the sharded path.
+    shard_model: int = 1
     prefetch: bool = True            # double-buffered host ingest (vectorized)
     # overlap eval_fn with the next round: accuracy folds into its
     # RoundRecord when ready (at latest at the next eval boundary /
@@ -160,6 +169,23 @@ class FLConfig:
                          batch_size=self.batch_size,
                          local_epochs=self.local_epochs)
         return algo, exe
+
+
+# Execution regimes of the cross-regime equivalence matrix
+# (tests/test_regime_matrix.py): name -> ExecConfig overrides relative to
+# the serial reference. Every regime must be round-for-round allclose to
+# ``serial`` for every registered algorithm x sampler; a NEW execution
+# lever added to ExecConfig registers its regime here and the matrix
+# auto-enrolls it. ``sharded2d`` is written for the 8-device harness the
+# matrix forces on CPU (4-way model sharding leaves a 2-way client axis —
+# the (2 clients x 4 model) acceptance mesh); real accelerator runs pick
+# shard_model to fit their topology.
+EXEC_REGIMES = {
+    "serial": {"vectorize": False},
+    "vectorized": {},
+    "sharded1d": {"shard_clients": True},
+    "sharded2d": {"shard_clients": True, "shard_model": 4},
+}
 
 
 @dataclass
@@ -241,23 +267,35 @@ class FederatedTrainer:
             UniformSampler(num_clients, exec_cfg.clients_per_round)
         self.algo: ServerAlgo = make_algorithm(algo_cfg.name, algo_cfg.hyper)
         self.server_state = self.algo.init(self.params, num_clients)
-        self.mesh = self._build_mesh() if exec_cfg.shard_clients else None
+        self.mesh = (self._build_mesh()
+                     if exec_cfg.shard_clients or exec_cfg.shard_model > 1
+                     else None)
         # uneven cohorts on the sharded path: pad K up to the next multiple
-        # of the client axis with masked dummy clients (DESIGN.md §2)
+        # of the CLIENT axis (on a two-axis mesh the model axis does not
+        # count) with masked dummy clients (DESIGN.md §2)
         k = exec_cfg.clients_per_round
-        ndev = 1 if self.mesh is None else int(self.mesh.devices.size)
+        ndev = 1 if self.mesh is None else int(self.mesh.devices.shape[0])
         self._pad_to = -(-k // ndev) * ndev
+        # cohort shardings are built ONCE and shared by the round's jit,
+        # the initial placement, and restore()'s re-placement
+        self._round_shardings = None
+        if self.mesh is not None:
+            from repro.sharding.rules import cohort_round_shardings
+            self._round_shardings = cohort_round_shardings(
+                self.mesh, params=self.params,
+                server_state=self.server_state)
         # fused path: local training + server step, one program per round
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
             optimizer=algo_cfg.local_optimizer, mesh=self.mesh,
-            pad_clients=self._pad_to > k)
+            pad_clients=self._pad_to > k, shardings=self._round_shardings)
         if self.mesh is not None:
-            # pre-place replicated so the first round's donation matches
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            rep = NamedSharding(self.mesh, P())
-            self.params = jax.device_put(self.params, rep)
-            self.server_state = jax.device_put(self.server_state, rep)
+            # pre-place so the first round's donation matches: replicated
+            # on the 1-D client mesh, per-leaf model-sharded on a
+            # two-axis mesh
+            p_sh, s_sh = self._placements()
+            self.params = jax.device_put(self.params, p_sh)
+            self.server_state = jax.device_put(self.server_state, s_sh)
         # serial reference path (exec.vectorize=False): per-client dispatch
         from repro.core.baselines import client_kwargs
         self.local_update = client_mod.make_local_update(
@@ -284,7 +322,15 @@ class FederatedTrainer:
 
     def _build_mesh(self):
         from repro.launch import mesh as mesh_mod
-        return mesh_mod.make_cohort_mesh()
+        return mesh_mod.make_cohort_mesh(model=self.cfg.shard_model)
+
+    def _placements(self):
+        """(params, server_state) shardings on the trainer's mesh —
+        replicated on a 1-D client mesh, per-leaf model-sharded on a
+        two-axis mesh; read from the pair built once at construction
+        (the same trees the round's jit donates against)."""
+        (s_sh, p_sh, _, _, _), _ = self._round_shardings
+        return p_sh, s_sh
 
     def _sample_clients(self, t: int) -> np.ndarray:
         with self._sample_lock:
@@ -552,6 +598,12 @@ class FederatedTrainer:
             "format": 1,
             "algorithm": self.algo.name,
             "algo_config": self._algo_echo(),
+            # informational (NOT compared on restore: the saved arrays are
+            # full host copies, so any mesh shape can pick them up)
+            "exec_mesh": {"shard_clients": self.cfg.shard_clients,
+                          "shard_model": self.cfg.shard_model,
+                          "devices": (0 if self.mesh is None
+                                      else int(self.mesh.devices.size))},
             "num_clients": self.num_clients,
             "clients_per_round": k,
             "sampler": {"class": type(self.sampler).__name__,
@@ -569,7 +621,14 @@ class FederatedTrainer:
         """Load a TrainerState saved by ``save`` into this (freshly
         constructed) trainer; ``run()`` then continues from the saved
         round. Configs/loss_fn/source are NOT checkpointed — construct
-        the trainer exactly as the original run did."""
+        the trainer exactly as the original run did.  Exception: the
+        EXECUTION levers (vectorize / shard_clients / shard_model /
+        prefetch) may differ — checkpoints hold full host arrays, so a
+        run saved on one mesh shape resumes on another (or on none)
+        numerically equivalent (allclose; bitwise identity holds only
+        for a same-mesh resume — a mesh shape change reorders the f32
+        reductions); a shard_model that cannot tile the new device
+        count fails loudly at construction."""
         if self._prefetcher is not None or self.history or self.schedule:
             # a used trainer has a live prefetch thread drawing this RNG
             # and staged rounds past the restore point — rewinding it in
@@ -621,10 +680,14 @@ class FederatedTrainer:
         self.params = state["params"]
         self.server_state = state["server_state"]
         if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            rep = NamedSharding(self.mesh, P())
-            self.params = jax.device_put(self.params, rep)
-            self.server_state = jax.device_put(self.server_state, rep)
+            # checkpoints hold full (host) arrays, so restoring onto a
+            # DIFFERENT mesh shape than the one that saved them works:
+            # the state is simply re-placed with this trainer's layout
+            # (an impossible shard_model — not dividing the device count
+            # — already failed loudly in _build_mesh)
+            p_sh, s_sh = self._placements()
+            self.params = jax.device_put(self.params, p_sh)
+            self.server_state = jax.device_put(self.server_state, s_sh)
         self.rng.set_state(("MT19937",
                             np.asarray(arrays["rng_keys"], np.uint32),
                             int(arrays["rng_pos"]),

@@ -27,7 +27,13 @@ deltas are client-stacked pytrees (leading axis k'), client_ids (k',) int32.
 pads the cohort to a multiple of the client axis (DESIGN.md §2): masked
 rows carry dummy clients whose deltas must not perturb the client mean,
 FedExP's extrapolation count, or FedVARP's table — dummy client_ids are
-out of range and are dropped by the scatter.
+out of range and are dropped by the scatter.  ``model_sharded`` (bool
+kwarg, default False) declares that delta/param leaves are partitioned
+over a mesh model axis (the two-axis round, §2); rules that only use
+dim-preserving tree reductions can ignore it (GSPMD reduces the partials
+for free), rules with layout-sensitive fast paths (FedDPC's Pallas
+epilogue) must fall back.  Steps accept unknown kwargs (**_) so new
+execution hints never break an algorithm that does not care.
 
 Algorithms register through ``register_algorithm(name, HyperCls)``: each
 carries a frozen hyperparameter dataclass (``FedDPCHyper(lam=...)``,
@@ -326,10 +332,11 @@ def _build_fedvarp(h):
 @register_algorithm("feddpc", FedDPCHyper)
 def _build_feddpc(h):
     def step(state, params, deltas, client_ids, eta_g, t,
-             client_mask=None, **_):
+             client_mask=None, model_sharded=False, **_):
         return feddpc_mod.server_step(state, params, deltas, eta_g, h.lam,
                                       use_kernel=h.use_kernel,
-                                      client_mask=client_mask)
+                                      client_mask=client_mask,
+                                      model_sharded=model_sharded)
     return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step)
 
 
@@ -407,10 +414,10 @@ def _build_feddpc_m(h):
         return s
 
     def step(state, params, deltas, client_ids, eta_g, t,
-             client_mask=None, **_):
+             client_mask=None, model_sharded=False, **_):
         _, new_state, diag = feddpc_mod.server_step(
             {"delta_prev": state["delta_prev"]}, params, deltas, 0.0, lam,
-            client_mask=client_mask)
+            client_mask=client_mask, model_sharded=model_sharded)
         delta_t = new_state["delta_prev"]
         m = jax.tree.map(
             lambda mm, d: beta * mm.astype(jnp.float32)

@@ -30,7 +30,7 @@ def init_state(params: PyTree) -> Dict[str, PyTree]:
 
 def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
                 eta_g: float, lam: float = 1.0, use_kernel: bool = False,
-                client_mask=None
+                client_mask=None, model_sharded: bool = False
                 ) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jnp.ndarray]]:
     """One FedDPC aggregation.
 
@@ -45,8 +45,21 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     unchanged mean-over-k' epilogue (jnp or Pallas) then computes the
     mean over real clients only, with no kernel changes.
 
+    model_sharded=True declares that the delta/param leaves are
+    PARTITIONED over a mesh model axis (the two-axis cohort round,
+    DESIGN.md §2). The reduction-pass scalars need no change: they go
+    through dim-preserving per-leaf sums (projection.tree_vdot), so
+    GSPMD psums the ||Δ||² / <Δ, Δ_prev> partials across the model axis
+    before ``scale``/``coef`` are formed. The Pallas epilogue, however,
+    flattens every leaf (reshaping a partitioned leaf forces an
+    all-gather) and pallas_call does not partition under GSPMD, so
+    ``use_kernel`` falls back to the reference jnp epilogue — which is
+    elementwise on the local shards and exact.
+
     Returns (new_params, new_state, diagnostics).
     """
+    if model_sharded:
+        use_kernel = False
     delta_prev = state["delta_prev"]
 
     # reduction pass: per-client scalars (4 dots each, vmapped over K)

@@ -42,7 +42,10 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       optimizer: str = "sgd",
                       jit: bool = True, donate: bool = True,
                       mesh=None, client_axis: str = "clients",
-                      pad_clients: bool = False):
+                      model_axis: str = "model",
+                      pad_clients: bool = False,
+                      shard_templates: Tuple[PyTree, PyTree] = None,
+                      shardings=None):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids) -> (new_params, new_server_state, losses, diag).
 
@@ -70,6 +73,19 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     mask from ``masks`` so dummy clients stay out of every server mean
     and out of FedVARP's table.
 
+    A TWO-AXIS mesh (``model_axis`` present with size > 1, built by
+    make_cohort_mesh(model=N)) additionally shards params / server state
+    per leaf over ``model`` (§8 rules + trailing-dim fallback) so each
+    client slice carries only 1/|model| of the weights. That layout
+    needs shape templates: ``shard_templates=(params, server_state)``
+    (only shapes are read). Deltas inherit the (clients, model) layout
+    from the vmapped local training, the FedDPC reduction-pass scalars
+    reduce over BOTH axes automatically (dim-preserving per-leaf sums ->
+    GSPMD inserts the model-axis psum before the scale is formed), and
+    the server rule sees ``model_sharded=True`` so the Pallas epilogue
+    falls back to the reference path (its flatten would all-gather the
+    shards).
+
     The per-variant local-training knobs (mu / cm_alpha / ga_beta) come
     from the algorithm's own hyperparameters (``algo.client_hparams``);
     anything the algorithm leaves unset keeps the local-update builder's
@@ -78,6 +94,9 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     local = client_mod.make_cohort_local_update(
         loss_fn, eta_l, variant=algo.client_variant, optimizer=optimizer,
         **client_kwargs(algo))
+    model_sharded = bool(
+        mesh is not None and model_axis in mesh.axis_names
+        and dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis] > 1)
 
     def cohort_round(server_state, params, batches, masks, client_ids):
         extra = algo.client_extra(server_state)
@@ -86,23 +105,32 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
               if pad_clients and masks is not None else None)
         new_params, new_state, diag = algo.step(
             server_state, params, deltas, client_ids, eta_g, 0,
-            client_mask=cm)
+            client_mask=cm, model_sharded=model_sharded)
         return new_params, new_state, losses, diag
 
     if not jit:
         return cohort_round
     kw = {"donate_argnums": (0, 1) if donate else ()}
     if mesh is not None:
-        from repro.sharding.rules import cohort_round_shardings
-        kw["in_shardings"], kw["out_shardings"] = cohort_round_shardings(
-            mesh, client_axis)
+        if shardings is None:
+            # `shardings` lets a caller that already built the
+            # (in, out) pair (the trainer, which also pre-places the
+            # state with it) avoid recomputing the per-leaf specs
+            from repro.sharding.rules import cohort_round_shardings
+            tmpl_p, tmpl_s = shard_templates or (None, None)
+            shardings = cohort_round_shardings(
+                mesh, client_axis, model_axis=model_axis, params=tmpl_p,
+                server_state=tmpl_s)
+        kw["in_shardings"], kw["out_shardings"] = shardings
     return jax.jit(cohort_round, **kw)
 
 
 def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                        eta_l: float, eta_g: float, lam: float = 1.0,
                        algorithm: str = "feddpc", *,
-                       mesh=None, client_axis: str = "clients"):
+                       mesh=None, client_axis: str = "clients",
+                       model_axis: str = "model",
+                       params_template: PyTree = None):
     """Mesh-path wrapper: round_step(params, delta_prev, batches) ->
     (new_params, new_delta_prev, metrics).
 
@@ -122,6 +150,10 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         client-axis NamedSharding layout as the simulation trainer
         (batches sharded on K over ``client_axis``, params/delta_prev
         replicated) — the unified sharded round of DESIGN.md §2.
+      * mesh=<two-axis (clients, model) mesh>: params AND delta_prev
+        shard per leaf over ``model_axis`` (sharding/rules.
+        cohort_param_specs); needs ``params_template`` for the leaf
+        shapes, and fails loudly without it.
     """
     hyper = {"lam": lam} if algorithm in ("feddpc", "feddpc_m") else None
     algo = make_algorithm(algorithm, hyper)
@@ -131,7 +163,12 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             f"make_fl_round_step supports algorithms whose server state is "
             f"exactly {{'delta_prev'}}; {algorithm!r} keeps {sorted(probe)} "
             f"— use make_cohort_round for stateful server rules")
-    cohort = make_cohort_round(loss_fn, algo, eta_l, eta_g, jit=False)
+    # mesh/model_axis are forwarded so the raw round still sees
+    # model_sharded=True on a two-axis mesh (the Pallas-fallback contract
+    # holds on this entry point too); jit=False leaves the sharding
+    # layout to the external jit below
+    cohort = make_cohort_round(loss_fn, algo, eta_l, eta_g, jit=False,
+                               mesh=mesh, model_axis=model_axis)
 
     def round_step(params, delta_prev, batches):
         k = jax.tree.leaves(batches)[0].shape[0]
@@ -151,7 +188,24 @@ def make_fl_round_step(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     if mesh is None:
         return round_step
     # same layout as the simulation trainer: (state, params, batches, ...)
-    # -> here state==delta_prev and metrics are scalars (replicated)
+    # -> here state==delta_prev (a tree mirroring params, so on a
+    # two-axis mesh it takes the params' per-leaf specs) and metrics are
+    # scalars (replicated)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if axis_sizes.get(model_axis, 1) > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.rules import cohort_param_specs, to_named
+        if params_template is None:
+            raise ValueError(
+                f"mesh carries a {model_axis!r} axis of size "
+                f"{axis_sizes[model_axis]}: make_fl_round_step needs "
+                "params_template= for the per-leaf model specs")
+        p_s = to_named(cohort_param_specs(params_template, mesh,
+                                          client_axis, model_axis), mesh)
+        b_s = NamedSharding(mesh, P(client_axis))
+        rep = NamedSharding(mesh, P())
+        return jax.jit(round_step, in_shardings=(p_s, p_s, b_s),
+                       out_shardings=(p_s, p_s, rep))
     from repro.sharding.rules import cohort_round_shardings
     (st_s, p_s, b_s, _, _), (po_s, so_s, _, m_s) = cohort_round_shardings(
         mesh, client_axis)

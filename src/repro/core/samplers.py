@@ -168,3 +168,22 @@ class MarkovSampler(ClientSampler):
     def config_dict(self):
         return {**super().config_dict(),
                 "p_on": self.p_on, "p_off": self.p_off}
+
+
+def sampler_matrix(num_clients: int, cohort_size: int
+                   ) -> Dict[str, ClientSampler]:
+    """One representatively-configured instance of every sampler — the
+    participation axis of the cross-regime equivalence matrix
+    (tests/test_regime_matrix.py).  A NEW sampler class added to this
+    module registers an instance here and the matrix auto-enrolls it.
+    Weighted uses size-proportional weights (1..n) so the draw is
+    genuinely non-uniform; Markov uses asymmetric on/off rates so the
+    availability chain actually evolves."""
+    return {
+        "uniform": UniformSampler(num_clients, cohort_size),
+        "weighted": WeightedSampler(
+            np.arange(1, num_clients + 1, dtype=np.float64), cohort_size),
+        "cyclic": CyclicSampler(num_clients, cohort_size),
+        "markov": MarkovSampler(num_clients, cohort_size,
+                                p_on=0.7, p_off=0.4),
+    }

@@ -36,14 +36,34 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
-def make_cohort_mesh(num_devices: int = None, axis: str = "clients"):
-    """1-D mesh over the local devices for the simulation trainer's
-    client-axis sharding (DESIGN.md §2): the fused cohort round's
-    (K, M, ...) batch stack is data-parallel over ``axis`` while params /
-    server state replicate. On CPU CI this is exercised with
+def make_cohort_mesh(num_devices: int = None, axis: str = "clients",
+                     model: int = 1):
+    """Mesh over the local devices for the simulation trainer's cohort
+    sharding (DESIGN.md §2).
+
+    ``model == 1`` (default): the historical 1-D ``(axis,)`` mesh — the
+    fused cohort round's (K, M, ...) batch stack is data-parallel over
+    ``axis`` while params / server state replicate.
+
+    ``model > 1``: a two-axis ``(devices // model, model)`` mesh over
+    ``(axis, "model")`` — each client slice holds a model-parallel
+    replica whose params / server state shard over ``model`` with the §8
+    per-leaf rules (sharding/rules.cohort_param_specs), the layout for
+    models larger than one device's HBM. ``model`` must divide the
+    device count; anything else fails loudly here rather than producing
+    a silently lopsided mesh.
+
+    On CPU CI both shapes are exercised with
     XLA_FLAGS=--xla_force_host_platform_device_count=8."""
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), **_mesh_kwargs(1))
+    if model <= 1:
+        return jax.make_mesh((n,), (axis,), **_mesh_kwargs(1))
+    if n % model:
+        raise ValueError(
+            f"model={model} does not divide the {n} available devices; "
+            f"a ({axis}, model) mesh needs clients x model == devices")
+    return jax.make_mesh((n // model, model), (axis, "model"),
+                         **_mesh_kwargs(2))
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):

@@ -8,9 +8,12 @@ paper's experiments on synthetic heterogeneous data).
 Built on the composable engine (DESIGN.md §3): the participation model is
 selectable (--sampler uniform|weighted|cyclic|markov), vision data
 streams through ``StreamingImageSource`` (batches materialize on the
-prefetch thread), and --ckpt-dir/--ckpt-every/--resume checkpoint the
-full TrainerState so an interrupted run continues exactly where it
-stopped.
+prefetch thread), --shard-clients/--model-shards turn on the sharded
+cohort round (--model-shards M > 1 builds the two-axis (clients, model)
+mesh of DESIGN.md §2 — per-leaf model-sharded params for >HBM configs),
+and --ckpt-dir/--ckpt-every/--resume checkpoint the full TrainerState so
+an interrupted run continues exactly where it stopped (mesh-shape
+changes across save/resume included).
 
 Also supports federated *LM* training with any assigned architecture's
 smoke config (--model starcoder2-3b etc.) — the beyond-paper scenario
@@ -135,6 +138,14 @@ def main(argv=None):
     ap.add_argument("--serial", action="store_true",
                     help="per-client dispatch instead of the fused "
                          "cohort-vectorized round (debug/reference path)")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="shard the cohort's client axis over the local "
+                         "devices (DESIGN.md §2)")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="model-axis shards per client slice: >1 builds "
+                         "the two-axis (clients, model) mesh so params/"
+                         "server state shard per leaf over `model` (the "
+                         ">HBM layout); must divide the device count")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -157,6 +168,7 @@ def main(argv=None):
     cfg = ExecConfig(
         rounds=args.rounds, clients_per_round=cohort, seed=args.seed,
         eval_every=args.eval_every, vectorize=not args.serial,
+        shard_clients=args.shard_clients, shard_model=args.model_shards,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
 

@@ -1,2 +1,3 @@
 from repro.sharding.rules import (ShardingPolicy, param_specs, batch_specs,
-                                  state_specs, cohort_round_shardings)
+                                  state_specs, cohort_round_shardings,
+                                  cohort_param_specs, cohort_state_specs)

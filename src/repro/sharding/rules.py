@@ -240,25 +240,125 @@ def to_named(specs: PyTree, mesh: Mesh) -> PyTree:
 
 # ---------------- cohort (simulation FL) round ----------------
 
-def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients"):
-    """In/out sharding PREFIX trees for the fused cohort round
-    (core/round.py ``make_cohort_round``), signature
+def cohort_param_specs(params: PyTree, mesh: Mesh,
+                       client_axis: str = "clients",
+                       model_axis: str = "model",
+                       pol: Optional[ShardingPolicy] = None) -> PyTree:
+    """Per-leaf ``model``-axis specs for the two-axis cohort round
+    (DESIGN.md §2): the §8 name-based rules apply first (Megatron layout
+    for LM-named leaves), and any leaf they leave fully replicated falls
+    back to sharding its LAST model-divisible dim over ``model_axis`` —
+    generic parameter trees (the paper's vision models, test MLPs) still
+    partition, which is the whole point of the model axis (>HBM params).
+    The client axis never appears in a param spec: the global model is
+    identical across the cohort by definition.
+    """
+    pol = pol or ShardingPolicy(model_axis=model_axis,
+                                batch_axes=(client_axis,), expert_axis=None)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = axis_sizes.get(model_axis, 1)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key_str(k) for k in path)
+        shape = np.shape(leaf)
+        spec = _leaf_spec(pstr, shape, pol, axis_sizes)
+        if msize > 1 and not any(s is not None for s in spec):
+            out = [None] * len(shape)
+            for i in range(len(shape) - 1, -1, -1):
+                if shape[i] % msize == 0:
+                    out[i] = model_axis
+                    break
+            spec = P(*out)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cohort_state_specs(server_state: PyTree, params: PyTree, mesh: Mesh,
+                       client_axis: str = "clients",
+                       model_axis: str = "model",
+                       pol: Optional[ShardingPolicy] = None) -> PyTree:
+    """Model-axis specs for server state, co-varying with the param layout
+    (DESIGN.md §2): every server rule's state is either a tree mirroring
+    the params (``delta_prev``, FedDPC-M/FedAdam moments — same spec as
+    the matching param leaf), a PER-CLIENT table with a leading
+    ``num_clients`` dim over param-shaped rows (FedVARP's ``y`` — leading
+    dim replicated, trailing dims take the param leaf's spec), or a
+    scalar (replicated). Matching is by path: ``<key>/<param path>``
+    looks up ``<param path>`` in the params tree.
+    """
+    pspecs = cohort_param_specs(params, mesh, client_axis, model_axis, pol)
+    pflat, _ = jax.tree_util.tree_flatten_with_path(params)
+    sflat = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    by_path = {"/".join(_key_str(k) for k in path): (np.shape(leaf), spec)
+               for (path, leaf), spec in zip(pflat, sflat)}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(server_state)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key_str(k) for k in path)
+        rest = pstr.split("/", 1)[1] if "/" in pstr else None
+        shape = np.shape(leaf)
+        ent = by_path.get(rest)
+        if ent is None:
+            specs.append(P())                       # scalars / unknown leaves
+        elif shape == ent[0]:
+            specs.append(ent[1])                    # mirrors the param leaf
+        elif shape[1:] == ent[0]:
+            specs.append(P(None, *ent[1]))          # per-client table row
+        else:
+            specs.append(P())
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
+                           model_axis: str = "model",
+                           params: Optional[PyTree] = None,
+                           server_state: Optional[PyTree] = None):
+    """In/out sharding trees for the fused cohort round (core/round.py
+    ``make_cohort_round``), signature
     (server_state, params, batches, masks, client_ids) ->
     (new_params, new_state, losses, diag).
 
     The client-stacked inputs (batches/masks/ids: leading axis K) shard
-    over ``client_axis``; params and server state replicate — FedDPC's
-    epilogue then lowers to 4 scalar all-reduces + one all-reduce for the
-    client mean (DESIGN.md §2). Prefix shardings apply to every leaf, so
-    the same pair covers any batch pytree / server-state shape.
+    over ``client_axis``. What happens to params / server state depends
+    on the mesh:
+
+    * 1-D client mesh (no ``model_axis``, or axis size 1): params and
+      server state REPLICATE — FedDPC's epilogue then lowers to 4 scalar
+      all-reduces + one all-reduce for the client mean (DESIGN.md §2).
+      Prefix shardings apply to every leaf, so the same pair covers any
+      batch pytree / server-state shape and no templates are needed.
+    * two-axis (clients × model) mesh: params and server state get
+      PER-LEAF ``model``-sharded specs (``cohort_param_specs`` /
+      ``cohort_state_specs``), so each client slice holds only 1/|model|
+      of the weights — the >HBM regime. This needs the actual
+      ``params`` / ``server_state`` templates (shapes only are read);
+      omitting them on a two-axis mesh fails loudly here rather than
+      silently replicating a model that does not fit.
 
     Returns (in_shardings, out_shardings) ready for jax.jit.
     """
     if client_axis not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no {client_axis!r} axis")
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    two_axis = axis_sizes.get(model_axis, 1) > 1
+    if two_axis and (params is None or server_state is None):
+        raise ValueError(
+            f"mesh carries a {model_axis!r} axis of size "
+            f"{axis_sizes[model_axis]}: the two-axis cohort round needs "
+            "params/server_state templates for per-leaf specs (pass "
+            "shard_templates= to make_cohort_round)")
     rep = NamedSharding(mesh, P())
     cli = NamedSharding(mesh, P(client_axis))
-    # losses (K,) stay client-sharded; diagnostics are scalars -> replicated
-    return (rep, rep, cli, cli, cli), (rep, rep, cli, rep)
+    if not two_axis:
+        # losses (K,) stay client-sharded; diagnostics are scalars ->
+        # replicated
+        return (rep, rep, cli, cli, cli), (rep, rep, cli, rep)
+    p_sh = to_named(cohort_param_specs(params, mesh, client_axis,
+                                       model_axis), mesh)
+    s_sh = to_named(cohort_state_specs(server_state, params, mesh,
+                                       client_axis, model_axis), mesh)
+    return (s_sh, p_sh, cli, cli, cli), (p_sh, s_sh, cli, rep)
 
 

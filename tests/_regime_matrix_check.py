@@ -1,0 +1,188 @@
+"""Subprocess body for the cross-regime equivalence test matrix.
+
+Runs on 8 FORCED host devices (the XLA flag must be set before jax
+initializes, which is why this lives in its own process rather than the
+main pytest interpreter). Every cell of the matrix
+
+    algorithm x sampler x execution regime x {prefetch on/off}
+
+must reproduce the serial reference (vectorize=False, prefetch=False)
+round for round: identical client schedule, allclose params / server
+state / per-round losses / diagnostics. The axes come from the LIVE
+registries — ``repro.core.baselines.ALGORITHM_NAMES``,
+``repro.core.samplers.sampler_matrix`` and ``repro.core.api.
+EXEC_REGIMES`` — so a newly registered algorithm, sampler, or execution
+regime auto-enrolls without touching this file.
+
+On the 8-device harness ``sharded2d`` is the (2 clients x 4 model) mesh
+of the acceptance criteria; the model dims of the toy task (16, 4) are
+4-divisible so the model axis genuinely partitions the leaves.
+
+Invoked by tests/test_regime_matrix.py with either
+    --cells algo:sampler:regime:{P|N}[,...]     matrix cells to check
+    --cross-mesh-resume                         save on 2-axis, resume 1-D
+    --kernel-fallback                           use_kernel under sharded2d
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+import jax.numpy as jnp     # noqa: E402
+
+from repro.core.api import (AlgoConfig, EXEC_REGIMES,       # noqa: E402
+                            ExecConfig, FederatedTrainer)
+from repro.core.baselines import default_hyper              # noqa: E402
+from repro.core.samplers import sampler_matrix              # noqa: E402
+from _tree_assert import assert_trees_close                 # noqa: E402
+
+NUM_CLIENTS = 10
+K = 3           # pads to 8 on the 1-D client axis, to 4 on the 2-axis mesh
+ROUNDS = 3
+
+
+def loss_fn(p, batch):
+    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
+    pred = h @ p["w2"] + p["b2"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w1": jnp.asarray(r.randn(8, 16) * 0.3, jnp.float32),
+            "b1": jnp.zeros((16,), jnp.float32),
+            "w2": jnp.asarray(r.randn(16, 4) * 0.3, jnp.float32),
+            "b2": jnp.zeros((4,), jnp.float32)}
+
+
+def batch_fn(c, t):
+    """(c % 2) + 1 minibatches — cohorts are ragged by construction."""
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 8).astype(np.float32),
+             "y": r.randn(8, 4).astype(np.float32)}
+            for _ in range((c % 2) + 1)]
+
+
+def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,
+             use_kernel: bool = False) -> FederatedTrainer:
+    cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                     eval_every=10 ** 9, prefetch=prefetch,
+                     **EXEC_REGIMES[regime])
+    with FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, batch_fn, cfg,
+            algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1,
+                            hyper=default_hyper(algo,
+                                                use_kernel=use_kernel)),
+            sampler=sampler_matrix(NUM_CLIENTS, K)[sampler_name]) as tr:
+        tr.run()
+    return tr
+
+
+_ref_cache = {}
+
+
+def reference(algo: str, sampler_name: str) -> FederatedTrainer:
+    key = (algo, sampler_name)
+    if key not in _ref_cache:
+        _ref_cache[key] = run_cell(algo, sampler_name, "serial", False)
+    return _ref_cache[key]
+
+
+def check_cell(cell: str):
+    algo, sampler_name, regime, pf = cell.split(":")
+    prefetch = {"P": True, "N": False}[pf]
+    if regime == "serial" and not prefetch:
+        # this IS the reference configuration: run it into the cache
+        reference(algo, sampler_name)
+        print(f"[matrix] {cell} is the reference OK")
+        return
+    tr = run_cell(algo, sampler_name, regime, prefetch)
+    ref = reference(algo, sampler_name)
+    for a, b in zip(ref.schedule[:ROUNDS], tr.schedule[:ROUNDS]):
+        assert (np.asarray(a) == np.asarray(b)).all(), (cell, a, b)
+    assert_trees_close(tr.params, ref.params)
+    assert_trees_close(tr.server_state, ref.server_state)
+    for rv, rs in zip(tr.history, ref.history):
+        assert np.isclose(rv.train_loss, rs.train_loss,
+                          rtol=1e-4, atol=1e-6), cell
+        assert rv.diagnostics.keys() == rs.diagnostics.keys(), cell
+        for key in rv.diagnostics:
+            assert np.isclose(rv.diagnostics[key], rs.diagnostics[key],
+                              rtol=1e-3, atol=1e-4), (cell, key)
+    if regime == "sharded2d":
+        assert tr.mesh is not None and tr.mesh.devices.shape == (2, 4)
+        # the model axis must actually partition a param leaf
+        from jax.sharding import PartitionSpec as P
+        assert tr.params["w1"].sharding.spec == P(None, "model"), \
+            tr.params["w1"].sharding
+    print(f"[matrix] {cell} == serial reference OK")
+
+
+def check_cross_mesh_resume():
+    """Save a 2-axis run mid-stream, resume it on a 1-D client mesh: the
+    checkpoint holds full host arrays, so a mesh-shape change across
+    save/resume works (allclose — mesh shape changes the reduction
+    order, so bitwise equality only holds for same-mesh resume, which
+    tests/test_resume.py covers)."""
+    algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+
+    def cfg(**kw):
+        return ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                          eval_every=10 ** 9, **kw)
+
+    with tempfile.TemporaryDirectory() as d:
+        tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                              cfg(shard_clients=True, shard_model=4),
+                              algo=algo)
+        with tr:
+            tr.run_round(0)
+            tr.run_round(1)
+            tr.save(d)
+            tr.run_round(2)
+        tr2 = FederatedTrainer.resume(d, loss_fn, make_params(), NUM_CLIENTS,
+                                      batch_fn, cfg(shard_clients=True),
+                                      algo=algo)
+        assert tr2.start_round == 2, tr2.start_round
+        assert tr2.mesh.devices.shape == (8,)
+        with tr2:
+            tr2.run()
+    assert_trees_close(tr.params, tr2.params)
+    assert_trees_close(tr.server_state, tr2.server_state)
+    print("[matrix] cross-mesh (2x4 -> 8) resume OK")
+
+
+def check_kernel_fallback():
+    """FedDPCHyper(use_kernel=True) under the two-axis mesh must fall
+    back to the reference epilogue (model-sharded leaves) and still
+    match the serial reference."""
+    tr = run_cell("feddpc", "uniform", "sharded2d", True, use_kernel=True)
+    ref = reference("feddpc", "uniform")
+    assert_trees_close(tr.params, ref.params)
+    assert_trees_close(tr.server_state, ref.server_state)
+    print("[matrix] use_kernel fallback under sharded2d OK")
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="")
+    ap.add_argument("--cross-mesh-resume", action="store_true")
+    ap.add_argument("--kernel-fallback", action="store_true")
+    args = ap.parse_args()
+    for cell in [c for c in args.cells.split(",") if c]:
+        check_cell(cell)
+    if args.cross_mesh_resume:
+        check_cross_mesh_resume()
+    if args.kernel_fallback:
+        check_kernel_fallback()
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

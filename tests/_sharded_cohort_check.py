@@ -28,6 +28,7 @@ from repro.core.api import (AlgoConfig, ExecConfig,         # noqa: E402
 from repro.core.round import make_fl_round_step             # noqa: E402
 from repro.core.samplers import WeightedSampler             # noqa: E402
 from repro.launch.mesh import make_cohort_mesh              # noqa: E402
+from _tree_assert import assert_trees_close                 # noqa: E402
 
 NUM_CLIENTS = 16
 K = 8                       # divisible by the 8-device client axis
@@ -49,14 +50,6 @@ def ragged_batch_fn(c, t):
     return [{"x": r.randn(8, 4).astype(np.float32),
              "y": r.randn(8, 3).astype(np.float32)}
             for _ in range((c % 3) + 1)]
-
-
-def assert_trees_close(a, b, rtol=1e-5, atol=1e-6):
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert len(la) == len(lb)
-    for x, y in zip(la, lb):
-        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
-                                   rtol=rtol, atol=atol)
 
 
 def check_trainer(algo: str, k: int = K):

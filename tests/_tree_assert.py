@@ -1,0 +1,13 @@
+"""Shared pytree allclose helper for the equivalence checks (importable
+from both the pytest modules and the forced-device subprocess scripts —
+it must not import jax config side effects, only compare)."""
+import jax
+import numpy as np
+
+
+def assert_trees_close(a, b, rtol=1e-5, atol=1e-6):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)

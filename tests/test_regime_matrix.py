@@ -1,0 +1,106 @@
+"""Cross-regime equivalence test matrix (DESIGN.md §2/§3).
+
+The regime surface — algorithms x participation samplers x execution
+regimes x prefetch — has outgrown hand-written equivalence tests. This
+matrix is GENERATED from the live registries (``ALGORITHM_NAMES``,
+``sampler_matrix``, ``EXEC_REGIMES``), so a newly registered algorithm,
+sampler, or execution regime auto-enrolls; every cell must be
+round-for-round allclose to the serial reference.
+
+The device count locks at jax init, so the checks run on a forced
+8-device subprocess (tests/_regime_matrix_check.py). Tier-1 keeps a fast
+representative slice (every regime, the 2x4 acceptance mesh for
+feddpc/fedavg/fedvarp, non-uniform samplers); the full
+algorithm-diagonal sweep is marked slow.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.api import EXEC_REGIMES
+from repro.core.baselines import ALGORITHM_NAMES
+from repro.core.samplers import sampler_matrix
+
+ALGOS = tuple(ALGORITHM_NAMES)
+SAMPLERS = tuple(sampler_matrix(8, 2))
+REGIMES = tuple(EXEC_REGIMES)
+
+
+def full_matrix():
+    """Every cell: (algorithm, sampler, regime, prefetch)."""
+    return [(a, s, r, p) for a in ALGOS for s in SAMPLERS
+            for r in REGIMES for p in (True, False)]
+
+
+def _cell_str(cell):
+    a, s, r, p = cell
+    return f"{a}:{s}:{r}:{'P' if p else 'N'}"
+
+
+def _run_check(args, timeout=900):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(root, "tests", "_regime_matrix_check.py"), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL OK" in proc.stdout
+
+
+# the tier-1 slice: every execution regime at least once, the (2 clients
+# x 4 model) acceptance mesh for feddpc/fedavg/fedvarp, and every
+# non-uniform sampler against a non-serial regime
+FAST_SLICE = [
+    ("feddpc", "uniform", "serial", True),
+    ("feddpc", "uniform", "vectorized", True),
+    ("feddpc", "uniform", "sharded1d", True),
+    ("feddpc", "uniform", "sharded2d", True),
+    ("fedavg", "uniform", "sharded2d", True),
+    ("fedvarp", "uniform", "sharded2d", True),
+    ("feddpc", "markov", "sharded2d", True),
+    ("fedexp", "cyclic", "sharded1d", False),
+    ("fedvarp", "weighted", "vectorized", True),
+]
+
+
+def test_matrix_axes_come_from_the_registries():
+    """Auto-enroll guard: the axes are read from the live registries, so
+    a new algorithm/sampler/regime lands in full_matrix() without
+    touching the tests — and the slices stay valid sub-sets."""
+    assert {"serial", "vectorized", "sharded1d", "sharded2d"} <= set(REGIMES)
+    assert {"uniform", "weighted", "cyclic", "markov"} <= set(SAMPLERS)
+    assert {"feddpc", "fedavg", "fedvarp", "fedexp"} <= set(ALGOS)
+    cells = set(full_matrix())
+    assert len(cells) == len(ALGOS) * len(SAMPLERS) * len(REGIMES) * 2
+    assert set(FAST_SLICE) <= cells
+    # the 2-D path enrolled automatically (acceptance criterion)
+    assert EXEC_REGIMES["sharded2d"]["shard_model"] > 1
+
+
+def test_regime_matrix_fast_slice():
+    _run_check(["--cells", ",".join(map(_cell_str, FAST_SLICE))])
+
+
+def test_cross_mesh_resume():
+    _run_check(["--cross-mesh-resume"])
+
+
+def test_kernel_fallback_model_sharded():
+    _run_check(["--kernel-fallback"])
+
+
+@pytest.mark.slow
+def test_regime_matrix_diagonal():
+    """Every algorithm under every regime, with sampler and prefetch
+    rotating per algorithm so all matrix axis values keep appearing —
+    one subprocess so the serial references are shared across regimes."""
+    cells = [(a, SAMPLERS[i % len(SAMPLERS)], r, bool((i + j) % 2))
+             for j, r in enumerate(REGIMES)
+             for i, a in enumerate(ALGOS)]
+    assert set(cells) <= set(full_matrix())
+    _run_check(["--cells", ",".join(map(_cell_str, cells))])

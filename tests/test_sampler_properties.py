@@ -1,0 +1,114 @@
+"""Property-based tests for the ClientSampler round-order RNG contract
+(DESIGN.md §3).
+
+The contract the trainer, the cohort prefetcher, and save()/resume()
+all lean on:
+
+  * ``sample(rng, t)`` is a pure function of (rng state, sampler state,
+    t) — the schedule depends only on the seed and the ROUND ORDER of
+    the draws, never on when they happen. That is what makes a
+    prefetched run (which draws rounds ahead of consumption) reproduce
+    a blocking one, at ANY staging depth.
+  * cohorts are exactly ``cohort_size`` distinct in-range ids (the jit
+    shape bucket must not vary).
+  * ``state_dict()/load_state_dict()`` + the numpy RNG state capture
+    EVERYTHING a stateful sampler evolves, so a checkpoint cut at an
+    arbitrary round boundary re-draws the remaining rounds identically
+    (the unit contract under FederatedTrainer.save()/resume()).
+
+Runs under hypothesis when installed, else the deterministic fallback
+(tests/_hypothesis_compat.py).
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.samplers import sampler_matrix
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+ROUNDS = 8
+KINDS = tuple(sampler_matrix(4, 2))     # auto-enrolls new sampler kinds
+
+
+def _schedule(kind, n, k, seed, rounds=ROUNDS, start=0, sampler=None,
+              rng=None):
+    sampler = sampler if sampler is not None else sampler_matrix(n, k)[kind]
+    rng = rng if rng is not None else np.random.RandomState(seed)
+    return sampler, rng, [np.asarray(sampler.sample(rng, t))
+                          for t in range(start, rounds)]
+
+
+@given(st.sampled_from(KINDS), st.integers(2, 40), st.integers(1, 6),
+       st.integers(0, 2 ** 16))
+def test_cohorts_are_exact_distinct_in_range(kind, n, k, seed):
+    k = min(k, n)
+    _, _, sched = _schedule(kind, n, k, seed)
+    for t, cohort in enumerate(sched):
+        assert cohort.shape == (k,), (kind, t, cohort)
+        assert len(np.unique(cohort)) == k, (kind, t, cohort)
+        assert cohort.min() >= 0 and cohort.max() < n, (kind, t, cohort)
+
+
+@given(st.sampled_from(KINDS), st.integers(2, 40), st.integers(1, 6),
+       st.integers(0, 2 ** 16), st.integers(1, 6))
+def test_schedule_independent_of_staging_depth(kind, n, k, seed, depth):
+    """Prefetch-depth independence: a producer that stages ``depth``
+    rounds ahead of the consumer draws the EXACT schedule of a blocking
+    draw-on-demand loop, because draws happen in round order either way
+    and ``sample`` reads nothing but (rng, state, round)."""
+    k = min(k, n)
+    _, _, on_demand = _schedule(kind, n, k, seed)
+    # staged: fill a look-ahead buffer of `depth` rounds, then interleave
+    # produce/consume exactly as CohortPrefetcher does
+    sampler = sampler_matrix(n, k)[kind]
+    rng = np.random.RandomState(seed)
+    staged, buf, produced = [], [], 0
+    while len(staged) < ROUNDS:
+        while produced < ROUNDS and len(buf) < depth:
+            buf.append(np.asarray(sampler.sample(rng, produced)))
+            produced += 1
+        staged.append(buf.pop(0))
+    for a, b in zip(on_demand, staged):
+        assert (a == b).all(), (kind, depth)
+
+
+@given(st.sampled_from(KINDS), st.integers(2, 40), st.integers(1, 6),
+       st.integers(0, 2 ** 16), st.integers(0, ROUNDS - 1))
+def test_state_roundtrips_at_arbitrary_round_boundary(kind, n, k, seed,
+                                                      boundary):
+    """Cut the run at ANY round boundary, capture (state_dict, rng
+    state) — what FederatedTrainer.save() checkpoints — and rebuild a
+    fresh sampler from them: the remaining rounds re-draw identically.
+    Covers the stateful Markov chain mid-trajectory and the stateless
+    samplers (whose state_dict is empty by contract)."""
+    k = min(k, n)
+    sampler, rng, head = _schedule(kind, n, k, seed, rounds=boundary)
+    snap_state = sampler.state_dict()
+    snap_rng = rng.get_state()
+    # branch A: continue in place
+    _, _, tail_a = _schedule(kind, n, k, seed, start=boundary,
+                             sampler=sampler, rng=rng)
+    # branch B: fresh construction + restore, as resume() does
+    sampler_b = sampler_matrix(n, k)[kind]
+    assert sampler_b.config_dict() == sampler.config_dict()
+    sampler_b.load_state_dict(snap_state)
+    rng_b = np.random.RandomState(0)
+    rng_b.set_state(snap_rng)
+    _, _, tail_b = _schedule(kind, n, k, seed, start=boundary,
+                             sampler=sampler_b, rng=rng_b)
+    for a, b in zip(tail_a, tail_b):
+        assert (a == b).all(), (kind, boundary)
+
+
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 2 ** 16))
+def test_markov_state_dict_json_roundtrip(n, k, seed):
+    """The Markov availability vector survives the JSON sidecar channel
+    (checkpoint aux.json): dict -> json -> dict -> load_state_dict."""
+    import json
+    k = min(k, n)
+    sampler, rng, _ = _schedule("markov", n, k, seed, rounds=3)
+    state = json.loads(json.dumps(sampler.state_dict()))
+    sampler_b = sampler_matrix(n, k)["markov"]
+    sampler_b.load_state_dict(state)
+    assert (sampler_b._avail == sampler._avail).all()

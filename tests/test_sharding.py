@@ -101,6 +101,77 @@ def test_state_specs_classes(mesh):
     assert ssm_h, "expected ssm state leaves"
 
 
+class _FakeCohortMesh:
+    """Shape-only stand-in for a (2 clients x 4 model) mesh: the spec
+    builders read nothing but axis_names and devices.shape, so the
+    two-axis rules are unit-testable on tier-1's single real device."""
+    axis_names = ("clients", "model")
+
+    class devices:
+        shape = (2, 4)
+
+
+def test_cohort_param_specs_name_rules_and_fallback():
+    """Two-axis cohort specs (DESIGN.md §2): §8 name rules apply when
+    they match; unmatched leaves fall back to sharding the LAST
+    model-divisible dim; nothing divisible -> replicate."""
+    from repro.sharding.rules import cohort_param_specs
+
+    params = {
+        "wq": {"w": jnp.zeros((64, 48))},      # §8 rule: (d0, model) on dim -1
+        "w1": jnp.zeros((8, 16)),              # fallback: last divisible dim
+        "b1": jnp.zeros((16,)),                # fallback: 1-D divisible
+        "odd": jnp.zeros((7, 9)),              # nothing divisible by 4
+        "head": {"w": jnp.zeros((6, 12))},     # §8 replicates -> fallback
+        "scalar": jnp.zeros(()),
+    }
+    specs = cohort_param_specs(params, _FakeCohortMesh())
+    assert specs["wq"]["w"] == P(None, "model")
+    assert specs["w1"] == P(None, "model")
+    assert specs["b1"] == P("model")
+    assert specs["odd"] == P(None, None)
+    assert specs["head"]["w"] == P(None, "model")
+    assert specs["scalar"] == P()
+
+
+def test_cohort_state_specs_covary_with_params():
+    """Server state co-varies with the param layout by path matching:
+    mirrors take the param leaf's spec, per-client tables keep their
+    leading num_clients dim replicated, scalars replicate."""
+    from repro.sharding.rules import cohort_state_specs
+
+    params = {"w1": jnp.zeros((8, 16)), "b1": jnp.zeros((16,))}
+    state = {
+        "delta_prev": {"w1": jnp.zeros((8, 16)), "b1": jnp.zeros((16,))},
+        "y": {"w1": jnp.zeros((10, 8, 16)), "b1": jnp.zeros((10, 16))},
+        "t": jnp.zeros(()),
+    }
+    specs = cohort_state_specs(state, params, _FakeCohortMesh())
+    assert specs["delta_prev"]["w1"] == P(None, "model")
+    assert specs["delta_prev"]["b1"] == P("model")
+    assert specs["y"]["w1"] == P(None, None, "model")
+    assert specs["y"]["b1"] == P(None, "model")
+    assert specs["t"] == P()
+
+
+def test_two_axis_shardings_require_templates():
+    """A two-axis mesh without params/server_state templates fails
+    loudly instead of silently replicating a model that does not fit."""
+    from repro.launch.mesh import make_cohort_mesh
+    from repro.sharding.rules import cohort_round_shardings
+    if len(jax.devices()) != 1:
+        pytest.skip("expects the default 1-device CPU")
+    mesh = jax.make_mesh((1, 1), ("clients", "model"))
+    # size-1 model axis -> still the replicated prefix layout, no
+    # templates needed
+    (s, p, b, m, i), _ = cohort_round_shardings(mesh)
+    assert p.spec == P() and b.spec == P("clients")
+    with pytest.raises(ValueError, match="does not divide"):
+        make_cohort_mesh(model=3)   # 1 device cannot tile (clients, 3)
+    with pytest.raises(ValueError, match="templates"):
+        cohort_round_shardings(_FakeCohortMesh())   # real >1 model axis
+
+
 def test_collective_bytes_parser():
     hlo = """
   %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={{0,1}}
