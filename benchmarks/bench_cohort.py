@@ -21,6 +21,16 @@ blocked on cohort stacking — so the prefetch win is measured directly.
   PYTHONPATH=src python -m benchmarks.bench_cohort --devices 8   # full sweep
   PYTHONPATH=src python -m benchmarks.bench_cohort --rounds 3 --devices 8
 
+``--ingest-sweep`` runs the STAGED-INGEST receipt instead (DESIGN.md
+§10): prefetch_depth in {1, 2, 4, 8} x {host-staged, device-staged},
+reporting the split ingest waits (``ingest_host_mean_s`` = blocked on
+staging, ``ingest_device_mean_s`` = blocked on H2D placement at
+dispatch) -> BENCH_ingest.json. The headline number is
+``transfer_wait_reduction_device_vs_host_d2``: how much of the depth-2
+host-staged baseline's dispatch-side transfer wait device staging
+removes (it moves the placement onto the staging thread, so the
+consumer-side wait collapses to ~0 by construction).
+
 ``--devices N`` must be handled BEFORE jax initializes (the device count
 locks at first init), hence the argv scan at the top of this module.
 """
@@ -61,6 +71,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(_ROOT, "BENCH_cohort_sharded.json")
 # --model-shards sweeps land in their own receipt
 DEFAULT_OUT_2AXIS = os.path.join(_ROOT, "BENCH_cohort_2axis.json")
+# --ingest-sweep (depth x staging) receipt
+DEFAULT_OUT_INGEST = os.path.join(_ROOT, "BENCH_ingest.json")
 
 # mode name -> config overrides (use_kernel routes into the feddpc hyper,
 # the rest are ExecConfig fields); the sweep skips nothing silently — a
@@ -145,7 +157,92 @@ def bench(overrides: dict, *, params, loss_fn, batch_fn, k: int,
             "p90_s": float(np.percentile(times, 90)),
             "min_s": float(times.min()),
             "ingest_mean_s": float(ingest.mean()),
+            "ingest_host_mean_s": float(np.mean(
+                [r.ingest_host_seconds for r in recs])),
+            "ingest_device_mean_s": float(np.mean(
+                [r.ingest_device_seconds for r in recs])),
             "rounds": int(rounds)}
+
+
+def run_ingest_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
+                     batches_per_client: int = 4, batch: int = None,
+                     dim: int = None, hidden: int = None, classes: int = 10,
+                     algorithm: str = "feddpc", out: str = None) -> Dict:
+    """Staged-ingest receipt (DESIGN.md §10): prefetch_depth x staging.
+
+    Every mode runs the same vectorized (sharded when >1 device) round;
+    only the ingest pipeline changes. Host-staged modes pay the H2D
+    placement on the consumer thread at dispatch (ingest_device_mean_s
+    measures it); device-staged modes run it on the staging thread,
+    overlapped with compute. The default batch payload is sized LARGER
+    (batch 32 x dim 1024) and the model SMALLER than the compute-bound
+    cohort sweep's, so the per-round transfer is actually visible on
+    CPU hosts; --batch/--dim/--hidden override it."""
+    batch = 32 if batch is None else batch
+    dim = 1024 if dim is None else dim
+    hidden = 512 if hidden is None else hidden
+    out = out or DEFAULT_OUT_INGEST
+    sharded = len(jax.devices()) > 1
+    params, loss_fn, batch_fn = build_task(
+        clients, batches_per_client, batch, dim, hidden, classes)
+    n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
+    results = {}
+    for depth in (1, 2, 4, 8):
+        for staged in ("host", "device"):
+            mode = f"d{depth}+{staged}"
+            overrides = dict(prefetch=True, prefetch_depth=depth,
+                             device_stage=(staged == "device"),
+                             shard_clients=sharded)
+            try:
+                results[mode] = bench(
+                    overrides, params=params, loss_fn=loss_fn,
+                    batch_fn=batch_fn, k=clients, rounds=rounds,
+                    warmup=warmup, algorithm=algorithm)
+                r = results[mode]
+                print(f"{mode:12s} mean {r['mean_s']*1e3:9.3f} ms"
+                      f"  ingest host {r['ingest_host_mean_s']*1e3:8.3f} ms"
+                      f"  device {r['ingest_device_mean_s']*1e3:8.3f} ms")
+            except Exception as e:            # record, never skip silently
+                results[mode] = {"error": f"{type(e).__name__}: {e}"}
+                print(f"{mode:12s} FAILED: {results[mode]['error']}")
+
+    def dev_wait(m):
+        return results.get(m, {}).get("ingest_device_mean_s")
+
+    payload = {
+        "bench": "cohort_ingest_staged",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "sharded": sharded,
+        "algorithm": algorithm,
+        "clients_per_round": clients,
+        "batches_per_client": batches_per_client,
+        "batch": batch, "dim": dim, "hidden": hidden,
+        "model_params": n_params,
+        "modes": results,
+        "note": ("ingest_host_mean_s = consumer blocked on staging "
+                 "(sample+read+stack); ingest_device_mean_s = consumer "
+                 "blocked on H2D placement at dispatch — ~0 when "
+                 "device_stage moved it onto the staging thread"),
+    }
+    base, dev = dev_wait("d2+host"), dev_wait("d4+device")
+    if base and dev is not None:
+        # the acceptance comparison: device staging vs the depth-2
+        # host-staged baseline's dispatch-side transfer wait
+        payload["transfer_wait_reduction_device_vs_host_d2"] = \
+            1.0 - dev / base
+    d2 = dev_wait("d2+device")
+    if base and d2 is not None:
+        payload["transfer_wait_reduction_device_d2_vs_host_d2"] = \
+            1.0 - d2 / base
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for key in ("transfer_wait_reduction_device_vs_host_d2",
+                "transfer_wait_reduction_device_d2_vs_host_d2"):
+        if key in payload:
+            print(f"{key}: {payload[key]:.3f}")
+    print(f"-> {out}")
+    return payload
 
 
 def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
@@ -220,9 +317,12 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--batches-per-client", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--dim", type=int, default=512)
-    ap.add_argument("--hidden", type=int, default=2048)
+    # batch/dim/hidden default per sweep (cohort: 8/512/2048 compute-
+    # bound; --ingest-sweep: 32/1024/512 transfer-visible) — None here
+    # means "that sweep's default"
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--hidden", type=int, default=None)
     ap.add_argument("--algorithm", default="feddpc")
     ap.add_argument("--devices", type=int, default=None,
                     help="force N host devices (must be set before jax "
@@ -231,14 +331,29 @@ def main(argv=None):
                     help=">1 appends the two-axis (clients x model) "
                          "sweep; receipts default to "
                          "BENCH_cohort_2axis.json")
+    ap.add_argument("--ingest-sweep", action="store_true",
+                    help="run the staged-ingest receipt instead: "
+                         "prefetch_depth {1,2,4,8} x {host,device} "
+                         "staging -> BENCH_ingest.json (DESIGN.md §10)")
     ap.add_argument("--out", default=None,
-                    help="defaults to BENCH_cohort_sharded.json, or "
-                         "BENCH_cohort_2axis.json with --model-shards")
+                    help="defaults to BENCH_cohort_sharded.json, "
+                         "BENCH_cohort_2axis.json with --model-shards, "
+                         "or BENCH_ingest.json with --ingest-sweep")
     a = ap.parse_args(argv)
-    run(clients=a.clients, rounds=a.rounds, warmup=a.warmup,
-        batches_per_client=a.batches_per_client, batch=a.batch,
-        dim=a.dim, hidden=a.hidden, algorithm=a.algorithm,
-        model_shards=a.model_shards, out=a.out)
+    if a.ingest_sweep:
+        run_ingest_sweep(clients=a.clients, rounds=a.rounds,
+                         warmup=a.warmup,
+                         batches_per_client=a.batches_per_client,
+                         batch=a.batch, dim=a.dim, hidden=a.hidden,
+                         algorithm=a.algorithm, out=a.out)
+    else:
+        run(clients=a.clients, rounds=a.rounds, warmup=a.warmup,
+            batches_per_client=a.batches_per_client,
+            batch=8 if a.batch is None else a.batch,
+            dim=512 if a.dim is None else a.dim,
+            hidden=2048 if a.hidden is None else a.hidden,
+            algorithm=a.algorithm,
+            model_shards=a.model_shards, out=a.out)
     return 0
 
 

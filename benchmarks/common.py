@@ -21,8 +21,7 @@ import numpy as np
 
 from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
 from repro.core.baselines import default_hyper
-from repro.data.pipeline import StreamingImageSource, \
-    build_federated_image_data
+from repro.ingest import StreamingImageSource, build_federated_image_data
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 

@@ -31,8 +31,7 @@ import jax.numpy as jnp
 from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
 from repro.core.baselines import FedDPCHyper
 from repro.core.samplers import UniformSampler
-from repro.data.pipeline import StreamingImageSource, \
-    build_federated_image_data
+from repro.ingest import StreamingImageSource, build_federated_image_data
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
 

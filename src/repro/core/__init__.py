@@ -12,10 +12,12 @@ from repro.core.baselines import (ALGORITHM_NAMES, AdaptiveHyper,
                                   FedExPHyper, FedGAHyper, FedProxHyper,
                                   ServerAlgo, default_hyper, get_algorithm,
                                   make_algorithm, register_algorithm)
-from repro.core.datasources import (DataSource, IteratorDataSource,
-                                    ListDataSource, as_data_source)
 from repro.core.samplers import (ClientSampler, CyclicSampler, MarkovSampler,
                                  UniformSampler, WeightedSampler)
+# the data-source protocol lives in the staged ingest subsystem
+# (DESIGN.md §10) and stays re-exported here as part of the §3 surface
+from repro.ingest import (DataSource, IteratorDataSource, ListDataSource,
+                          as_data_source)
 
 __all__ = [
     "AlgoConfig", "ExecConfig", "FLConfig", "FederatedTrainer",

@@ -6,11 +6,11 @@ pluggable pieces behind one loop —
   ClientSampler (core/samplers.py)   WHO participates each round:
       uniform / weighted-by-data-size / cyclic block / Markov
       availability; ``sampler.sample(rng, round) -> ids``.
-  DataSource (core/datasources.py)   WHERE batches come from:
+  DataSource (repro.ingest)          WHERE batches come from:
       ``source.client_batches(client, round)``; materialized on the
-      ingest path, so a streaming source (data/pipeline.
-      StreamingImageSource) overlaps disk IO with device compute
-      through the cohort prefetcher.
+      ingest path, so a streaming source (ingest.StreamingImageSource,
+      the disk-backed CIFAR/TinyImageNet sources in ingest.datasets)
+      overlaps disk IO with device compute through the staging ring.
   algorithm registry (core/baselines.py)   HOW updates aggregate:
       ``AlgoConfig(name, hyper=FedDPCHyper(...))`` resolves through
       ``make_algorithm``; per-algorithm hyperparameter dataclasses
@@ -45,10 +45,12 @@ Scaling levers (DESIGN.md §2), all on by construction or by one flag:
       (a (devices//M, M) two-axis mesh): params/server state shard PER
       LEAF over `model` (§8 rules + trailing-dim fallback) inside each
       client slice — the layout for models larger than one device's HBM.
-  exec.prefetch       double-buffered host ingest: a daemon thread stages
-      round t+1's cohort (sampling + source reads + stacking into
-      preallocated buffers) while round t runs on device, so run_round
-      blocks only on device completion (core/client.CohortPrefetcher).
+  exec.prefetch       staged ingest (DESIGN.md §10): a daemon thread
+      stages upcoming cohorts (sampling + source reads + decode +
+      stacking into a depth-``prefetch_depth`` ring of preallocated
+      buffers, + device placement when ``device_stage``) while round t
+      runs on device, so run_round blocks only on device completion
+      (repro.ingest.CohortIngestPipeline).
   exec.async_eval     eval_fn runs on a params snapshot in a worker
       thread, overlapped with the next round; the accuracy folds into
       its RoundRecord at the next eval boundary / finalize() / run() end.
@@ -80,8 +82,9 @@ import numpy as np
 from repro.core import client as client_mod
 from repro.core import round as round_mod
 from repro.core.baselines import ServerAlgo, default_hyper, make_algorithm
-from repro.core.datasources import DataSource, as_data_source
 from repro.core.samplers import ClientSampler, UniformSampler
+from repro.ingest import (CohortIngestPipeline, CohortPlacer, DataSource,
+                          as_data_source, stack_batches)
 
 PyTree = Any
 
@@ -114,7 +117,19 @@ class ExecConfig:
     # leaf over `model` (the >HBM regime), batches stay on the client
     # axis. Must divide the device count; implies the sharded path.
     shard_model: int = 1
-    prefetch: bool = True            # double-buffered host ingest (vectorized)
+    prefetch: bool = True            # staged ingest ring (vectorized path)
+    # staging-ring depth (DESIGN.md §10): number of cohort buffers the
+    # ingest pipeline cycles through — the producer thread stages up to
+    # prefetch_depth rounds beyond the oldest round still in flight.
+    # 2 = the historical double buffer; raise it when source reads are
+    # bursty (disk-backed datasets) so slow rounds amortize
+    prefetch_depth: int = 2
+    # run the device-place stage (jax.device_put against the round's
+    # actual sharding) on the staging thread, so H2D transfer overlaps
+    # compute instead of serializing at dispatch; False keeps placement
+    # on the consumer thread, where RoundRecord.ingest_device_seconds
+    # measures it (the depth sweep's baseline — DESIGN.md §10)
+    device_stage: bool = True
     # overlap eval_fn with the next round: accuracy folds into its
     # RoundRecord when ready (at latest at the next eval boundary /
     # finalize()/run() end) — read it from history, not from the record
@@ -185,6 +200,14 @@ EXEC_REGIMES = {
     "vectorized": {},
     "sharded1d": {"shard_clients": True},
     "sharded2d": {"shard_clients": True, "shard_model": 4},
+    # staged ingest (DESIGN.md §10): the deep device-staged ring on every
+    # mesh shape (the prefetch_depth=4 acceptance configuration), plus
+    # the consumer-thread-placement / single-buffer degenerate point
+    "staged": {"prefetch_depth": 4},
+    "staged1d": {"shard_clients": True, "prefetch_depth": 4},
+    "staged2d": {"shard_clients": True, "shard_model": 4,
+                 "prefetch_depth": 4},
+    "hoststaged": {"device_stage": False, "prefetch_depth": 1},
 }
 
 
@@ -194,9 +217,16 @@ class RoundRecord:
     train_loss: float
     test_accuracy: Optional[float] = None
     seconds: float = 0.0
-    # host time this round spent blocked on cohort ingest (sampling +
-    # source reads + stacking); with prefetch on it is just the staging wait
+    # total time this round spent blocked on cohort ingest —
+    # ingest_host_seconds + ingest_device_seconds (kept for continuity
+    # with pre-split records/benches)
     ingest_seconds: float = 0.0
+    # blocked on HOST staging: sampling + source reads + decode +
+    # stacking (with prefetch on, just the wait for the staged round)
+    ingest_host_seconds: float = 0.0
+    # blocked on DEVICE placement at dispatch (H2D transfer); ~0 when
+    # ExecConfig.device_stage moved it onto the staging thread
+    ingest_device_seconds: float = 0.0
     diagnostics: Dict[str, float] = field(default_factory=dict)
 
 
@@ -307,9 +337,20 @@ class FederatedTrainer:
         self.rng = np.random.RandomState(exec_cfg.seed)
         self.history: List[RoundRecord] = []
         self.schedule: List[np.ndarray] = []     # sampled cohort per round
-        self._max_batches: Optional[int] = None
+        # staged ingest pipeline (DESIGN.md §10): read -> decode/augment
+        # -> cohort-stack -> device-place, with a depth-N staging ring;
+        # placement targets the round's ACTUAL input sharding (the same
+        # NamedSharding its jit was built with), so dispatch finds every
+        # input already resident
+        input_sh = (self._round_shardings[0][2]
+                    if self._round_shardings is not None else None)
+        self._pipeline = CohortIngestPipeline(
+            self.source, self._sample_clients,
+            num_clients=num_clients, rounds=exec_cfg.rounds,
+            depth=exec_cfg.prefetch_depth,
+            device_stage=exec_cfg.device_stage,
+            placer=CohortPlacer(input_sh), pad_to=self._pad_to)
         self._start_round = 0                    # advanced by restore()
-        self._prefetcher = None                  # built on first round
         self._pending_eval = None                # (RoundRecord, Future)
         self._async_eval = eval_fn is not None and exec_cfg.async_eval
         # sampling-time snapshots for save(): the prefetcher draws the RNG
@@ -319,6 +360,22 @@ class FederatedTrainer:
         self._round_caps: Dict[int, dict] = {}
 
     # ---- internals ----
+
+    @property
+    def _max_batches(self) -> Optional[int]:
+        """Grow-once M shape bucket — owned by the ingest pipeline,
+        surfaced here because it is checkpointed TrainerState."""
+        return self._pipeline.max_batches
+
+    @_max_batches.setter
+    def _max_batches(self, value: Optional[int]):
+        self._pipeline.max_batches = value
+
+    @property
+    def _prefetcher(self):
+        """The pipeline's staging ring (None until the first prefetched
+        round) — read-only; lifecycle belongs to the pipeline."""
+        return self._pipeline._ring
 
     def _build_mesh(self):
         from repro.launch import mesh as mesh_mod
@@ -339,7 +396,13 @@ class FederatedTrainer:
                 "sampler": self.sampler.state_dict(),
                 "max_batches": self._max_batches,
             }
-            for old in [r for r in self._round_caps if r < t - 4]:
+            # retention must cover the staging look-ahead: the producer
+            # samples up to prefetch_depth rounds past the consumed
+            # frontier, and state() needs the pre-draw capture of the
+            # NEXT UNCONSUMED round — keep depth + 2 rounds of slack so
+            # a depth-N ring never evicts a capture save() will ask for
+            horizon = t - (self.cfg.prefetch_depth + 2)
+            for old in [r for r in self._round_caps if r < horizon]:
                 del self._round_caps[old]
             clients = np.asarray(self.sampler.sample(self.rng, t))
             k = self.cfg.clients_per_round
@@ -358,64 +421,26 @@ class FederatedTrainer:
             self.schedule.append(clients)
         return clients
 
-    def _cohort_lists(self, clients: Sequence[int], t: int):
-        per_client = [list(self.source.client_batches(int(c), t))
-                      for c in clients]
-        mx = max(len(b) for b in per_client)
-        if self._max_batches is None or mx > self._max_batches:
-            self._max_batches = mx          # grow-once; keeps jit cache small
-        return per_client
-
     def _round_batches(self, clients: Sequence[int], t: int):
-        return [client_mod.stack_batches(b, self._max_batches)
-                for b in self._cohort_lists(clients, t)]
-
-    def _pad_ids(self, clients: np.ndarray) -> jnp.ndarray:
-        ids = np.asarray(clients, np.int32)
-        if self._pad_to > ids.shape[0]:
-            # out-of-range sentinel ids: FedVARP's scatter DROPS them
-            ids = np.concatenate([ids, np.full(self._pad_to - ids.shape[0],
-                                               self.num_clients, np.int32)])
-        return jnp.asarray(ids)
-
-    def _produce_cohort(self, t: int, slot: dict):
-        """Prefetch-thread body: sample + fetch + stack round t's cohort
-        into the slot's preallocated buffers (round order preserves the
-        RNG-driven schedule exactly)."""
-        clients = self._sample_clients(t)
-        lists = self._cohort_lists(clients, t)
-        batches, masks = client_mod.stack_cohort_into(
-            lists, self._max_batches, slot, pad_to=self._pad_to)
-        return clients, batches, masks
+        lists = self._pipeline.client_lists(clients, t)
+        return [stack_batches(b, self._max_batches) for b in lists]
 
     def _run_round_vectorized(self, t: int):
-        tic = time.perf_counter()
-        if self.cfg.prefetch:
-            if self._prefetcher is None:
-                self._prefetcher = client_mod.CohortPrefetcher(
-                    self._produce_cohort, t, self.cfg.rounds)
-            (clients, batches, masks), slot = self._prefetcher.get(t)
-        else:
-            slot = None
-            clients = self._sample_clients(t)
-            batches, masks = client_mod.stack_cohort(
-                self._cohort_lists(clients, t), self._max_batches,
-                pad_to=self._pad_to)
-        ingest = time.perf_counter() - tic
+        staged = (self._pipeline.get(t) if self.cfg.prefetch
+                  else self._pipeline.stage_blocking(t))
         try:
-            ids = self._pad_ids(clients)
             self.params, self.server_state, losses, diag = self._cohort_round(
-                self.server_state, self.params, batches, masks, ids)
+                self.server_state, self.params, staged.batches, staged.masks,
+                staged.ids)
             # syncs on the round's result: after this the device is done
-            # with the inputs and the slot is reusable for t+2; dummy
+            # with the inputs and the staging slot is reusable; dummy
             # padded clients sit past the real K and report loss 0
-            train_loss = float(jnp.mean(losses[:len(clients)]))
+            train_loss = float(jnp.mean(losses[:len(staged.clients)]))
         finally:
             # released on error too — leaking the slot would deadlock the
-            # NEXT run_round inside the prefetcher instead of erroring
-            if slot is not None:
-                self._prefetcher.release(slot)
-        return train_loss, diag, ingest
+            # NEXT run_round inside the staging ring instead of erroring
+            staged.release()
+        return train_loss, diag, staged.host_seconds, staged.device_seconds
 
     def _run_round_serial(self, t: int):
         clients = self._sample_clients(t)
@@ -432,7 +457,7 @@ class FederatedTrainer:
         ids = jnp.asarray(clients, jnp.int32)
         self.params, self.server_state, diag = self._server_step(
             self.server_state, self.params, stacked, ids)
-        return float(np.mean(losses)), diag, ingest
+        return float(np.mean(losses)), diag, ingest, 0.0
 
     def _resolve_pending_eval(self):
         if self._pending_eval is not None:
@@ -452,10 +477,13 @@ class FederatedTrainer:
         tic = time.perf_counter()
         run = (self._run_round_vectorized if self.cfg.vectorize
                else self._run_round_serial)
-        train_loss, diag, ingest = run(t)
+        train_loss, diag, ingest_host, ingest_dev = run(t)
         rec = RoundRecord(
             round=t, train_loss=train_loss,
-            seconds=time.perf_counter() - tic, ingest_seconds=ingest,
+            seconds=time.perf_counter() - tic,
+            ingest_seconds=ingest_host + ingest_dev,
+            ingest_host_seconds=ingest_host,
+            ingest_device_seconds=ingest_dev,
             diagnostics={k: float(v) for k, v in diag.items()})
         if self.eval_fn and (t % self.cfg.eval_every == 0
                              or t == self.cfg.rounds - 1):
@@ -492,12 +520,12 @@ class FederatedTrainer:
         self._resolve_pending_eval()
 
     def close(self):
-        """Release trainer-owned resources (prefetch thread, pending eval
-        future). The data source is CALLER-owned — sweeps share one
-        source across trainers — and is never closed here."""
+        """Release trainer-owned resources (the ingest pipeline's staging
+        thread, pending eval future). The data source is CALLER-owned —
+        sweeps share one source across trainers — and is never closed
+        here."""
         self.finalize()
-        if self._prefetcher is not None:
-            self._prefetcher.stop()
+        self._pipeline.close()
 
     def __enter__(self) -> "FederatedTrainer":
         return self

@@ -20,15 +20,17 @@ Client variants (selected by the server algorithm):
   cm     FedCM:   g <- alpha*g + (1-alpha)*Delta_prev  (client momentum)
   ga     FedGA:   local model initialized at w - beta*eta_l*Delta_prev
 
-Host ingest (DESIGN.md §2): ``stack_batches``/``stack_cohort`` build the
-padded (K, M, ...) cohort stack; ``stack_cohort_into`` does the same into
-preallocated buffers, and ``CohortPrefetcher`` stages round t+1's stack
-in a background thread while round t runs on device.
+The host-ingest helpers that used to live here (``stack_batches`` /
+``stack_cohort`` / ``stack_cohort_into`` / ``CohortPrefetcher``) moved
+to the staged ingest subsystem — ``repro.ingest`` (DESIGN.md §10).
+Importing them from this module still works for one release but warns
+(module ``__getattr__`` shim below, CI-tested like the PR 3 config
+split); library code imports ``repro.ingest`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +38,21 @@ import jax.numpy as jnp
 from repro.optim.optimizers import Optimizer, get_optimizer
 
 PyTree = Any
+
+# deprecated name -> its home in the ingest subsystem
+_MOVED_TO_INGEST = ("stack_batches", "stack_cohort", "stack_cohort_into",
+                    "CohortPrefetcher")
+
+
+def __getattr__(name: str):
+    if name in _MOVED_TO_INGEST:
+        warnings.warn(
+            f"repro.core.client.{name} moved to repro.ingest.{name} "
+            "(DESIGN.md §10); this alias will be removed next release",
+            DeprecationWarning, stacklevel=2)
+        import repro.ingest
+        return getattr(repro.ingest, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _build_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
@@ -136,178 +153,3 @@ def make_cohort_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                              mu, cm_alpha, ga_beta)
     cohort = jax.vmap(fn, in_axes=(None, 0, 0, None))
     return jax.jit(cohort) if jit else cohort
-
-
-def stack_batches(batch_list, max_batches: int):
-    """Pad a list of same-shape batch pytrees to (max_batches, ...) + mask."""
-    import numpy as np
-    n = len(batch_list)
-    assert 1 <= n <= max_batches, (n, max_batches)
-    stacked = jax.tree.map(lambda *xs: np.stack(xs), *batch_list)
-    if n < max_batches:
-        pad = max_batches - n
-        stacked = jax.tree.map(
-            lambda x: np.concatenate(
-                [x, np.repeat(x[-1:], pad, axis=0)], axis=0), stacked)
-    mask = np.arange(max_batches) < n
-    return stacked, mask
-
-
-def stack_cohort(per_client_batches, max_batches: int, pad_to: int = None):
-    """Stack K clients' batch lists into one (K, M, ...) pytree + (K, M)
-    mask — the input of ``make_cohort_local_update``. M = max_batches is
-    the shape bucket; ragged clients pad with masked repeats.
-
-    ``pad_to`` > K appends DUMMY clients (copies of the last real row
-    with an all-False mask row) so uneven cohorts shard over a client
-    axis whose size does not divide K (DESIGN.md §2): a fully-masked
-    client runs a no-op local scan (delta == 0) and the server rules
-    exclude it from every mean via the derived client validity mask.
-    """
-    import numpy as np
-    pairs = [stack_batches(b, max_batches) for b in per_client_batches]
-    batches = jax.tree.map(lambda *xs: np.stack(xs), *[p[0] for p in pairs])
-    masks = np.stack([p[1] for p in pairs])
-    k = len(per_client_batches)
-    if pad_to is not None and pad_to > k:
-        pad = pad_to - k
-        batches = jax.tree.map(
-            lambda x: np.concatenate(
-                [x, np.repeat(x[-1:], pad, axis=0)], axis=0), batches)
-        masks = np.concatenate(
-            [masks, np.zeros((pad,) + masks.shape[1:], bool)], axis=0)
-    return batches, masks
-
-
-def stack_cohort_into(per_client_batches, max_batches: int, slot: dict,
-                      pad_to: int = None):
-    """``stack_cohort`` into PREALLOCATED host buffers (DESIGN.md §2).
-
-    ``slot`` is a mutable dict owned by the caller (one per prefetch
-    buffer): its (K, M, ...) arrays + (K, M) mask are allocated on first
-    use and reused every round — reallocation happens only when the
-    cohort shape grows/changes (grow-once M bucketing keeps that rare),
-    so the per-round np.stack allocations disappear from the ingest path.
-    Returns (batches_pytree, mask) views backed by the slot's buffers;
-    they stay valid until the slot is refilled.
-
-    ``pad_to`` appends dummy clients exactly as ``stack_cohort`` does
-    (copies of the last real row, all-False mask rows).
-    """
-    import numpy as np
-    k, m = len(per_client_batches), max_batches
-    kp = k if pad_to is None else max(pad_to, k)
-    leaves0, treedef = jax.tree_util.tree_flatten(per_client_batches[0][0])
-    shapes = tuple((np.shape(x), np.asarray(x).dtype) for x in leaves0)
-    key = (kp, m, treedef, shapes)
-    if slot.get("key") != key:
-        slot["key"] = key
-        slot["bufs"] = [np.empty((kp, m) + s, dt) for s, dt in shapes]
-        slot["mask"] = np.empty((kp, m), bool)
-    bufs, mask = slot["bufs"], slot["mask"]
-    for j, blist in enumerate(per_client_batches):
-        n = len(blist)
-        assert 1 <= n <= m, (n, m)
-        for i, b in enumerate(blist):
-            for buf, x in zip(bufs, jax.tree_util.tree_flatten(b)[0]):
-                buf[j, i] = x
-        if n < m:                       # ragged: pad with masked repeats
-            for buf in bufs:
-                buf[j, n:] = buf[j, n - 1]
-        mask[j] = np.arange(m) < n
-    for j in range(k, kp):              # dummy clients: masked copies
-        for buf in bufs:
-            buf[j] = buf[k - 1]
-        mask[j] = False
-    return jax.tree_util.tree_unflatten(treedef, bufs), mask
-
-
-class CohortPrefetcher:
-    """Double-buffered host ingest for the fused cohort round.
-
-    A daemon thread runs ``produce_fn(t, slot)`` for t = start..end-1 IN
-    ROUND ORDER (so RNG-driven client sampling inside it draws the exact
-    same sequence as the blocking path), staging round t+1's cohort into
-    a free buffer slot while round t's program runs on device. With the
-    default two slots the producer stays at most one round ahead and
-    never overwrites a buffer the device may still be reading: the
-    consumer releases a slot only after it has synchronized on the
-    round's results.
-
-        item, slot = pf.get(t)     # blocks only until round t is staged
-        ... dispatch + sync ...
-        pf.release(slot)
-    """
-
-    def __init__(self, produce_fn, start: int, end: int, slots: int = 2):
-        import queue
-        import threading
-        self._end = end
-        self._ready = queue.Queue()
-        self._free = queue.Queue()
-        for _ in range(max(2, slots)):
-            self._free.put({})
-        self._exc = None
-        self._stopped = False
-        self._thread = threading.Thread(
-            target=self._loop, args=(produce_fn, start, end), daemon=True,
-            name="cohort-prefetch")
-        self._thread.start()
-
-    def _loop(self, produce_fn, start, end):
-        try:
-            for t in range(start, end):
-                slot = self._free.get()
-                if slot is None:        # stop() sentinel
-                    return
-                item = produce_fn(t, slot)
-                self._ready.put((t, item, slot))
-        except BaseException as e:      # surfaced on the next get()
-            self._exc = e
-            self._ready.put((None, None, None))
-
-    def get(self, t: int):
-        import queue
-        if t >= self._end:
-            raise RuntimeError(
-                f"round {t} is past the configured horizon ({self._end} "
-                "rounds were prefetched); raise ExecConfig.rounds or set "
-                "ExecConfig.prefetch=False to run extra rounds")
-        while True:
-            try:
-                got, item, slot = self._ready.get(timeout=1.0)
-                break
-            except queue.Empty:
-                # a dead producer with an empty queue would otherwise
-                # hang forever (e.g. rounds re-run after a completed run)
-                if not self._thread.is_alive():
-                    try:
-                        # drain once more: the producer's final put may
-                        # have landed between the timeout and this check
-                        got, item, slot = self._ready.get_nowait()
-                        break
-                    except queue.Empty:
-                        raise RuntimeError(
-                            f"prefetch producer exited (rounds consumed "
-                            f"or stopped) — round {t} was never staged; "
-                            "set ExecConfig.prefetch=False to re-run rounds"
-                        ) from self._exc
-        if got is None:                 # producer-failure sentinel; a round
-            # staged BEFORE the failure is still valid and returned above.
-            # Re-poison so every later get() fails too instead of hanging.
-            self._ready.put((None, None, None))
-            raise RuntimeError("cohort prefetch thread failed") from self._exc
-        if got != t:
-            raise RuntimeError(
-                f"prefetched round {got} but round {t} was requested — "
-                "prefetching requires run_round(t) in sequential order "
-                "(set ExecConfig.prefetch=False for out-of-order rounds)")
-        return item, slot
-
-    def release(self, slot: dict):
-        self._free.put(slot)
-
-    def stop(self):
-        if not self._stopped:
-            self._stopped = True
-            self._free.put(None)        # unblock the producer if waiting

@@ -1,74 +1,27 @@
-"""Pluggable client data sources (DESIGN.md §3).
+"""DEPRECATED shim — the DataSource protocol moved to ``repro.ingest``
+(ingest/sources.py; DESIGN.md §10) as the read stage of the staged
+ingest subsystem.
 
-``DataSource`` replaces the bare ``batch_fn(client, round) -> list``
-callable the trainer historically took: a source yields one client's
-minibatches for one round, and the trainer materializes them ON THE
-INGEST PATH — with prefetching on, that is the cohort prefetcher's
-daemon thread, so a source backed by disk/host IO overlaps device
-compute for free instead of forcing callers to pre-materialize lists.
-
-Protocol:
-
-    source.client_batches(client, round) -> iterable of batch pytrees
-        (numpy leaves; every batch of a client/round has the same
-        shapes, and shapes are shared across clients so cohorts stack)
-    source.close()    release any underlying readers (optional)
-
-Sources are CALLER-owned: sweeps share one source across many trainers
-(benchmarks/common.py), so ``FederatedTrainer.close()`` never calls
-``source.close()`` — close it yourself when the last trainer is done.
-
-``ListDataSource`` adapts the legacy callable signature verbatim.
-``IteratorDataSource`` wraps any ``iter_fn(client, round)`` generator
-factory; sources with their own state (data/pipeline.
-StreamingImageSource) subclass ``DataSource`` directly instead.
+Importing from this module still works for one release but warns
+(attributed to the caller — the CI gate errors on DeprecationWarnings
+raised FROM repro.*, so library code must import ``repro.ingest``
+directly). The forwarded objects are IDENTICAL to the new ones —
+``isinstance`` checks and subclasses keep working across the move.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Iterable, List
+import warnings
 
-Batch = Any
-
-
-class DataSource:
-    """Protocol + base class: subclass and implement ``client_batches``."""
-
-    def client_batches(self, client: int, round: int) -> Iterable[Batch]:
-        raise NotImplementedError
-
-    def close(self) -> None:
-        pass
+_MOVED = ("DataSource", "ListDataSource", "IteratorDataSource",
+          "as_data_source")
 
 
-class ListDataSource(DataSource):
-    """Adapter for the legacy ``batch_fn(client, round) -> list`` shape —
-    the old trainer signature spelled as a source."""
-
-    def __init__(self, batch_fn: Callable[[int, int], List[Batch]]):
-        self.batch_fn = batch_fn
-
-    def client_batches(self, client, round):
-        return self.batch_fn(client, round)
-
-
-class IteratorDataSource(DataSource):
-    """Streaming source: ``iter_fn(client, round)`` returns a fresh
-    iterator/generator whose items materialize lazily as the ingest path
-    consumes them (inside the prefetch thread when prefetching is on)."""
-
-    def __init__(self, iter_fn: Callable[[int, int], Iterable[Batch]]):
-        self.iter_fn = iter_fn
-
-    def client_batches(self, client, round):
-        return self.iter_fn(client, round)
-
-
-def as_data_source(obj) -> DataSource:
-    """Coerce the trainer's ``data`` argument: a ``DataSource`` passes
-    through; a bare callable (the legacy ``batch_fn``) is wrapped."""
-    if isinstance(obj, DataSource):
-        return obj
-    if callable(obj):
-        return ListDataSource(obj)
-    raise TypeError(f"expected a DataSource or a batch_fn callable, "
-                    f"got {type(obj).__name__}")
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.core.datasources.{name} moved to repro.ingest.{name} "
+            "(DESIGN.md §10); this alias will be removed next release",
+            DeprecationWarning, stacklevel=2)
+        import repro.ingest
+        return getattr(repro.ingest, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,92 +1,26 @@
-"""Client data pipeline: per-client datasets + seeded batch iteration.
+"""DEPRECATED shim — the client data pipeline moved to ``repro.ingest``
+(ingest/images.py; DESIGN.md §10), next to the staged ingest subsystem's
+disk-backed dataset sources (ingest/datasets.py).
 
-Mirrors the paper's setup: each client holds a Dirichlet-skewed shard;
-every local epoch shuffles with a round-dependent seed; batches are padded
-by wrap-around so a client with fewer samples than the batch size still
-yields one full batch (matches FedAvg-style implementations).
-
-``StreamingImageSource`` is the DataSource (DESIGN.md §3) view of this
-pipeline: it hands the trainer the ``client_batches`` GENERATOR, so the
-gather/slice work materializes lazily on the ingest path — inside the
-cohort prefetcher's thread when prefetching is on, overlapping data IO
-with the device round instead of requiring pre-built per-client lists.
+Importing from this module still works for one release but warns
+(attributed to the caller — the CI gate errors on DeprecationWarnings
+raised FROM repro.*, so library code must import ``repro.ingest``
+directly). The forwarded objects are IDENTICAL to the new ones.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Iterator, List
+import warnings
 
-import numpy as np
-
-from repro.core.datasources import DataSource
-from repro.data.dirichlet import dirichlet_partition
-from repro.data.synthetic import make_image_dataset
+_MOVED = ("FederatedImageData", "build_federated_image_data",
+          "client_batches", "StreamingImageSource")
 
 
-@dataclass
-class FederatedImageData:
-    train_images: np.ndarray
-    train_labels: np.ndarray
-    test_images: np.ndarray
-    test_labels: np.ndarray
-    client_indices: List[np.ndarray]
-
-    @property
-    def num_clients(self) -> int:
-        return len(self.client_indices)
-
-
-def build_federated_image_data(num_classes=10, num_clients=100, alpha=0.2,
-                               samples_per_class=500, test_per_class=100,
-                               image_size=32, seed=0,
-                               noise=0.35) -> FederatedImageData:
-    tr_x, tr_y = make_image_dataset(num_classes, samples_per_class,
-                                    image_size=image_size, seed=seed,
-                                    noise=noise)
-    te_x, te_y = make_image_dataset(num_classes, test_per_class,
-                                    image_size=image_size, seed=seed + 10_000,
-                                    noise=noise)
-    parts = dirichlet_partition(tr_y, num_clients, alpha, seed=seed)
-    return FederatedImageData(tr_x, tr_y, te_x, te_y, parts)
-
-
-def client_batches(data: FederatedImageData, client: int, batch_size: int,
-                   round_num: int, local_epochs: int = 1
-                   ) -> Iterator[Dict[str, np.ndarray]]:
-    """Yield batches for `local_epochs` epochs over the client's shard."""
-    idx = data.client_indices[client]
-    rng = np.random.RandomState(hash((client, round_num)) % (2**31))
-    for _ in range(local_epochs):
-        order = rng.permutation(len(idx))
-        n = len(order)
-        if n < batch_size:          # wrap-pad tiny clients to one full batch
-            order = np.resize(order, batch_size)
-            n = batch_size
-        for start in range(0, n - batch_size + 1, batch_size):
-            sel = idx[order[start:start + batch_size]]
-            yield {"images": data.train_images[sel],
-                   "labels": data.train_labels[sel]}
-
-
-class StreamingImageSource(DataSource):
-    """Streams ``client_batches`` straight into the trainer's ingest path
-    (core/datasources.DataSource protocol): batches materialize as the
-    cohort stacker consumes the generator — with prefetch on, on the
-    prefetch thread, so shard gathering overlaps device compute.
-
-    ``client_weights()`` exposes shard sizes for ``WeightedSampler``
-    (participation proportional to data size)."""
-
-    def __init__(self, data: FederatedImageData, batch_size: int,
-                 local_epochs: int = 1):
-        self.data = data
-        self.batch_size = batch_size
-        self.local_epochs = local_epochs
-
-    def client_batches(self, client: int, round: int):
-        return client_batches(self.data, client, self.batch_size, round,
-                              self.local_epochs)
-
-    def client_weights(self) -> np.ndarray:
-        return np.asarray([len(ix) for ix in self.data.client_indices],
-                          np.float64)
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.data.pipeline.{name} moved to repro.ingest.{name} "
+            "(DESIGN.md §10); this alias will be removed next release",
+            DeprecationWarning, stacklevel=2)
+        import repro.ingest
+        return getattr(repro.ingest, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,34 @@
+# Staged ingest subsystem (DESIGN.md §10): everything between a
+# DataSource and the fused cohort round's dispatch —
+#
+#   read -> decode/augment -> cohort-stack -> device-place
+#
+# One import point for the whole pipeline: the source protocol +
+# adapters, the stacking stage, the depth-N staging ring, device
+# placement, the orchestrating CohortIngestPipeline, the array-backed
+# synthetic image pipeline, and the disk-backed dataset sources.
+# (core/client.py's stacking/prefetch names, core/datasources.py and
+# data/pipeline.py remain as deprecated shims over this package for one
+# release.)
+from repro.ingest.datasets import (CIFAR10Source, CIFAR100Source,
+                                   DiskImageSource, TinyImageNetSource,
+                                   augment_images, decode_images)
+from repro.ingest.images import (FederatedImageData, StreamingImageSource,
+                                 build_federated_image_data, client_batches)
+from repro.ingest.pipeline import CohortIngestPipeline, StagedCohort
+from repro.ingest.placement import CohortPlacer
+from repro.ingest.prefetch import CohortPrefetcher
+from repro.ingest.sources import (DataSource, IteratorDataSource,
+                                  ListDataSource, as_data_source)
+from repro.ingest.stack import stack_batches, stack_cohort, stack_cohort_into
+
+__all__ = [
+    "CIFAR10Source", "CIFAR100Source", "DiskImageSource",
+    "TinyImageNetSource", "augment_images", "decode_images",
+    "FederatedImageData", "StreamingImageSource",
+    "build_federated_image_data", "client_batches",
+    "CohortIngestPipeline", "StagedCohort", "CohortPlacer",
+    "CohortPrefetcher",
+    "DataSource", "IteratorDataSource", "ListDataSource", "as_data_source",
+    "stack_batches", "stack_cohort", "stack_cohort_into",
+]

@@ -1,0 +1,203 @@
+"""Staged cohort ingest pipeline (DESIGN.md §10).
+
+One object owns the whole host->device feed path of the fused cohort
+round as four explicit stages:
+
+    read           source.client_batches(client, round)  (ingest/sources)
+    decode/augment inside the source's iterable — disk sources decode
+                   raw uint8 records and apply augmentation lazily as
+                   the stacker consumes them (ingest/datasets)
+    cohort-stack   stack_cohort_into a preallocated ring-slot buffer
+                   (ingest/stack)
+    device-place   jax.device_put against the round's actual sharding
+                   (ingest/placement)
+
+With ``depth >= 1`` staging buffers and ``CohortPrefetcher`` the stages
+for round t+1..t+depth run on a producer thread while round t's program
+runs on device. ``device_stage=True`` moves the device-place stage onto
+the producer thread too: the H2D transfer overlaps compute, dispatch
+finds every input already resident, and the consumer's only wait is the
+staging wait (RoundRecord.ingest_host_seconds). ``device_stage=False``
+keeps placement on the consumer thread, where it is measured as
+RoundRecord.ingest_device_seconds — the historical "transfer at
+dispatch" cost the two knobs exist to remove.
+
+Client SAMPLING stays inside ``sample_fn`` (the trainer's, which
+snapshots pre-draw RNG/sampler state for checkpointing): the pipeline
+calls it in round order from whichever thread stages the round, so a
+prefetched run draws the exact same schedule as a blocking one.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.ingest.placement import CohortPlacer
+from repro.ingest.prefetch import CohortPrefetcher
+from repro.ingest.sources import DataSource
+from repro.ingest.stack import stack_cohort_into
+
+PyTree = Any
+
+
+@dataclass
+class StagedCohort:
+    """One round's fully staged inputs + the consumer-side waits that
+    produced them. ``batches``/``masks``/``ids`` are committed device
+    values ready for zero-copy dispatch; ``clients`` is the UNPADDED
+    sampled cohort (host), for loss masking and the schedule.
+
+    ``release()`` returns the staging buffer to the ring and MUST be
+    called (idempotent; a try/finally around the round's dispatch+sync)
+    only after the round has synchronized on its results — a leaked slot
+    deadlocks a later ``get``, an early release lets the producer
+    overwrite buffers the device may still read."""
+    round: int
+    clients: np.ndarray
+    batches: PyTree
+    masks: Any
+    ids: Any
+    host_seconds: float = 0.0      # blocked on sample+read+stack staging
+    device_seconds: float = 0.0    # blocked on H2D placement at dispatch
+    _release: Optional[Callable[[], None]] = field(default=None, repr=False)
+
+    def release(self):
+        if self._release is not None:
+            release, self._release = self._release, None
+            release()
+
+
+class CohortIngestPipeline:
+    """Stages cohorts for the vectorized round; also owns the read stage
+    (and the grow-once M shape bucket) for the serial reference path.
+
+    ``sample_fn(t) -> (K,) client ids`` is called exactly once per round
+    in round order. ``pad_to`` > K appends masked dummy clients so the
+    cohort tiles a sharded client axis; dummy ids use the out-of-range
+    ``num_clients`` sentinel (FedVARP's scatter drops them).
+    """
+
+    def __init__(self, source: DataSource,
+                 sample_fn: Callable[[int], np.ndarray], *,
+                 num_clients: int, rounds: int, depth: int = 2,
+                 device_stage: bool = True,
+                 placer: Optional[CohortPlacer] = None,
+                 pad_to: Optional[int] = None):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.source = source
+        self.sample_fn = sample_fn
+        self.num_clients = num_clients
+        self.rounds = rounds
+        self.depth = depth
+        self.device_stage = device_stage
+        self.placer = placer if placer is not None else CohortPlacer()
+        self.pad_to = pad_to
+        self._max_batches: Optional[int] = None
+        self._ring: Optional[CohortPrefetcher] = None
+        self._blocking_slot: dict = {}   # stage_blocking's private buffer
+
+    # ---- shared read stage / shape bucket ----
+
+    @property
+    def max_batches(self) -> Optional[int]:
+        """Grow-once M shape bucket (checkpointed as TrainerState.
+        max_batches; the trainer's restore() writes it back)."""
+        return self._max_batches
+
+    @max_batches.setter
+    def max_batches(self, value: Optional[int]):
+        self._max_batches = value
+
+    def client_lists(self, clients: Sequence[int], t: int):
+        """READ (+decode) stage: materialize each sampled client's
+        batches for round t and grow the M bucket to the cohort max."""
+        per_client = [list(self.source.client_batches(int(c), t))
+                      for c in clients]
+        mx = max(len(b) for b in per_client)
+        if self._max_batches is None or mx > self._max_batches:
+            self._max_batches = mx      # grow-once; keeps jit cache small
+        return per_client
+
+    # ---- staging ----
+
+    def _pad_ids(self, clients: np.ndarray) -> np.ndarray:
+        ids = np.asarray(clients, np.int32)
+        if self.pad_to is not None and self.pad_to > ids.shape[0]:
+            # out-of-range sentinel ids: FedVARP's scatter DROPS them
+            ids = np.concatenate(
+                [ids, np.full(self.pad_to - ids.shape[0],
+                              self.num_clients, np.int32)])
+        return ids
+
+    def _stage_host(self, t: int, slot: dict):
+        """sample -> read -> stack into the slot's buffers."""
+        clients = self.sample_fn(t)
+        lists = self.client_lists(clients, t)
+        batches, masks = stack_cohort_into(lists, self._max_batches, slot,
+                                           pad_to=self.pad_to)
+        return clients, batches, masks, self._pad_ids(clients)
+
+    def _produce(self, t: int, slot: dict):
+        """Ring-producer body. In device-staged mode the place stage
+        runs here too, so the H2D wait lands on this thread (overlapped
+        with device compute) instead of at dispatch."""
+        clients, batches, masks, ids = self._stage_host(t, slot)
+        if self.device_stage:
+            batches, masks, ids = self.placer.place(batches, masks, ids)
+        return clients, batches, masks, ids
+
+    def get(self, t: int) -> StagedCohort:
+        """Prefetching consumer: blocks only until round t is staged
+        (and, host-staged, on its own placement). Rounds must be
+        consumed sequentially from the first ``get``; the caller owns
+        the returned slot until ``StagedCohort.release()``."""
+        if self._ring is None:
+            self._ring = CohortPrefetcher(self._produce, t, self.rounds,
+                                          slots=self.depth)
+        tic = time.perf_counter()
+        (clients, batches, masks, ids), slot = self._ring.get(t)
+        host_s = time.perf_counter() - tic
+        dev_s = 0.0
+        if not self.device_stage:
+            try:
+                tic = time.perf_counter()
+                batches, masks, ids = self.placer.place(batches, masks, ids)
+                dev_s = time.perf_counter() - tic
+            except BaseException:
+                # failed placement cannot leak the slot — that would
+                # deadlock the NEXT get() instead of erroring
+                self._ring.release(slot)
+                raise
+        return StagedCohort(t, clients, batches, masks, ids, host_s, dev_s,
+                            _release=lambda: self._ring.release(slot))
+
+    def stage_blocking(self, t: int) -> StagedCohort:
+        """Non-prefetching path: stage round t inline on the caller's
+        thread (out-of-order rounds allowed). Reuses one private slot —
+        valid because the caller synchronizes each round before staging
+        the next (release() is a no-op here)."""
+        tic = time.perf_counter()
+        clients, batches, masks, ids = self._stage_host(
+            t, self._blocking_slot)
+        host_s = time.perf_counter() - tic
+        tic = time.perf_counter()
+        batches, masks, ids = self.placer.place(batches, masks, ids)
+        dev_s = time.perf_counter() - tic
+        return StagedCohort(t, clients, batches, masks, ids, host_s, dev_s)
+
+    # ---- lifecycle ----
+
+    @property
+    def started(self) -> bool:
+        """True once the staging ring exists (some round was prefetched)."""
+        return self._ring is not None
+
+    def close(self):
+        """Stop the staging ring. The source is CALLER-owned (sweeps
+        share one across trainers) and is never closed here."""
+        if self._ring is not None:
+            self._ring.stop()

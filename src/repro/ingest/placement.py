@@ -1,0 +1,61 @@
+"""Device-place stage of the ingest pipeline (DESIGN.md §10).
+
+The fused cohort round consumes a (K, M, ...) batch stack, a (K, M)
+mask and (K,) client ids. Historically those crossed host->device
+implicitly at jit dispatch, serializing the H2D copy on the consumer
+thread. ``CohortPlacer`` makes the placement an explicit pipeline stage:
+
+  * it places against the round's ACTUAL layout — the same
+    ``P("clients")`` NamedSharding objects the round's jit was built
+    with on a mesh (sharding/rules.cohort_round_shardings), or the
+    default device off-mesh — so dispatch finds the inputs already
+    resident and copies nothing;
+  * ``place`` BLOCKS until the transfer lands. Run on the staging
+    ring's producer thread (ExecConfig.device_stage=True) that wait
+    overlaps device compute and disappears from the round's critical
+    path. Run on the consumer thread (device_stage=False) it is the
+    measured "transfer wait at dispatch" that
+    RoundRecord.ingest_device_seconds reports.
+
+A word on buffer lifetime: on CPU backends ``jax.device_put`` of an
+aligned numpy array MAY be zero-copy — the device value aliases the
+host buffer instead of copying it. Placement therefore does NOT free
+the staging slot for overwrite; the pipeline keeps every slot reserved
+until its round's results have synchronized (the same contract the
+host-staged path always had), which is safe under either semantics.
+
+Placement never changes values — committed arrays feed the jit exactly
+as host arrays would — so every execution regime stays round-for-round
+equal to the serial reference (tests/test_regime_matrix.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+PyTree = Any
+
+
+class CohortPlacer:
+    """Places (batches, masks, ids) with the cohort round's input layout.
+
+    ``input_sharding`` is the client-axis NamedSharding shared by every
+    cohort-stacked input of the round's jit (None = single-device: the
+    default device, uncommitted — jit accepts it without a copy)."""
+
+    def __init__(self, input_sharding=None):
+        self.input_sharding = input_sharding
+
+    def place(self, batches: PyTree, masks, ids) -> Tuple[PyTree, Any, Any]:
+        sh = self.input_sharding
+        put = (jax.device_put if sh is None
+               else (lambda x: jax.device_put(x, sh)))
+        batches = jax.tree.map(put, batches)
+        masks = None if masks is None else put(masks)
+        ids = None if ids is None else put(ids)
+        # block on the transfer so a producer-thread call fully absorbs
+        # the H2D wait (and the timing around a consumer-thread call
+        # measures it, not just the dispatch)
+        jax.block_until_ready((batches, masks, ids))
+        return batches, masks, ids

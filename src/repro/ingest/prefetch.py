@@ -1,0 +1,102 @@
+"""Depth-N staging ring for cohort ingest (DESIGN.md §10; the depth-2
+special case is the double-buffered prefetcher of DESIGN.md §2, moved
+here from core/client.py).
+
+A daemon thread runs ``produce_fn(t, slot)`` for t = start..end-1 IN
+ROUND ORDER (so RNG-driven client sampling inside it draws the exact
+same sequence as the blocking path), staging upcoming rounds into free
+ring slots while the current round's program runs on device. With
+``slots=N`` the producer runs up to N rounds ahead of the oldest
+unreleased slot and never overwrites a buffer a round may still be
+reading: the consumer releases a slot only after it has synchronized on
+that round's results (on CPU backends a device-placed value may alias
+the slot's host buffer — see ingest/placement.py — so placement alone
+never frees a slot).
+
+    item, slot = ring.get(t)   # blocks only until round t is staged
+    ... dispatch + sync ...
+    ring.release(slot)
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class CohortPrefetcher:
+    """Ring of ``slots`` staging buffers filled in round order by a
+    producer thread; ``slots=2`` double-buffers (the historical
+    default), ``slots=1`` single-buffers (the producer still runs off
+    the consumer thread, but can only work ahead while the consumer
+    holds nothing — useful as the degenerate point of depth sweeps)."""
+
+    def __init__(self, produce_fn, start: int, end: int, slots: int = 2):
+        self._end = end
+        self._ready = queue.Queue()
+        self._free = queue.Queue()
+        self.slots = max(1, slots)
+        for _ in range(self.slots):
+            self._free.put({})
+        self._exc = None
+        self._stopped = False
+        self._thread = threading.Thread(
+            target=self._loop, args=(produce_fn, start, end), daemon=True,
+            name="cohort-prefetch")
+        self._thread.start()
+
+    def _loop(self, produce_fn, start, end):
+        try:
+            for t in range(start, end):
+                slot = self._free.get()
+                if slot is None:        # stop() sentinel
+                    return
+                item = produce_fn(t, slot)
+                self._ready.put((t, item, slot))
+        except BaseException as e:      # surfaced on the next get()
+            self._exc = e
+            self._ready.put((None, None, None))
+
+    def get(self, t: int):
+        if t >= self._end:
+            raise RuntimeError(
+                f"round {t} is past the configured horizon ({self._end} "
+                "rounds were prefetched); raise ExecConfig.rounds or set "
+                "ExecConfig.prefetch=False to run extra rounds")
+        while True:
+            try:
+                got, item, slot = self._ready.get(timeout=1.0)
+                break
+            except queue.Empty:
+                # a dead producer with an empty queue would otherwise
+                # hang forever (e.g. rounds re-run after a completed run)
+                if not self._thread.is_alive():
+                    try:
+                        # drain once more: the producer's final put may
+                        # have landed between the timeout and this check
+                        got, item, slot = self._ready.get_nowait()
+                        break
+                    except queue.Empty:
+                        raise RuntimeError(
+                            f"prefetch producer exited (rounds consumed "
+                            f"or stopped) — round {t} was never staged; "
+                            "set ExecConfig.prefetch=False to re-run rounds"
+                        ) from self._exc
+        if got is None:                 # producer-failure sentinel; a round
+            # staged BEFORE the failure is still valid and returned above.
+            # Re-poison so every later get() fails too instead of hanging.
+            self._ready.put((None, None, None))
+            raise RuntimeError("cohort prefetch thread failed") from self._exc
+        if got != t:
+            raise RuntimeError(
+                f"prefetched round {got} but round {t} was requested — "
+                "prefetching requires run_round(t) in sequential order "
+                "(set ExecConfig.prefetch=False for out-of-order rounds)")
+        return item, slot
+
+    def release(self, slot: dict):
+        self._free.put(slot)
+
+    def stop(self):
+        if not self._stopped:
+            self._stopped = True
+            self._free.put(None)        # unblock the producer if waiting

@@ -7,13 +7,16 @@ paper's experiments on synthetic heterogeneous data).
 
 Built on the composable engine (DESIGN.md §3): the participation model is
 selectable (--sampler uniform|weighted|cyclic|markov), vision data
-streams through ``StreamingImageSource`` (batches materialize on the
-prefetch thread), --shard-clients/--model-shards turn on the sharded
-cohort round (--model-shards M > 1 builds the two-axis (clients, model)
-mesh of DESIGN.md §2 — per-leaf model-sharded params for >HBM configs),
-and --ckpt-dir/--ckpt-every/--resume checkpoint the full TrainerState so
-an interrupted run continues exactly where it stopped (mesh-shape
-changes across save/resume included).
+streams through the staged ingest pipeline (DESIGN.md §10) — synthetic
+by default, or the REAL disk-backed datasets via --dataset
+cifar10|cifar100|tiny-imagenet --data-root <standard download dir>,
+with --prefetch-depth/--host-staged steering the staging ring —
+--shard-clients/--model-shards turn on the sharded cohort round
+(--model-shards M > 1 builds the two-axis (clients, model) mesh of
+DESIGN.md §2 — per-leaf model-sharded params for >HBM configs), and
+--ckpt-dir/--ckpt-every/--resume checkpoint the full TrainerState so an
+interrupted run continues exactly where it stopped (mesh-shape changes
+across save/resume included).
 
 Also supports federated *LM* training with any assigned architecture's
 smoke config (--model starcoder2-3b etc.) — the beyond-paper scenario
@@ -33,13 +36,13 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_config
 from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
 from repro.core.baselines import default_hyper
-from repro.core.datasources import ListDataSource
 from repro.core.samplers import (CyclicSampler, MarkovSampler,
                                  UniformSampler, WeightedSampler)
-from repro.data.pipeline import StreamingImageSource, \
-    build_federated_image_data
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_dataset
+from repro.ingest import (CIFAR10Source, CIFAR100Source, ListDataSource,
+                          StreamingImageSource, TinyImageNetSource,
+                          build_federated_image_data)
 from repro.models import transformer as tf
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)
@@ -47,20 +50,39 @@ from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
 
 def build_vision_task(args):
     family = "lenet5" if args.model == "lenet5" else "resnet18"
-    nclass = {"lenet5": 10, "resnet18-gn": args.num_classes}.get(
-        args.model, args.num_classes)
-    vc = VisionConfig(name=args.model, family=family, num_classes=nclass)
-    data = build_federated_image_data(
-        num_classes=nclass, num_clients=args.clients, alpha=args.alpha,
-        samples_per_class=args.samples_per_class, seed=args.seed)
+    if args.dataset == "synthetic":
+        nclass = {"lenet5": 10, "resnet18-gn": args.num_classes}.get(
+            args.model, args.num_classes)
+        data = build_federated_image_data(
+            num_classes=nclass, num_clients=args.clients, alpha=args.alpha,
+            samples_per_class=args.samples_per_class, seed=args.seed)
+        # streaming: per-round batches materialize on the ingest path
+        source = StreamingImageSource(data, args.batch_size,
+                                      args.local_epochs)
+        te_x, te_y = data.test_images, data.test_labels
+        image_size = 32
+    else:
+        # disk-backed reader (ingest/datasets.py): Dirichlet-partitioned
+        # on load, records decode/augment lazily on the staging thread
+        if not args.data_root:
+            raise SystemExit(f"--dataset {args.dataset} needs --data-root "
+                             "(the standard download directory)")
+        src_cls = {"cifar10": CIFAR10Source, "cifar100": CIFAR100Source,
+                   "tiny-imagenet": TinyImageNetSource}[args.dataset]
+        source = src_cls(args.data_root, num_clients=args.clients,
+                         alpha=args.alpha, batch_size=args.batch_size,
+                         local_epochs=args.local_epochs,
+                         augment=args.augment, seed=args.seed)
+        nclass = source.num_classes
+        te_x, te_y = source.test_arrays()
+        image_size = 64 if args.dataset == "tiny-imagenet" else 32
+    vc = VisionConfig(name=args.model, family=family, num_classes=nclass,
+                      image_size=image_size)
     params = init_vision(vc, jax.random.PRNGKey(args.seed))
     loss_fn = functools.partial(vision_loss_fn, vc)
-    # streaming: per-round batches materialize on the ingest path
-    source = StreamingImageSource(data, args.batch_size, args.local_epochs)
-    te_x = jnp.asarray(data.test_images)
-    te_y = jnp.asarray(data.test_labels)
+    te_x, te_y = jnp.asarray(te_x), jnp.asarray(te_y)
     eval_fn = jax.jit(lambda p: vision_accuracy(vc, p, te_x, te_y))
-    return params, loss_fn, source, eval_fn, data.num_clients
+    return params, loss_fn, source, eval_fn, args.clients
 
 
 def build_lm_task(args):
@@ -99,7 +121,7 @@ def build_sampler(args, source, num_clients: int, cohort: int):
     if args.sampler == "uniform":
         return UniformSampler(num_clients, cohort)
     if args.sampler == "weighted":
-        if isinstance(source, StreamingImageSource):
+        if hasattr(source, "client_weights"):   # image sources, disk-backed
             weights = source.client_weights()
         else:   # LM task: uniform shard sizes, degenerate but valid
             weights = np.ones(num_clients)
@@ -124,6 +146,18 @@ def main(argv=None):
                     choices=["uniform", "weighted", "cyclic", "markov"])
     ap.add_argument("--markov-p-on", type=float, default=0.5)
     ap.add_argument("--markov-p-off", type=float, default=0.5)
+    ap.add_argument("--dataset", default="synthetic",
+                    choices=["synthetic", "cifar10", "cifar100",
+                             "tiny-imagenet"],
+                    help="vision data: offline synthetic (default) or a "
+                         "disk-backed reader over the standard download "
+                         "layout under --data-root (DESIGN.md §10)")
+    ap.add_argument("--data-root", default=None,
+                    help="directory holding cifar-10-batches-py / "
+                         "cifar-100-python / tiny-imagenet-200")
+    ap.add_argument("--augment", action="store_true",
+                    help="random crop + flip on the ingest path "
+                         "(disk-backed datasets)")
     ap.add_argument("--alpha", type=float, default=0.2)
     ap.add_argument("--eta-l", type=float, default=0.01)
     ap.add_argument("--eta-g", type=float, default=0.01)
@@ -146,6 +180,13 @@ def main(argv=None):
                          "the two-axis (clients, model) mesh so params/"
                          "server state shard per leaf over `model` (the "
                          ">HBM layout); must divide the device count")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="staging-ring depth: cohort buffers the ingest "
+                         "pipeline cycles through (DESIGN.md §10)")
+    ap.add_argument("--host-staged", action="store_true",
+                    help="keep the device-place stage on the consumer "
+                         "thread (H2D at dispatch) instead of the "
+                         "staging thread — the ingest bench's baseline")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -169,6 +210,8 @@ def main(argv=None):
         rounds=args.rounds, clients_per_round=cohort, seed=args.seed,
         eval_every=args.eval_every, vectorize=not args.serial,
         shard_clients=args.shard_clients, shard_model=args.model_shards,
+        prefetch_depth=args.prefetch_depth,
+        device_stage=not args.host_staged,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
 

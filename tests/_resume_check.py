@@ -12,9 +12,12 @@ tests/test_resume.py::test_resume_matches_uninterrupted:
 The comparison (in pytest) asserts params, server state, the sampled
 schedule, and per-round losses are EXACTLY equal — bitwise — for a
 stateless (feddpc), a per-client-stateful (fedvarp), and an adaptive-LR
-(fedexp) server rule, with prefetch on (the checkpoint must roll the RNG
-back past staged-but-unconsumed rounds) and a Markov sampler whose
-availability chain is itself checkpointed state.
+(fedexp) server rule, with DEPTH-8 device-staged prefetch (deeper than
+the run's remaining rounds, so at save time the staging ring has
+sampled every round to the horizon and the checkpoint must roll the
+RNG/sampler/schedule back past ALL staged-but-unconsumed rounds —
+DESIGN.md §10) and a Markov sampler whose availability chain is itself
+checkpointed state.
 """
 import os
 import sys
@@ -53,7 +56,8 @@ def ragged_batch_fn(c, t):
 
 def build(algo):
     cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
-                     eval_every=10 ** 9, prefetch=True)
+                     eval_every=10 ** 9, prefetch=True, prefetch_depth=8,
+                     device_stage=True)
     return FederatedTrainer(
         loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn, cfg,
         algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
@@ -87,7 +91,8 @@ def main(phase, workdir):
                 tr.save(ckpt_dir)
         elif phase == "resume":
             cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
-                             eval_every=10 ** 9, prefetch=True)
+                             eval_every=10 ** 9, prefetch=True,
+                             prefetch_depth=8, device_stage=True)
             with FederatedTrainer.resume(
                     ckpt_dir, loss_fn, make_params(), NUM_CLIENTS,
                     ragged_batch_fn, cfg,

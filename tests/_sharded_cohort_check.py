@@ -79,8 +79,8 @@ def check_trainer(algo: str, k: int = K):
 def check_sampler_and_streaming_source():
     """Non-uniform sampler + streaming source end-to-end through the
     sharded, prefetched, PADDED cohort round (K=6 on the 8-device axis)."""
-    from repro.data.pipeline import (StreamingImageSource,
-                                     build_federated_image_data)
+    from repro.ingest import (StreamingImageSource,
+                              build_federated_image_data)
     from repro.models.vision import VisionConfig, init_vision, vision_loss_fn
     import functools
 

@@ -1,0 +1,38 @@
+"""Regenerate the committed dataset-reader fixtures under
+tests/fixtures/data/ — tiny synthetic datasets in the EXACT on-disk
+formats of the real downloads (cifar-10-batches-py / cifar-100-python /
+tiny-imagenet-200), written by the ingest subsystem's own fixture
+writers (repro.ingest.readers.write_*_fixture), so the reader smoke lane
+runs without network access.
+
+  PYTHONPATH=src python tests/fixtures/generate_fixtures.py
+
+Deterministic (fixed seeds): re-running reproduces the committed bytes.
+TinyImageNet images are .npy (decodable without PIL); CIFAR pickles are
+protocol-default python pickles like the originals.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "..", "src"))
+
+from repro.ingest.readers import (write_cifar10_fixture,          # noqa: E402
+                                  write_cifar100_fixture,
+                                  write_tiny_imagenet_fixture)
+
+DATA_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+
+
+def main():
+    os.makedirs(DATA_DIR, exist_ok=True)
+    print(write_cifar10_fixture(DATA_DIR, per_class=4, test_per_class=2,
+                                train_batches=2, seed=0))
+    print(write_cifar100_fixture(DATA_DIR, num_classes=20, per_class=2,
+                                 test_per_class=1, seed=1))
+    print(write_tiny_imagenet_fixture(DATA_DIR, num_wnids=4, per_wnid=4,
+                                      val_per_wnid=1, seed=2))
+
+
+if __name__ == "__main__":
+    main()

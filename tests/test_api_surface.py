@@ -13,10 +13,9 @@ from repro.core.api import (AlgoConfig, ExecConfig, FLConfig,
                             FederatedTrainer)
 from repro.core.baselines import (FedDPCHyper, FedProxHyper, ServerAlgo,
                                   make_algorithm, register_algorithm)
-from repro.core.client import stack_cohort
-from repro.core.datasources import (DataSource, IteratorDataSource,
-                                    ListDataSource, as_data_source)
 from repro.core.round import make_cohort_round
+from repro.ingest import (DataSource, IteratorDataSource, ListDataSource,
+                          as_data_source, stack_cohort)
 from repro.core.samplers import (CyclicSampler, MarkovSampler,
                                  UniformSampler, WeightedSampler)
 
@@ -250,8 +249,8 @@ def test_streaming_source_matches_list_source():
 
 def test_streaming_image_source_runs():
     import functools
-    from repro.data.pipeline import (StreamingImageSource,
-                                     build_federated_image_data)
+    from repro.ingest import (StreamingImageSource,
+                              build_federated_image_data)
     from repro.models.vision import (VisionConfig, init_vision,
                                      vision_loss_fn)
     vc = VisionConfig(name="t", family="lenet5", num_classes=4,

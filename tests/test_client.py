@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.client import make_local_update, stack_batches
+from repro.core.client import make_local_update
+from repro.ingest import stack_batches
 
 
 def quad_loss(params, batch):

@@ -19,8 +19,8 @@ import pytest
 from repro.core import feddpc, projection as proj
 from repro.core.api import FLConfig, FederatedTrainer
 from repro.core.baselines import ALGORITHM_NAMES, get_algorithm
-from repro.core.client import (make_cohort_local_update, make_local_update,
-                               stack_batches, stack_cohort)
+from repro.core.client import make_cohort_local_update, make_local_update
+from repro.ingest import stack_batches, stack_cohort
 
 NUM_CLIENTS = 6
 K = 3

@@ -4,8 +4,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.data.dirichlet import dirichlet_partition, partition_stats
-from repro.data.pipeline import build_federated_image_data, client_batches
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
+from repro.ingest import build_federated_image_data, client_batches
 
 settings.register_profile("ci", max_examples=15, deadline=None)
 settings.load_profile("ci")

@@ -14,7 +14,7 @@ from repro.core import feddpc
 from repro.core.api import FLConfig, FederatedTrainer
 from repro.core.baselines import ALGORITHM_NAMES
 from repro.core.round import make_fl_round_step
-from repro.data.pipeline import build_federated_image_data, client_batches
+from repro.ingest import build_federated_image_data, client_batches
 from repro.models import transformer as tf
 from repro.models.vision import (VisionConfig, init_vision, vision_accuracy,
                                  vision_loss_fn)

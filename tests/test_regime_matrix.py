@@ -53,8 +53,10 @@ def _run_check(args, timeout=900):
 
 
 # the tier-1 slice: every execution regime at least once, the (2 clients
-# x 4 model) acceptance mesh for feddpc/fedavg/fedvarp, and every
-# non-uniform sampler against a non-serial regime
+# x 4 model) acceptance mesh for feddpc/fedavg/fedvarp, every non-uniform
+# sampler against a non-serial regime, and the staged-ingest acceptance
+# cells (prefetch_depth=4 + device staging on every mesh shape, plus the
+# host-staged single-buffer degenerate point — DESIGN.md §10)
 FAST_SLICE = [
     ("feddpc", "uniform", "serial", True),
     ("feddpc", "uniform", "vectorized", True),
@@ -65,6 +67,11 @@ FAST_SLICE = [
     ("feddpc", "markov", "sharded2d", True),
     ("fedexp", "cyclic", "sharded1d", False),
     ("fedvarp", "weighted", "vectorized", True),
+    ("feddpc", "uniform", "staged", True),
+    ("feddpc", "uniform", "staged1d", True),
+    ("feddpc", "uniform", "staged2d", True),
+    ("fedvarp", "markov", "staged2d", True),
+    ("feddpc", "uniform", "hoststaged", True),
 ]
 
 
@@ -72,7 +79,9 @@ def test_matrix_axes_come_from_the_registries():
     """Auto-enroll guard: the axes are read from the live registries, so
     a new algorithm/sampler/regime lands in full_matrix() without
     touching the tests — and the slices stay valid sub-sets."""
-    assert {"serial", "vectorized", "sharded1d", "sharded2d"} <= set(REGIMES)
+    assert {"serial", "vectorized", "sharded1d", "sharded2d",
+            "staged", "staged1d", "staged2d",
+            "hoststaged"} <= set(REGIMES)
     assert {"uniform", "weighted", "cyclic", "markov"} <= set(SAMPLERS)
     assert {"feddpc", "fedavg", "fedvarp", "fedexp"} <= set(ALGOS)
     cells = set(full_matrix())
@@ -80,6 +89,12 @@ def test_matrix_axes_come_from_the_registries():
     assert set(FAST_SLICE) <= cells
     # the 2-D path enrolled automatically (acceptance criterion)
     assert EXEC_REGIMES["sharded2d"]["shard_model"] > 1
+    # staged ingest (DESIGN.md §10) enrolled at the acceptance depth on
+    # every mesh shape, device-staged by default
+    for reg in ("staged", "staged1d", "staged2d"):
+        assert EXEC_REGIMES[reg]["prefetch_depth"] == 4
+    assert EXEC_REGIMES["staged2d"]["shard_model"] > 1
+    assert EXEC_REGIMES["hoststaged"]["device_stage"] is False
 
 
 def test_regime_matrix_fast_slice():
