@@ -73,6 +73,8 @@ DEFAULT_OUT = os.path.join(_ROOT, "BENCH_cohort_sharded.json")
 DEFAULT_OUT_2AXIS = os.path.join(_ROOT, "BENCH_cohort_2axis.json")
 # --ingest-sweep (depth x staging) receipt
 DEFAULT_OUT_INGEST = os.path.join(_ROOT, "BENCH_ingest.json")
+# --async-sweep (runtime model x buffer/concurrency) receipt
+DEFAULT_OUT_ASYNC = os.path.join(_ROOT, "BENCH_async.json")
 
 # mode name -> config overrides (use_kernel routes into the feddpc hyper,
 # the rest are ExecConfig fields); the sweep skips nothing silently — a
@@ -245,6 +247,108 @@ def run_ingest_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
     return payload
 
 
+def run_async_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
+                    batches_per_client: int = 4, batch: int = None,
+                    dim: int = None, hidden: int = None, classes: int = 10,
+                    algorithm: str = "feddpc", out: str = None) -> Dict:
+    """Buffered-async receipt (DESIGN.md §11): every runtime model
+    (core/runtime.runtime_matrix) under two (buffer, concurrency)
+    points — the sync-shaped anchor (B=K, concurrency 1) and the
+    streaming point (B=K/2, concurrency 4, where staleness appears).
+
+    Two metric classes land in the payload: wall-clock stats (machine-
+    dependent, gated loosely) and SIMULATION metrics — the virtual-time
+    staleness series, wave counts, and the final train loss — which are
+    deterministic functions of the seed and gate tightly. The
+    deterministic-runtime anchor must report identically-zero staleness
+    (the regime-matrix anchor cell, checked here as
+    ``anchor_zero_staleness``)."""
+    from repro.core.runtime import runtime_matrix
+
+    batch = 8 if batch is None else batch
+    dim = 256 if dim is None else dim
+    hidden = 512 if hidden is None else hidden
+    out = out or DEFAULT_OUT_ASYNC
+    params, loss_fn, batch_fn = build_task(
+        clients, batches_per_client, batch, dim, hidden, classes)
+    n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
+    points = [("anchor", clients, 1),
+              ("stream", max(1, clients // 2), 4)]
+    results = {}
+    for rt_name in runtime_matrix(clients):
+        for label, bsize, conc in points:
+            mode = f"{rt_name}+{label}"
+            cfg = ExecConfig(rounds=warmup + rounds, clients_per_round=clients,
+                             seed=0, eval_every=10 ** 9, async_buffer=True,
+                             buffer_size=bsize, async_concurrency=conc)
+            algo = AlgoConfig(name=algorithm, eta_l=0.05, eta_g=0.1)
+            try:
+                runtime = runtime_matrix(clients)[rt_name]   # fresh state
+                with FederatedTrainer(loss_fn, params, clients, batch_fn,
+                                      cfg, None, algo=algo,
+                                      runtime=runtime) as tr:
+                    for t in range(warmup):
+                        tr.run_round(t)
+                    recs = [tr.run_round(t)
+                            for t in range(warmup, warmup + rounds)]
+                    waves = len(tr.schedule)
+                times = np.asarray([r.seconds for r in recs])
+                results[mode] = {
+                    "mean_s": float(times.mean()),
+                    "p50_s": float(np.median(times)),
+                    "min_s": float(times.min()),
+                    "rounds": int(rounds),
+                    "buffer_size": int(bsize),
+                    "concurrency": int(conc),
+                    # simulation metrics: deterministic given the seed
+                    "staleness_mean": float(np.mean(
+                        [r.staleness_mean for r in recs])),
+                    "staleness_max": float(max(
+                        r.staleness_max for r in recs)),
+                    "waves_dispatched": int(waves),
+                    "final_train_loss": float(recs[-1].train_loss),
+                }
+                r = results[mode]
+                print(f"{mode:24s} mean {r['mean_s']*1e3:9.3f} ms"
+                      f"  staleness {r['staleness_mean']:6.3f}"
+                      f" (max {r['staleness_max']:4.1f})"
+                      f"  waves {r['waves_dispatched']:4d}")
+            except Exception as e:            # record, never skip silently
+                results[mode] = {"error": f"{type(e).__name__}: {e}"}
+                print(f"{mode:24s} FAILED: {results[mode]['error']}")
+    payload = {
+        "bench": "cohort_async_buffered",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "algorithm": algorithm,
+        "clients_per_round": clients,
+        "batches_per_client": batches_per_client,
+        "batch": batch, "dim": dim, "hidden": hidden,
+        "model_params": n_params,
+        "staleness_alpha": 0.5,
+        "modes": results,
+        "note": ("staleness_*/waves_dispatched/final_train_loss are "
+                 "virtual-time SIMULATION metrics — deterministic given "
+                 "the seed, gated tightly by bench_gate.py; *_s keys are "
+                 "wall-clock and gated loosely"),
+    }
+    det = results.get("deterministic+anchor", {})
+    if "staleness_max" in det:
+        # the regime-matrix anchor cell property, asserted on the receipt
+        payload["anchor_zero_staleness"] = (det["staleness_max"] == 0.0)
+    stream = results.get("heavytail+stream", {})
+    if "staleness_mean" in stream:
+        payload["heavytail_stream_staleness_mean"] = \
+            stream["staleness_mean"]
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for key in ("anchor_zero_staleness", "heavytail_stream_staleness_mean"):
+        if key in payload:
+            print(f"{key}: {payload[key]}")
+    print(f"-> {out}")
+    return payload
+
+
 def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
         batches_per_client: int = 4, batch: int = 8, dim: int = 512,
         hidden: int = 2048, classes: int = 10, algorithm: str = "feddpc",
@@ -335,12 +439,23 @@ def main(argv=None):
                     help="run the staged-ingest receipt instead: "
                          "prefetch_depth {1,2,4,8} x {host,device} "
                          "staging -> BENCH_ingest.json (DESIGN.md §10)")
+    ap.add_argument("--async-sweep", action="store_true",
+                    help="run the buffered-async receipt instead: every "
+                         "runtime model x {anchor, streaming} points -> "
+                         "BENCH_async.json (DESIGN.md §11)")
     ap.add_argument("--out", default=None,
                     help="defaults to BENCH_cohort_sharded.json, "
                          "BENCH_cohort_2axis.json with --model-shards, "
-                         "or BENCH_ingest.json with --ingest-sweep")
+                         "BENCH_ingest.json with --ingest-sweep, or "
+                         "BENCH_async.json with --async-sweep")
     a = ap.parse_args(argv)
-    if a.ingest_sweep:
+    if a.async_sweep:
+        run_async_sweep(clients=a.clients, rounds=a.rounds,
+                        warmup=a.warmup,
+                        batches_per_client=a.batches_per_client,
+                        batch=a.batch, dim=a.dim, hidden=a.hidden,
+                        algorithm=a.algorithm, out=a.out)
+    elif a.ingest_sweep:
         run_ingest_sweep(clients=a.clients, rounds=a.rounds,
                          warmup=a.warmup,
                          batches_per_client=a.batches_per_client,

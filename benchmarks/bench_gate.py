@@ -1,0 +1,159 @@
+"""Bench regression gate: diff a freshly generated BENCH_*.json against
+its committed baseline (benchmarks/baselines/) with per-key tolerance
+classes, so CI catches structural and simulation regressions without
+flaking on shared-runner wall-clock noise.
+
+Three key classes, decided by key NAME (the receipts already separate
+them by naming convention):
+
+  perf      wall-clock stats (``*_s`` suffixes) and derived ratios
+            (``speedup_*``, ``*_reduction_*``): machine-dependent, gated
+            by a multiplicative band — fresh must lie within
+            [baseline / factor, baseline * factor] (``--perf-factor``,
+            default 10; ratios can legitimately sit at 0.0/1.0 by
+            construction, so an absolute slack of 1.0 is added for them)
+  sim       simulation metrics (``staleness_*``, ``*train_loss``,
+            ``waves_dispatched``, ``anchor_zero_staleness``):
+            deterministic functions of the seed and the virtual-time
+            engine — gated tightly (``--sim-rtol``, default 1e-3, which
+            absorbs BLAS-order float differences across hosts)
+  exact     everything else (config echoes, shapes, mode sets, flags):
+            must match exactly — a missing mode or an ``error`` entry in
+            any mode fails the gate outright
+
+Baseline keys missing from the fresh payload fail (coverage regression);
+fresh-only keys pass with a note (a new receipt field must not break the
+gate before its baseline is regenerated).
+
+  PYTHONPATH=src python -m benchmarks.bench_gate \
+      --fresh /tmp/bench_smoke.json \
+      --baseline benchmarks/baselines/bench_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PERF_SUFFIXES = ("_s", "_ms")
+PERF_PREFIXES = ("speedup_",)
+PERF_SUBSTR = ("_reduction_",)
+SIM_KEYS = ("staleness_mean", "staleness_max", "final_train_loss",
+            "train_loss", "waves_dispatched", "anchor_zero_staleness",
+            "heavytail_stream_staleness_mean")
+# host-dependent context fields: echoed for humans, never gated (the
+# committed receipts come from dev machines, CI runs elsewhere)
+CONTEXT_KEYS = ("backend", "note", "kernel_note")
+
+
+def classify(key: str) -> str:
+    if key in CONTEXT_KEYS:
+        return "context"
+    if key in SIM_KEYS:
+        return "sim"
+    if (key.endswith(PERF_SUFFIXES) or key.startswith(PERF_PREFIXES)
+            or any(s in key for s in PERF_SUBSTR)):
+        return "perf"
+    return "exact"
+
+
+def check(base, fresh, path, problems, notes, *, perf_factor, sim_rtol):
+    key = path.rsplit(".", 1)[-1]
+    cls = classify(key)
+    if cls == "context":
+        return
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            problems.append(f"{path}: baseline is a dict, fresh is "
+                            f"{type(fresh).__name__}")
+            return
+        for k in base:
+            if k not in fresh:
+                problems.append(f"{path}.{k}: missing from fresh payload "
+                                "(coverage regression)")
+                continue
+            check(base[k], fresh[k], f"{path}.{k}", problems, notes,
+                  perf_factor=perf_factor, sim_rtol=sim_rtol)
+        for k in fresh:
+            if k not in base:
+                notes.append(f"{path}.{k}: new key (not in baseline)")
+        return
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        # bools before numbers: isinstance(True, int) holds
+        if bool(base) != bool(fresh):
+            problems.append(f"{path}: {base!r} != {fresh!r} [{cls}]")
+        return
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        b, f = float(base), float(fresh)
+        if math.isnan(b) or math.isnan(f):
+            problems.append(f"{path}: NaN (baseline {base}, fresh {fresh})")
+        elif cls == "perf":
+            lo, hi = b / perf_factor, b * perf_factor
+            slack = 1.0 if not key.endswith(PERF_SUFFIXES) else 0.0
+            if not (lo - slack <= f <= hi + slack):
+                problems.append(
+                    f"{path}: {f:.6g} outside perf band "
+                    f"[{lo:.6g}, {hi:.6g}] (baseline {b:.6g}, "
+                    f"factor {perf_factor})")
+        elif cls == "sim":
+            if not math.isclose(f, b, rel_tol=sim_rtol, abs_tol=sim_rtol):
+                problems.append(
+                    f"{path}: sim metric {f!r} != baseline {b!r} "
+                    f"(rtol {sim_rtol})")
+        else:
+            if f != b:
+                problems.append(f"{path}: {fresh!r} != {base!r} [exact]")
+        return
+    if base != fresh:
+        problems.append(f"{path}: {fresh!r} != {base!r} [{cls}]")
+
+
+def gate(baseline_path: str, fresh_path: str, *, perf_factor: float = 10.0,
+         sim_rtol: float = 1e-3) -> int:
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+    problems, notes = [], []
+    # an error recorded in ANY fresh mode fails, even if the baseline
+    # (wrongly) carries one too
+    for mode, stats in fresh.get("modes", {}).items():
+        if isinstance(stats, dict) and "error" in stats:
+            problems.append(f"modes.{mode}: {stats['error']}")
+    check(base, fresh, "$", problems, notes,
+          perf_factor=perf_factor, sim_rtol=sim_rtol)
+    for n in notes:
+        print(f"note: {n}")
+    if problems:
+        print(f"BENCH GATE FAILED ({len(problems)} problem(s)) "
+              f"[{fresh_path} vs {baseline_path}]:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"bench gate OK: {fresh_path} within tolerance of "
+          f"{baseline_path} ({len(notes)} new key(s))")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed reference receipt "
+                         "(benchmarks/baselines/*.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="receipt generated by this run")
+    ap.add_argument("--perf-factor", type=float, default=10.0,
+                    help="multiplicative band for wall-clock keys "
+                         "(default 10: catches order-of-magnitude "
+                         "regressions without flaking on runner noise)")
+    ap.add_argument("--sim-rtol", type=float, default=1e-3,
+                    help="relative tolerance for deterministic "
+                         "simulation metrics (default 1e-3)")
+    a = ap.parse_args(argv)
+    return gate(a.baseline, a.fresh, perf_factor=a.perf_factor,
+                sim_rtol=a.sim_rtol)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

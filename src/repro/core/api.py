@@ -135,6 +135,24 @@ class ExecConfig:
     # finalize()/run() end) — read it from history, not from the record
     # run_round just returned; set False for strictly inline eval
     async_eval: bool = True
+    # ---- buffered-async regime (DESIGN.md §11) ----
+    # FedBuff-style streaming aggregation: cohorts become WAVES trained
+    # against possibly-stale snapshots, updates stream into a server
+    # buffer through the pluggable runtime model (core/runtime.py), and
+    # the server steps every buffer_size arrivals with the staleness
+    # discount (1+s)^(-staleness_alpha) folded into the aggregation
+    async_buffer: bool = False
+    # arrivals per server step (B); None -> clients_per_round, which at
+    # async_concurrency=1 under DeterministicRuntime IS the sync round
+    buffer_size: Optional[int] = None
+    staleness_alpha: float = 0.5
+    # max waves in flight at once: >1 lets fresh waves overlap stale
+    # stragglers (staleness > 0 appears), 1 keeps waves serial
+    async_concurrency: int = 1
+    # staging-ring stall deadline (seconds): a producer thread alive but
+    # stuck inside produce_fn raises instead of spinning forever; None
+    # keeps the historical wait-forever behavior
+    ingest_stall_s: Optional[float] = None
     # data-shape hints for drivers that build sources from raw datasets
     # (the trainer itself never reads them)
     batch_size: int = 256
@@ -208,6 +226,11 @@ EXEC_REGIMES = {
     "staged2d": {"shard_clients": True, "shard_model": 4,
                  "prefetch_depth": 4},
     "hoststaged": {"device_stage": False, "prefetch_depth": 1},
+    # buffered-async streaming aggregation (DESIGN.md §11): with the
+    # default DeterministicRuntime, buffer_size=K and concurrency 1 the
+    # wave schedule, arrival order and staleness-0 discounts reproduce
+    # the synchronous round — the anchor cell the matrix pins
+    "async_buffer": {"async_buffer": True},
 }
 
 
@@ -228,6 +251,12 @@ class RoundRecord:
     # ExecConfig.device_stage moved it onto the staging thread
     ingest_device_seconds: float = 0.0
     diagnostics: Dict[str, float] = field(default_factory=dict)
+    # buffered-async regime only (DESIGN.md §11): staleness statistics
+    # of the arrivals this server step folded — kept OUT of diagnostics
+    # (whose keys the cross-regime matrix requires equal to the sync
+    # run); identically 0.0 in every synchronous regime
+    staleness_mean: float = 0.0
+    staleness_max: float = 0.0
 
 
 @dataclass
@@ -247,6 +276,9 @@ class TrainerState:
     sampler_state: Dict
     schedule: List[np.ndarray]
     history: List[RoundRecord]
+    # buffered-async regime: runtime-model state (e.g. the Markov
+    # fast/slow chain) as of the next wave to dispatch; None elsewhere
+    runtime_state: Optional[Dict] = None
 
 
 def _coerce_cfg(cfg, algo) -> Tuple[AlgoConfig, ExecConfig]:
@@ -283,8 +315,17 @@ class FederatedTrainer:
                  data, cfg=None,
                  eval_fn: Optional[Callable[[PyTree], float]] = None, *,
                  algo: Optional[AlgoConfig] = None,
-                 sampler: Optional[ClientSampler] = None):
+                 sampler: Optional[ClientSampler] = None,
+                 runtime=None):
         algo_cfg, exec_cfg = _coerce_cfg(cfg, algo)
+        if runtime is not None and not exec_cfg.async_buffer:
+            raise ValueError(
+                "a runtime model only drives the buffered-async regime — "
+                "pass ExecConfig(async_buffer=True) with it")
+        if exec_cfg.async_buffer and not exec_cfg.vectorize:
+            raise ValueError("async_buffer dispatches whole waves through "
+                             "the cohort-vectorized update; it cannot "
+                             "combine with vectorize=False")
         self.cfg = exec_cfg                   # execution knobs
         self.algo_cfg = algo_cfg
         # private copy: the fused round donates the params buffers, and the
@@ -314,11 +355,16 @@ class FederatedTrainer:
             self._round_shardings = cohort_round_shardings(
                 self.mesh, params=self.params,
                 server_state=self.server_state)
-        # fused path: local training + server step, one program per round
+        # fused path: local training + server step, one program per round.
+        # real_clients carries the pad count so a zero-data client (all
+        # minibatches masked) still counts as SAMPLED — the legacy
+        # masks.any() fallback would reclassify it as padding
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
             optimizer=algo_cfg.local_optimizer, mesh=self.mesh,
-            pad_clients=self._pad_to > k, shardings=self._round_shardings)
+            pad_clients=self._pad_to > k,
+            real_clients=k if self._pad_to > k else None,
+            shardings=self._round_shardings)
         if self.mesh is not None:
             # pre-place so the first round's donation matches: replicated
             # on the 1-D client mesh, per-leaf model-sharded on a
@@ -346,10 +392,26 @@ class FederatedTrainer:
                     if self._round_shardings is not None else None)
         self._pipeline = CohortIngestPipeline(
             self.source, self._sample_clients,
-            num_clients=num_clients, rounds=exec_cfg.rounds,
+            num_clients=num_clients,
+            # the async engine dispatches a DYNAMIC number of waves
+            # (dropout re-draws, buffer_size != K): open horizon, the
+            # ring backpressures on depth
+            rounds=None if exec_cfg.async_buffer else exec_cfg.rounds,
             depth=exec_cfg.prefetch_depth,
             device_stage=exec_cfg.device_stage,
-            placer=CohortPlacer(input_sh), pad_to=self._pad_to)
+            placer=CohortPlacer(input_sh), pad_to=self._pad_to,
+            stall_timeout=exec_cfg.ingest_stall_s)
+        # buffered-async engine (DESIGN.md §11): owns the virtual-time
+        # wave heap; the runtime model's draws ride the sampling lock
+        self._runtime = None
+        self._engine = None
+        self._wave_runtime: Dict[int, tuple] = {}
+        if exec_cfg.async_buffer:
+            from repro.core.runtime import DeterministicRuntime
+            self._runtime = (runtime if runtime is not None
+                             else DeterministicRuntime())
+            self._engine = self._build_async_engine(loss_fn, algo_cfg,
+                                                    exec_cfg)
         self._start_round = 0                    # advanced by restore()
         self._pending_eval = None                # (RoundRecord, Future)
         self._async_eval = eval_fn is not None and exec_cfg.async_eval
@@ -381,6 +443,69 @@ class FederatedTrainer:
         from repro.launch import mesh as mesh_mod
         return mesh_mod.make_cohort_mesh(model=self.cfg.shard_model)
 
+    def _build_async_engine(self, loss_fn, algo_cfg, exec_cfg):
+        """Wire the buffered-async engine: the round splits at the
+        arrival buffer into a jit'd WAVE update (local training against
+        the dispatch-time snapshot) and a jit'd staleness-weighted FOLD
+        (the server step over the buffered deltas). A staleness-aware
+        rule (FedDPC family) takes the discounts as its own reduction-
+        pass scalars; any other rule gets the buffered deltas pre-scaled
+        (FedBuff mean semantics)."""
+        from repro.core.async_engine import BufferedAsyncEngine
+        from repro.core.baselines import client_kwargs
+        local = client_mod.make_cohort_local_update(
+            loss_fn, algo_cfg.eta_l, variant=self.algo.client_variant,
+            optimizer=algo_cfg.local_optimizer, **client_kwargs(self.algo))
+        algo, eta_g = self.algo, algo_cfg.eta_g
+        model_sharded = bool(
+            self.mesh is not None and "model" in self.mesh.axis_names
+            and dict(zip(self.mesh.axis_names,
+                         self.mesh.devices.shape))["model"] > 1)
+
+        def wave_update(params, server_state, batches, masks):
+            extra = algo.client_extra(server_state)
+            return local(params, batches, masks, extra)
+
+        def fold(server_state, params, deltas, ids, weights):
+            if algo.staleness_aware:
+                return algo.step(server_state, params, deltas, ids, eta_g,
+                                 0, client_mask=None,
+                                 model_sharded=model_sharded,
+                                 staleness_weights=weights)
+            pre = jax.tree.map(
+                lambda x: weights.reshape((-1,) + (1,) * (x.ndim - 1))
+                * x.astype(jnp.float32), deltas)
+            return algo.step(server_state, params, pre, ids, eta_g, 0,
+                             client_mask=None, model_sharded=model_sharded)
+
+        wave_kw: Dict[str, Any] = {}
+        # NO donation on the wave: params/server_state survive for the
+        # next wave of the same server round; the fold donates both
+        fold_kw: Dict[str, Any] = {"donate_argnums": (0, 1)}
+        if self.mesh is not None:
+            from repro.sharding.rules import async_round_shardings
+            w_in, w_out, f_in, f_out = async_round_shardings(
+                self.mesh, params=self.params,
+                server_state=self.server_state)
+            wave_kw.update(in_shardings=w_in, out_shardings=w_out)
+            fold_kw.update(in_shardings=f_in, out_shardings=f_out)
+        return BufferedAsyncEngine(
+            pipeline=self._pipeline,
+            wave_update=jax.jit(wave_update, **wave_kw),
+            fold=jax.jit(fold, **fold_kw),
+            runtime_take=self._runtime_take,
+            buffer_size=(exec_cfg.buffer_size
+                         or exec_cfg.clients_per_round),
+            alpha=exec_cfg.staleness_alpha,
+            concurrency=exec_cfg.async_concurrency,
+            prefetch=exec_cfg.prefetch)
+
+    def _runtime_take(self, wave: int):
+        """Hand the engine the (latencies, dropped) pair captured for
+        this wave at sampling time (round-order RNG contract)."""
+        with self._sample_lock:
+            return self._wave_runtime.pop(wave)
+
     def _placements(self):
         """(params, server_state) shardings on the trainer's mesh —
         replicated on a 1-D client mesh, per-leaf model-sharded on a
@@ -395,6 +520,8 @@ class FederatedTrainer:
                 "rng": self.rng.get_state(),
                 "sampler": self.sampler.state_dict(),
                 "max_batches": self._max_batches,
+                **({"runtime": self._runtime.state_dict()}
+                   if self._runtime is not None else {}),
             }
             # retention must cover the staging look-ahead: the producer
             # samples up to prefetch_depth rounds past the consumed
@@ -419,6 +546,14 @@ class FederatedTrainer:
                 raise ValueError(f"sampler returned duplicate client ids: "
                                  f"{clients.tolist()}")
             self.schedule.append(clients)
+            if self._runtime is not None:
+                # runtime draws ride the SAME lock, right after the
+                # sampler's, so wave t always consumes sampler-then-
+                # runtime in wave order — prefetched waves replay
+                # bitwise on resume (round-order RNG contract)
+                lat, dropped = self._runtime.draw(self.rng, t, clients)
+                self._wave_runtime[t] = (np.asarray(lat, np.float64),
+                                         np.asarray(dropped, bool))
         return clients
 
     def _round_batches(self, clients: Sequence[int], t: int):
@@ -440,7 +575,8 @@ class FederatedTrainer:
             # released on error too — leaking the slot would deadlock the
             # NEXT run_round inside the staging ring instead of erroring
             staged.release()
-        return train_loss, diag, staged.host_seconds, staged.device_seconds
+        return (train_loss, diag, staged.host_seconds,
+                staged.device_seconds, {})
 
     def _run_round_serial(self, t: int):
         clients = self._sample_clients(t)
@@ -457,7 +593,17 @@ class FederatedTrainer:
         ids = jnp.asarray(clients, jnp.int32)
         self.params, self.server_state, diag = self._server_step(
             self.server_state, self.params, stacked, ids)
-        return float(np.mean(losses)), diag, ingest, 0.0
+        return float(np.mean(losses)), diag, ingest, 0.0, {}
+
+    def _run_round_async(self, t: int):
+        """One buffered-async server step: the engine collects the next
+        buffer_size arrivals (dispatching waves as concurrency allows)
+        and folds them with their staleness discounts."""
+        self.params, self.server_state, m = self._engine.run_server_round(
+            t, self.params, self.server_state)
+        return (m["train_loss"], m["diag"], m["host_seconds"],
+                m["device_seconds"], {"staleness_mean": m["staleness_mean"],
+                                      "staleness_max": m["staleness_max"]})
 
     def _resolve_pending_eval(self):
         if self._pending_eval is not None:
@@ -475,16 +621,18 @@ class FederatedTrainer:
         if self._pending_eval is not None and self._pending_eval[1].done():
             self._resolve_pending_eval()
         tic = time.perf_counter()
-        run = (self._run_round_vectorized if self.cfg.vectorize
+        run = (self._run_round_async if self._engine is not None
+               else self._run_round_vectorized if self.cfg.vectorize
                else self._run_round_serial)
-        train_loss, diag, ingest_host, ingest_dev = run(t)
+        train_loss, diag, ingest_host, ingest_dev, extra = run(t)
         rec = RoundRecord(
             round=t, train_loss=train_loss,
             seconds=time.perf_counter() - tic,
             ingest_seconds=ingest_host + ingest_dev,
             ingest_host_seconds=ingest_host,
             ingest_device_seconds=ingest_dev,
-            diagnostics={k: float(v) for k, v in diag.items()})
+            diagnostics={k: float(v) for k, v in diag.items()},
+            **extra)
         if self.eval_fn and (t % self.cfg.eval_every == 0
                              or t == self.cfg.rounds - 1):
             # previous async eval must land before its boundary passes
@@ -581,17 +729,26 @@ class FederatedTrainer:
                     "save() requires rounds to have been run sequentially "
                     "from 0 (run_round(0), run_round(1), ...); history "
                     f"holds rounds {[r.round for r in self.history]}")
-            cap = self._round_caps.get(next_round)
+            # synchronous path: the sampling frontier IS the next round;
+            # buffered-async: the engine's wave frontier (waves run ahead
+            # of server rounds), and the capture also carries the
+            # runtime-model state as of that wave
+            frontier = (next_round if self._engine is None
+                        else self._engine.wave_frontier)
+            cap = self._round_caps.get(frontier)
             if cap is None:     # nothing staged past the consumed rounds
                 cap = {"rng": self.rng.get_state(),
                        "sampler": self.sampler.state_dict(),
-                       "max_batches": self._max_batches}
-            schedule = [np.asarray(c) for c in self.schedule[:next_round]]
+                       "max_batches": self._max_batches,
+                       **({"runtime": self._runtime.state_dict()}
+                          if self._runtime is not None else {})}
+            schedule = [np.asarray(c) for c in self.schedule[:frontier]]
         return TrainerState(
             params=self.params, server_state=self.server_state,
             round=next_round, max_batches=cap["max_batches"],
             rng_state=cap["rng"], sampler_state=cap["sampler"],
-            schedule=schedule, history=list(self.history))
+            schedule=schedule, history=list(self.history),
+            runtime_state=cap.get("runtime"))
 
     def _algo_echo(self) -> dict:
         """JSON echo of everything that parameterizes the compiled round
@@ -622,6 +779,37 @@ class FederatedTrainer:
             "schedule": (np.stack(st.schedule).astype(np.int64)
                          if st.schedule else np.zeros((0, k), np.int64)),
         }
+        if self._engine is not None:
+            # buffered-async streaming state (DESIGN.md §11): virtual
+            # clock + the in-flight entries (dispatched, not yet folded)
+            # in heap order, their delta pytrees stacked per leaf with
+            # exact dtypes — load_inflight rebuilds the heap bitwise.
+            # The arrival buffer itself is always empty between rounds.
+            eng = self._engine
+            entries = eng.inflight()
+            aux_arrays.update({
+                "async_clock": np.float64(eng.clock),
+                "async_seq": np.int64(eng.seq),
+                "async_wave_frontier": np.int64(eng.wave_frontier),
+                "async_n_inflight": np.int64(len(entries)),
+                "async_entry_client": np.asarray(
+                    [e.client for e in entries], np.int64),
+                "async_entry_wave": np.asarray(
+                    [e.wave for e in entries], np.int64),
+                "async_entry_version": np.asarray(
+                    [e.version for e in entries], np.int64),
+                "async_entry_seq": np.asarray(
+                    [e.seq for e in entries], np.int64),
+                "async_entry_finish": np.asarray(
+                    [e.finish for e in entries], np.float64),
+                "async_entry_loss": np.asarray(
+                    [e.loss for e in entries], np.float32),
+            })
+            for i in range(len(jax.tree_util.tree_leaves(self.params))):
+                if entries:
+                    aux_arrays[f"async_delta_{i}"] = np.stack(
+                        [np.asarray(jax.tree_util.tree_leaves(e.delta)[i])
+                         for e in entries])
         aux_json = {
             "format": 1,
             "algorithm": self.algo.name,
@@ -639,6 +827,14 @@ class FederatedTrainer:
                         "state": st.sampler_state},
             "history": [asdict(r) for r in st.history],
         }
+        if self._engine is not None:
+            aux_json["async"] = {
+                "buffer_size": self._engine.buffer_size,
+                "alpha": self._engine.alpha,
+                "concurrency": self._engine.concurrency,
+                "runtime": {"config": self._runtime.config_dict(),
+                            "state": st.runtime_state or {}},
+            }
         return ckpt.save(ckpt_dir, st.round,
                          {"params": st.params,
                           "server_state": st.server_state},
@@ -698,6 +894,12 @@ class FederatedTrainer:
                 f"{type(self.sampler).__name__} — resume with the same "
                 "sampler the original run used")
         saved_cfg = meta["sampler"].get("config")
+        if saved_cfg is not None:
+            # resume-compat shim: pre-digest sidecars embedded the full
+            # probability vector under "p"; normalize maps them onto the
+            # (p_digest, p_len) form current config_dicts carry
+            from repro.core.samplers import normalize_sampler_config
+            saved_cfg = normalize_sampler_config(saved_cfg)
         if saved_cfg is not None and saved_cfg != self.sampler.config_dict():
             # same class, different construction (Markov transition
             # probabilities, weight vector, ...) — also diverges silently
@@ -705,6 +907,29 @@ class FederatedTrainer:
                 f"checkpoint sampler was built as {saved_cfg}, trainer's "
                 f"is {self.sampler.config_dict()} — resume with the "
                 "original sampler parameters")
+        meta_async = meta.get("async")
+        if (meta_async is not None) != (self._engine is not None):
+            raise ValueError(
+                "checkpoint and trainer disagree on the buffered-async "
+                f"regime (checkpoint async={meta_async is not None}, "
+                f"trainer async={self._engine is not None}) — the wave/"
+                "arrival trajectory is part of the run and cannot switch "
+                "mid-stream")
+        if self._engine is not None:
+            eng = self._engine
+            for knob in ("buffer_size", "alpha", "concurrency"):
+                if meta_async[knob] != getattr(eng, knob):
+                    raise ValueError(
+                        f"checkpoint has async {knob}={meta_async[knob]}, "
+                        f"trainer was built with {getattr(eng, knob)} — "
+                        "resume with the original async configuration")
+            rt = meta_async["runtime"]
+            if rt["config"] != self._runtime.config_dict():
+                raise ValueError(
+                    f"checkpoint runtime model was built as "
+                    f"{rt['config']}, trainer's is "
+                    f"{self._runtime.config_dict()} — resume with the "
+                    "original runtime model")
         self.params = state["params"]
         self.server_state = state["server_state"]
         if self.mesh is not None:
@@ -728,6 +953,34 @@ class FederatedTrainer:
         self.history = [RoundRecord(**r) for r in meta["history"]]
         if meta["sampler"].get("state"):
             self.sampler.load_state_dict(meta["sampler"]["state"])
+        if self._engine is not None:
+            from repro.core.async_engine import BufferEntry
+            eng = self._engine
+            rt_state = meta["async"]["runtime"].get("state")
+            if rt_state:
+                self._runtime.load_state_dict(rt_state)
+            eng.clock = float(arrays["async_clock"])
+            eng.seq = int(arrays["async_seq"])
+            eng.wave_frontier = int(arrays["async_wave_frontier"])
+            # folds performed == server rounds consumed
+            eng.version = self._start_round
+            n = int(arrays["async_n_inflight"])
+            entries = []
+            if n:
+                _, treedef = jax.tree_util.tree_flatten(self.params)
+                stacked = [jnp.asarray(arrays[f"async_delta_{i}"])
+                           for i in range(treedef.num_leaves)]
+                for j in range(n):
+                    entries.append(BufferEntry(
+                        client=int(arrays["async_entry_client"][j]),
+                        wave=int(arrays["async_entry_wave"][j]),
+                        version=int(arrays["async_entry_version"][j]),
+                        seq=int(arrays["async_entry_seq"][j]),
+                        finish=float(arrays["async_entry_finish"][j]),
+                        loss=float(arrays["async_entry_loss"][j]),
+                        delta=jax.tree_util.tree_unflatten(
+                            treedef, [s[j] for s in stacked])))
+            eng.load_inflight(entries)
         self._round_caps.clear()
         return self
 
@@ -736,12 +989,14 @@ class FederatedTrainer:
                num_clients: int, data, cfg=None, eval_fn=None, *,
                algo: Optional[AlgoConfig] = None,
                sampler: Optional[ClientSampler] = None,
+               runtime=None,
                step: Optional[int] = None) -> "FederatedTrainer":
         """Fresh-process resume: construct the trainer exactly as the
         original run did, then restore the saved TrainerState. ``run()``
         continues from the checkpointed round and reproduces the
-        uninterrupted run bit for bit."""
+        uninterrupted run bit for bit — including mid-buffer async
+        state (pass the same ``runtime`` model the original run used)."""
         algo, cfg = _coerce_cfg(cfg, algo)
         tr = cls(loss_fn, params, num_clients, data, cfg, eval_fn,
-                 algo=algo, sampler=sampler)
+                 algo=algo, sampler=sampler, runtime=runtime)
         return tr.restore(ckpt_dir, step=step)

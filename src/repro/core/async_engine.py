@@ -1,0 +1,213 @@
+"""Buffered-async round engine — FedBuff-style streaming aggregation
+(DESIGN.md §11; FedBuff, arXiv:2106.06639).
+
+The synchronous trainer steps the server once per fully-finished cohort;
+under real partial participation stragglers hold every round hostage.
+Here the cohort dispatches are WAVES: wave w's clients train against the
+params snapshot current at dispatch time, their updates travel for
+runtime-model latencies (core/runtime.py), and finished updates stream
+into a server-side buffer as they arrive. Every ``buffer_size`` (B)
+arrivals the server folds the buffer in one step; an update computed
+against snapshot version v and folded at version t carries staleness
+s = t - v and a discount weight
+
+    w(s) = (1 + s) ** (-alpha)          (exactly 1.0 at s = 0)
+
+folded into the aggregation — for FedDPC, multiplied into the
+reduction-pass ``scale`` so the projection geometry is computed on the
+RAW delta and only the applied magnitude is discounted (the
+staleness-discounted projection coefficient of DESIGN.md §11); for
+mean-style rules, pre-scaled onto the buffered deltas (FedBuff
+semantics).
+
+Time is VIRTUAL: a (finish_time, seq) min-heap orders arrivals, the
+clock jumps to each pop, and latencies come from the pluggable runtime
+model whose draws happen inside the trainer's sampling lock in wave
+order — so the whole async trajectory is a pure function of (seed,
+configuration) and replays bitwise across prefetch depths and
+checkpoint/resume cuts. The ``seq`` tiebreak makes equal-latency
+arrivals pop in dispatch order, which is what pins the anchor cell of
+the regime matrix: DeterministicRuntime + concurrency 1 + B = K yields
+arrival order == cohort order and staleness identically 0, i.e. the
+synchronous round.
+
+``concurrency`` bounds how many waves may be in flight at once; new
+waves dispatch whenever the in-flight count drops below it (or the heap
+runs dry), so higher concurrency trades staleness for utilization —
+the axis the --async-sweep benchmark walks.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Callable, List, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+@dataclass(order=False)
+class BufferEntry:
+    """One in-flight (or buffered) client update. ``version`` is the
+    server-params version the delta was computed against; staleness at
+    fold time is ``fold_version - version``. Ordered by (finish, seq)
+    in the virtual-time heap — ``seq`` is a global dispatch counter, so
+    equal finish times resolve in dispatch order (deterministic)."""
+    client: int
+    wave: int
+    version: int
+    seq: int
+    finish: float          # virtual arrival time
+    loss: float
+    delta: PyTree          # one client's update (tree mirroring params)
+
+
+class BufferedAsyncEngine:
+    """Virtual-time wave dispatcher + server-side arrival buffer.
+
+    Collaborators (all trainer-owned, so the engine stays free of jit /
+    algorithm specifics):
+
+      pipeline       CohortIngestPipeline staging wave cohorts in wave
+                     order (rounds=None: the wave horizon is open)
+      wave_update    (params, server_state, batches, masks) ->
+                     (deltas (Kp, ...), losses (Kp,)) — the jit'd
+                     cohort local update against the CURRENT snapshot
+      fold           (server_state, params, deltas (B, ...), ids (B,),
+                     weights (B,)) -> (new_params, new_state, diag) —
+                     the jit'd staleness-weighted server step
+      runtime_take   wave -> (latencies (k,), dropped (k,)) — the
+                     latency draws captured at sampling time under the
+                     trainer's lock (round-order RNG contract)
+    """
+
+    def __init__(self, *, pipeline, wave_update: Callable,
+                 fold: Callable, runtime_take: Callable,
+                 buffer_size: int, alpha: float = 0.5,
+                 concurrency: int = 1, prefetch: bool = True):
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        if concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got {concurrency}")
+        if alpha < 0:
+            raise ValueError(f"staleness alpha must be >= 0, got {alpha}")
+        self.pipeline = pipeline
+        self.wave_update = wave_update
+        self.fold = fold
+        self.runtime_take = runtime_take
+        self.buffer_size = int(buffer_size)
+        self.alpha = float(alpha)
+        self.concurrency = int(concurrency)
+        self.prefetch = prefetch
+        # ---- virtual-time state (all checkpointed — see api.save) ----
+        self.clock = 0.0               # virtual time of the last arrival
+        self.seq = 0                   # global dispatch counter (tiebreak)
+        self.wave_frontier = 0         # next wave to dispatch
+        self.version = 0               # server folds performed so far
+        self._heap: List[Tuple[float, int, BufferEntry]] = []
+
+    # ---- wave dispatch ----
+
+    def _live_waves(self) -> int:
+        return len({e.wave for (_, _, e) in self._heap})
+
+    def _dispatch_wave(self, params, server_state):
+        """Stage + train the next wave against the current snapshot and
+        push its surviving updates onto the arrival heap. Returns
+        (n_pushed, host_seconds, device_seconds)."""
+        w = self.wave_frontier
+        staged = (self.pipeline.get(w) if self.prefetch
+                  else self.pipeline.stage_blocking(w))
+        try:
+            deltas, losses = self.wave_update(
+                params, server_state, staged.batches, staged.masks)
+            # host sync on the losses: the program is done, the staged
+            # inputs are consumed, and the slot can be reused; the
+            # per-client delta slices below read the program's OUTPUT
+            losses_h = np.asarray(losses, np.float32)
+            lat, dropped = self.runtime_take(w)
+            pushed = 0
+            for j in range(len(staged.clients)):
+                if dropped[j]:
+                    continue           # never arrives (wasted compute)
+                entry = BufferEntry(
+                    client=int(staged.clients[j]), wave=w,
+                    version=self.version, seq=self.seq,
+                    finish=self.clock + float(lat[j]),
+                    loss=float(losses_h[j]),
+                    delta=jax.tree.map(lambda x, j=j: x[j], deltas))
+                heapq.heappush(self._heap,
+                               (entry.finish, entry.seq, entry))
+                self.seq += 1
+                pushed += 1
+        finally:
+            staged.release()
+        self.wave_frontier = w + 1
+        return pushed, staged.host_seconds, staged.device_seconds
+
+    # ---- server round ----
+
+    def run_server_round(self, t: int, params, server_state):
+        """Collect the next ``buffer_size`` arrivals (dispatching waves
+        as concurrency allows) and fold them into one server step.
+        Returns (new_params, new_server_state, metrics)."""
+        arrivals: List[BufferEntry] = []
+        host_s = dev_s = 0.0
+        empty_streak = 0
+        while len(arrivals) < self.buffer_size:
+            # top up in-flight waves: always at least one pending
+            # arrival, and up to `concurrency` waves in flight
+            while not self._heap or self._live_waves() < self.concurrency:
+                if self._heap and self._live_waves() >= self.concurrency:
+                    break
+                n, h, d = self._dispatch_wave(params, server_state)
+                host_s += h
+                dev_s += d
+                empty_streak = 0 if n else empty_streak + 1
+                if empty_streak >= 100:
+                    # dropout < 1 makes an infinite all-dropped run a
+                    # probability-zero event; a runtime model violating
+                    # that surfaces here instead of spinning forever
+                    raise RuntimeError(
+                        f"{empty_streak} consecutive waves dropped every "
+                        "client — runtime model starves the buffer")
+            finish, _, entry = heapq.heappop(self._heap)
+            self.clock = max(self.clock, finish)
+            arrivals.append(entry)
+        stale = np.asarray([self.version - e.version for e in arrivals],
+                           np.float64)
+        # (1+s)^(-alpha): exactly 1.0 at s=0, so the anchor cell's fold
+        # multiplies by literal 1.0f and stays bitwise-equivalent
+        weights = ((1.0 + stale) ** (-self.alpha)).astype(np.float32)
+        ids = np.asarray([e.client for e in arrivals], np.int32)
+        stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
+                               *[e.delta for e in arrivals])
+        params, server_state, diag = self.fold(
+            server_state, params, stacked, jax.numpy.asarray(ids),
+            jax.numpy.asarray(weights))
+        self.version += 1
+        metrics = {
+            "train_loss": float(np.mean([e.loss for e in arrivals])),
+            "staleness_mean": float(stale.mean()),
+            "staleness_max": float(stale.max()),
+            "diag": diag,
+            "host_seconds": host_s,
+            "device_seconds": dev_s,
+        }
+        return params, server_state, metrics
+
+    # ---- checkpointing (driven by FederatedTrainer.save/restore) ----
+
+    def inflight(self) -> List[BufferEntry]:
+        """In-flight entries in (finish, seq) heap order — dispatched
+        but not yet arrived/folded. The arrival buffer itself is always
+        empty between rounds (run_server_round folds exactly what it
+        collects), so this IS the full streaming state."""
+        return [e for (_, _, e) in sorted(self._heap,
+                                          key=lambda x: (x[0], x[1]))]
+
+    def load_inflight(self, entries: List[BufferEntry]) -> None:
+        self._heap = [(e.finish, e.seq, e) for e in entries]
+        heapq.heapify(self._heap)

@@ -79,6 +79,11 @@ class ServerAlgo:
     # from the algorithm's hyper dataclass; the round builder reads them
     client_hparams: Dict[str, float] = field(default_factory=dict)
     hyper: Any = None
+    # the rule folds buffered-async staleness weights into its OWN
+    # reduction scalars (step accepts staleness_weights=); False makes
+    # the async engine pre-scale the buffered deltas instead (FedBuff
+    # mean semantics) — see core/async_engine.py, DESIGN.md §11
+    staleness_aware: bool = False
 
 
 # masked client mean (padded dummy rows excluded): one implementation,
@@ -332,12 +337,15 @@ def _build_fedvarp(h):
 @register_algorithm("feddpc", FedDPCHyper)
 def _build_feddpc(h):
     def step(state, params, deltas, client_ids, eta_g, t,
-             client_mask=None, model_sharded=False, **_):
+             client_mask=None, model_sharded=False,
+             staleness_weights=None, **_):
         return feddpc_mod.server_step(state, params, deltas, eta_g, h.lam,
                                       use_kernel=h.use_kernel,
                                       client_mask=client_mask,
-                                      model_sharded=model_sharded)
-    return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step)
+                                      model_sharded=model_sharded,
+                                      staleness_weights=staleness_weights)
+    return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step,
+                      staleness_aware=True)
 
 
 def _feddpc_noscale_step(state, params, deltas, client_ids, eta_g, t,
@@ -414,10 +422,12 @@ def _build_feddpc_m(h):
         return s
 
     def step(state, params, deltas, client_ids, eta_g, t,
-             client_mask=None, model_sharded=False, **_):
+             client_mask=None, model_sharded=False,
+             staleness_weights=None, **_):
         _, new_state, diag = feddpc_mod.server_step(
             {"delta_prev": state["delta_prev"]}, params, deltas, 0.0, lam,
-            client_mask=client_mask, model_sharded=model_sharded)
+            client_mask=client_mask, model_sharded=model_sharded,
+            staleness_weights=staleness_weights)
         delta_t = new_state["delta_prev"]
         m = jax.tree.map(
             lambda mm, d: beta * mm.astype(jnp.float32)
@@ -425,7 +435,7 @@ def _build_feddpc_m(h):
         new_params = _apply(params, m, eta_g)
         return new_params, {"delta_prev": delta_t, "m": m}, diag
 
-    return ServerAlgo("feddpc_m", init, step)
+    return ServerAlgo("feddpc_m", init, step, staleness_aware=True)
 
 
 # ---------------- legacy flat-kwargs shim ----------------

@@ -30,7 +30,8 @@ def init_state(params: PyTree) -> Dict[str, PyTree]:
 
 def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
                 eta_g: float, lam: float = 1.0, use_kernel: bool = False,
-                client_mask=None, model_sharded: bool = False
+                client_mask=None, model_sharded: bool = False,
+                staleness_weights=None
                 ) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jnp.ndarray]]:
     """One FedDPC aggregation.
 
@@ -56,6 +57,15 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     ``use_kernel`` falls back to the reference jnp epilogue — which is
     elementwise on the local shards and exact.
 
+    staleness_weights (k',) f32 are the buffered-async discount factors
+    (core/async_engine.py, DESIGN.md §11): each buffered delta's weight
+    (1+s)^(-alpha) multiplies its adaptive SCALE, so the projection
+    geometry (coef, the diagnostics) is computed on the raw delta and
+    only the applied magnitude is discounted — the staleness-discounted
+    projection coefficient folds into the same reduction-pass scalars
+    the masked path uses, leaving the epilogue unchanged. At staleness
+    0 every weight is exactly 1.0 and the step is the synchronous one.
+
     Returns (new_params, new_state, diagnostics).
     """
     if model_sharded:
@@ -73,15 +83,25 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
         coefs = coefs * mf
         scales = scales * mf * (mf.shape[0] / nvalid)
         diag_mean = lambda x: jnp.sum(x * mf) / nvalid
+    wgt = (None if staleness_weights is None
+           else jnp.asarray(staleness_weights, jnp.float32))
     if use_kernel:
         # epilogue pass: residual+scale, client-mean (Eq. 4) AND the param
         # update fused into ONE grid over the stacked deltas
         # (kernels/feddpc_project.batched_epilogue) — one HBM pass instead
-        # of K per-client kernel calls + two more full passes.
+        # of K per-client kernel calls + two more full passes. The
+        # buffered-async fold routes to the scatter-accumulate variant,
+        # which applies the staleness discount inside the grid.
         from repro.kernels.feddpc_project import ops as k_ops
-        new_params, delta_t = k_ops.batched_server_epilogue(
-            deltas, delta_prev, params, coefs, scales, eta_g)
+        if wgt is None:
+            new_params, delta_t = k_ops.batched_server_epilogue(
+                deltas, delta_prev, params, coefs, scales, eta_g)
+        else:
+            new_params, delta_t = k_ops.buffered_server_fold(
+                deltas, delta_prev, params, coefs, scales, wgt, eta_g)
     else:
+        if wgt is not None:
+            scales = scales * wgt
         def bc(s, x):
             return s.reshape((-1,) + (1,) * (x.ndim - 1))
 

@@ -44,6 +44,7 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       mesh=None, client_axis: str = "clients",
                       model_axis: str = "model",
                       pad_clients: bool = False,
+                      real_clients: int = None,
                       shard_templates: Tuple[PyTree, PyTree] = None,
                       shardings=None):
     """Returns cohort_round(server_state, params, batches, masks,
@@ -69,9 +70,17 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     (sharding/rules.cohort_round_shardings — DESIGN.md §2). K should be a
     multiple of the axis size; with ``pad_clients=True`` the caller pads
     the cohort stack itself (dummy rows with all-False mask rows and
-    out-of-range client_ids) and the round derives a per-client validity
-    mask from ``masks`` so dummy clients stay out of every server mean
-    and out of FedVARP's table.
+    out-of-range client_ids) and the round masks dummy clients out of
+    every server mean and out of FedVARP's table.
+
+    ``real_clients`` is how the caller communicates its pad count: the
+    first ``real_clients`` rows are sampled clients, the rest padding.
+    Prefer it over bare ``pad_clients=True``, which falls back to
+    deriving the validity mask from ``masks.any(axis=1)`` — that
+    reclassifies a genuinely sampled client whose every minibatch is
+    invalid (a zero-data client) as padding, silently dropping its id
+    from FedVARP's table while its (zero) delta still dilutes nothing
+    but its loss row still enters ``losses``.
 
     A TWO-AXIS mesh (``model_axis`` present with size > 1, built by
     make_cohort_mesh(model=N)) additionally shards params / server state
@@ -101,8 +110,17 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     def cohort_round(server_state, params, batches, masks, client_ids):
         extra = algo.client_extra(server_state)
         deltas, losses = local(params, batches, masks, extra)
-        cm = (masks.any(axis=1)
-              if pad_clients and masks is not None else None)
+        if real_clients is not None:
+            # pad mask from the caller's pad count: rows >= real_clients
+            # are padding, everything below is a sampled client — even
+            # one whose every minibatch is masked (zero-data client)
+            cm = jnp.arange(client_ids.shape[0]) < real_clients
+        elif pad_clients and masks is not None:
+            # legacy fallback for callers that only know "padded":
+            # misclassifies zero-data clients as padding (see docstring)
+            cm = masks.any(axis=1)
+        else:
+            cm = None
         new_params, new_state, diag = algo.step(
             server_state, params, deltas, client_ids, eta_g, 0,
             client_mask=cm, model_sharded=model_sharded)

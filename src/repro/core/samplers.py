@@ -24,9 +24,33 @@ Contract:
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, Optional, Sequence
 
 import numpy as np
+
+
+def _digest_p(p) -> str:
+    """Canonical digest of a probability vector: sha256 over the
+    float64 little-endian bytes."""
+    arr = np.ascontiguousarray(np.asarray(p, np.float64))
+    if arr.dtype.byteorder == ">":        # canonicalize on BE hosts
+        arr = arr.astype("<f8")
+    return hashlib.sha256(arr.tobytes()).hexdigest()
+
+
+def normalize_sampler_config(cfg: Dict) -> Dict:
+    """Resume-compat shim for sampler config echoes: sidecars written
+    before WeightedSampler switched to digest+length carry the full
+    ``"p"`` vector — rewrite them to the digest form so old checkpoints
+    still compare equal against a live ``config_dict()``. Non-legacy
+    configs pass through unchanged."""
+    if "p" in cfg:
+        cfg = dict(cfg)
+        p = cfg.pop("p")
+        cfg["p_digest"] = _digest_p(p)
+        cfg["p_len"] = int(len(p))
+    return cfg
 
 
 class ClientSampler:
@@ -96,7 +120,14 @@ class WeightedSampler(ClientSampler):
                           replace=False, p=self.p)
 
     def config_dict(self):
-        return {**super().config_dict(), "p": self.p.tolist()}
+        # digest + length, NOT the raw vector: the echo lives in the
+        # JSON checkpoint sidecar and is string-compared on every
+        # resume — an O(num_clients) float list bloats both at scale.
+        # sha256 over the canonical float64 bytes is exact (the vector
+        # is already float64; JSON float round-trips are value-exact so
+        # legacy sidecars normalize to the same digest).
+        return {**super().config_dict(),
+                "p_digest": _digest_p(self.p), "p_len": int(len(self.p))}
 
 
 class CyclicSampler(ClientSampler):
@@ -155,7 +186,14 @@ class MarkovSampler(ClientSampler):
         if len(up_ids) >= k:
             return rng.choice(up_ids, size=k, replace=False)
         drafted = rng.choice(down_ids, size=k - len(up_ids), replace=False)
-        return np.concatenate([up_ids, drafted])
+        cohort = np.concatenate([up_ids, drafted])
+        # RNG contract: the shortfall branch consumes exactly TWO draws
+        # (choice + permutation) vs the normal branch's one. The shuffle
+        # matters: returning sorted up_ids first leaked availability
+        # through cohort position and gave the two branches different
+        # padded-cohort layouts (position-sensitive downstream: pad
+        # masks, per-slot diagnostics).
+        return cohort[rng.permutation(k)]
 
     def state_dict(self):
         return {} if self._avail is None else {

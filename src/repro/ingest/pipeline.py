@@ -82,20 +82,24 @@ class CohortIngestPipeline:
 
     def __init__(self, source: DataSource,
                  sample_fn: Callable[[int], np.ndarray], *,
-                 num_clients: int, rounds: int, depth: int = 2,
+                 num_clients: int, rounds: Optional[int], depth: int = 2,
                  device_stage: bool = True,
                  placer: Optional[CohortPlacer] = None,
-                 pad_to: Optional[int] = None):
+                 pad_to: Optional[int] = None,
+                 stall_timeout: Optional[float] = None):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.source = source
         self.sample_fn = sample_fn
         self.num_clients = num_clients
+        # rounds=None -> open horizon (buffered-async waves: the number
+        # of dispatches is dynamic); the ring backpressures on `depth`
         self.rounds = rounds
         self.depth = depth
         self.device_stage = device_stage
         self.placer = placer if placer is not None else CohortPlacer()
         self.pad_to = pad_to
+        self.stall_timeout = stall_timeout
         self._max_batches: Optional[int] = None
         self._ring: Optional[CohortPrefetcher] = None
         self._blocking_slot: dict = {}   # stage_blocking's private buffer
@@ -157,7 +161,8 @@ class CohortIngestPipeline:
         the returned slot until ``StagedCohort.release()``."""
         if self._ring is None:
             self._ring = CohortPrefetcher(self._produce, t, self.rounds,
-                                          slots=self.depth)
+                                          slots=self.depth,
+                                          stall_timeout=self.stall_timeout)
         tic = time.perf_counter()
         (clients, batches, masks, ids), slot = self._ring.get(t)
         host_s = time.perf_counter() - tic

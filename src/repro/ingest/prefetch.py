@@ -16,11 +16,19 @@ never frees a slot).
     item, slot = ring.get(t)   # blocks only until round t is staged
     ... dispatch + sync ...
     ring.release(slot)
+
+``end=None`` runs the producer unbounded — the buffered-async engine
+(core/async_engine.py) dispatches a dynamic number of waves, so the
+horizon is open until ``stop()``; backpressure still comes from the
+``slots`` free-list, so "unbounded" never stages more than ``slots``
+rounds ahead.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
+from typing import Optional
 
 
 class CohortPrefetcher:
@@ -28,10 +36,19 @@ class CohortPrefetcher:
     producer thread; ``slots=2`` double-buffers (the historical
     default), ``slots=1`` single-buffers (the producer still runs off
     the consumer thread, but can only work ahead while the consumer
-    holds nothing — useful as the degenerate point of depth sweeps)."""
+    holds nothing — useful as the degenerate point of depth sweeps).
 
-    def __init__(self, produce_fn, start: int, end: int, slots: int = 2):
+    ``stall_timeout`` (seconds, None = wait forever) bounds how long a
+    ``get`` waits for a LIVE producer: a producer thread hung inside
+    ``produce_fn`` (slow disk read, deadlocked source) previously spun
+    the consumer forever — the 1s poll only escaped on a *dead* thread.
+    With a deadline the consumer raises, naming the stuck round, so the
+    caller can surface the hang instead of inheriting it."""
+
+    def __init__(self, produce_fn, start: int, end: Optional[int],
+                 slots: int = 2, stall_timeout: Optional[float] = None):
         self._end = end
+        self._stall_timeout = stall_timeout
         self._ready = queue.Queue()
         self._free = queue.Queue()
         self.slots = max(1, slots)
@@ -45,8 +62,10 @@ class CohortPrefetcher:
         self._thread.start()
 
     def _loop(self, produce_fn, start, end):
+        rounds = (range(start, end) if end is not None
+                  else itertools.count(start))
         try:
-            for t in range(start, end):
+            for t in rounds:
                 slot = self._free.get()
                 if slot is None:        # stop() sentinel
                     return
@@ -57,14 +76,18 @@ class CohortPrefetcher:
             self._ready.put((None, None, None))
 
     def get(self, t: int):
-        if t >= self._end:
+        if self._end is not None and t >= self._end:
             raise RuntimeError(
                 f"round {t} is past the configured horizon ({self._end} "
                 "rounds were prefetched); raise ExecConfig.rounds or set "
                 "ExecConfig.prefetch=False to run extra rounds")
+        waited = 0.0
+        poll = 1.0
+        if self._stall_timeout is not None:
+            poll = min(poll, max(self._stall_timeout / 4, 0.01))
         while True:
             try:
-                got, item, slot = self._ready.get(timeout=1.0)
+                got, item, slot = self._ready.get(timeout=poll)
                 break
             except queue.Empty:
                 # a dead producer with an empty queue would otherwise
@@ -81,6 +104,17 @@ class CohortPrefetcher:
                             f"or stopped) — round {t} was never staged; "
                             "set ExecConfig.prefetch=False to re-run rounds"
                         ) from self._exc
+                waited += poll
+                if (self._stall_timeout is not None
+                        and waited >= self._stall_timeout):
+                    # producer ALIVE but stuck inside produce_fn: raise
+                    # with the stuck round instead of spinning forever
+                    raise RuntimeError(
+                        f"staging producer stalled: round {t} not staged "
+                        f"after {waited:.1f}s (stall deadline "
+                        f"{self._stall_timeout}s) — the producer thread is "
+                        "alive but blocked inside produce_fn (slow or "
+                        "deadlocked source read?)")
         if got is None:                 # producer-failure sentinel; a round
             # staged BEFORE the failure is still valid and returned above.
             # Re-poison so every later get() fails too instead of hanging.
@@ -96,7 +130,20 @@ class CohortPrefetcher:
     def release(self, slot: dict):
         self._free.put(slot)
 
-    def stop(self):
-        if not self._stopped:
-            self._stopped = True
-            self._free.put(None)        # unblock the producer if waiting
+    def stop(self, join_timeout: float = 5.0):
+        """Stop the producer and reclaim its staging state: put the
+        sentinel, JOIN the thread (bounded — a producer hung inside
+        ``produce_fn`` is a daemon and cannot block interpreter exit),
+        then drain every staged-but-unconsumed slot out of ``_ready`` so
+        their buffers are dropped with the ring instead of pinning
+        whatever host/device memory the producer staged ahead."""
+        if self._stopped:
+            return
+        self._stopped = True
+        self._free.put(None)            # unblock the producer if waiting
+        self._thread.join(timeout=join_timeout)
+        while True:                     # drain staged slots (and any
+            try:                        # poison sentinel) — nothing will
+                self._ready.get_nowait()  # consume them after stop()
+            except queue.Empty:
+                break

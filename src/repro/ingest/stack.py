@@ -12,10 +12,23 @@ import jax
 import numpy as np
 
 
-def stack_batches(batch_list, max_batches: int):
-    """Pad a list of same-shape batch pytrees to (max_batches, ...) + mask."""
+def stack_batches(batch_list, max_batches: int, template=None):
+    """Pad a list of same-shape batch pytrees to (max_batches, ...) + mask.
+
+    ``template`` (one batch pytree, shapes/dtypes only) makes an EMPTY
+    list stackable: a zero-data client contributes an all-zero stack
+    with an all-False mask (the local scan no-ops, delta == 0) while
+    still counting as a sampled client for the server rules."""
     n = len(batch_list)
-    assert 1 <= n <= max_batches, (n, max_batches)
+    assert n <= max_batches, (n, max_batches)
+    if n == 0:
+        if template is None:
+            raise ValueError("stack_batches of an empty batch list needs a "
+                             "template batch for the leaf shapes")
+        stacked = jax.tree.map(
+            lambda x: np.zeros((max_batches,) + np.shape(x),
+                               np.asarray(x).dtype), template)
+        return stacked, np.zeros(max_batches, bool)
     stacked = jax.tree.map(lambda *xs: np.stack(xs), *batch_list)
     if n < max_batches:
         pad = max_batches - n
@@ -37,7 +50,11 @@ def stack_cohort(per_client_batches, max_batches: int, pad_to: int = None):
     client runs a no-op local scan (delta == 0) and the server rules
     exclude it from every mean via the derived client validity mask.
     """
-    pairs = [stack_batches(b, max_batches) for b in per_client_batches]
+    template = next((b[0] for b in per_client_batches if b), None)
+    if template is None:
+        raise ValueError("every client in the cohort has zero batches")
+    pairs = [stack_batches(b, max_batches, template=template)
+             for b in per_client_batches]
     batches = jax.tree.map(lambda *xs: np.stack(xs), *[p[0] for p in pairs])
     masks = np.stack([p[1] for p in pairs])
     k = len(per_client_batches)
@@ -68,7 +85,10 @@ def stack_cohort_into(per_client_batches, max_batches: int, slot: dict,
     """
     k, m = len(per_client_batches), max_batches
     kp = k if pad_to is None else max(pad_to, k)
-    leaves0, treedef = jax.tree_util.tree_flatten(per_client_batches[0][0])
+    first = next((b for b in per_client_batches if b), None)
+    if first is None:
+        raise ValueError("every client in the cohort has zero batches")
+    leaves0, treedef = jax.tree_util.tree_flatten(first[0])
     shapes = tuple((np.shape(x), np.asarray(x).dtype) for x in leaves0)
     key = (kp, m, treedef, shapes)
     if slot.get("key") != key:
@@ -78,7 +98,12 @@ def stack_cohort_into(per_client_batches, max_batches: int, slot: dict,
     bufs, mask = slot["bufs"], slot["mask"]
     for j, blist in enumerate(per_client_batches):
         n = len(blist)
-        assert 1 <= n <= m, (n, m)
+        assert n <= m, (n, m)
+        if n == 0:                      # zero-data client: all-zero rows,
+            for buf in bufs:            # fully masked — still a SAMPLED
+                buf[j] = 0              # client (see core/round.py)
+            mask[j] = False
+            continue
         for i, b in enumerate(blist):
             for buf, x in zip(bufs, jax.tree_util.tree_flatten(b)[0]):
                 buf[j, i] = x

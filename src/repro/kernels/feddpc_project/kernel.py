@@ -123,6 +123,87 @@ def batched_epilogue(d3: jnp.ndarray, p2: jnp.ndarray, w2: jnp.ndarray,
     )(coefs, scales, eta, d3, p2, w2)
 
 
+def _buffer_fold_kernel(inv_b, coef_ref, scale_ref, wgt_ref, eta_ref,
+                        d_ref, p_ref, w_ref, w_out_ref, dt_out_ref):
+    """Buffered-async server fold on one (rows, 128) tile (DESIGN.md §11):
+
+        dt  = (1/B) sum_j wgt_j * scale_j * (d_j - coef_j * prev)
+        w'  = w - eta_g * dt
+
+    The grid's innermost axis j walks the B buffered deltas ONE AT A
+    TIME and scatter-accumulates into the resident dt output block: the
+    output BlockSpec ignores j, so Pallas keeps the (rows, 128) dt tile
+    in VMEM across the whole j loop while each d_j block streams
+    through. VMEM footprint is O(rows·128) independent of B — a buffer
+    of 64 stale updates folds with the same full-size row block the
+    K-resident batched epilogue would have to shrink 64x for.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dt_out_ref[...] = jnp.zeros_like(dt_out_ref)
+
+    d = d_ref[0].astype(jnp.float32)                      # (r, 128)
+    p = p_ref[...].astype(jnp.float32)                    # (r, 128)
+    # staleness-discounted projection coefficient: the discount wgt_j
+    # multiplies the adaptive scale, the geometry (coef_j) stays raw
+    dt_out_ref[...] += ((wgt_ref[0] * scale_ref[0])
+                        * (d - coef_ref[0] * p)) * inv_b
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        w = w_ref[...].astype(jnp.float32)
+        w_out_ref[...] = (w - eta_ref[0] * dt_out_ref[...]
+                          ).astype(w_out_ref.dtype)
+
+
+def buffer_fold(d3: jnp.ndarray, p2: jnp.ndarray, w2: jnp.ndarray,
+                coefs, scales, wgts, eta_g, *, rows: int = None,
+                interpret: bool = True):
+    """Staleness-weighted buffered fold over B stacked deltas.
+
+    d3: (B, M, 128) buffered deltas; p2/w2: (M, 128) delta_prev/params;
+    coefs/scales/wgts: (B,) reduction-pass scalars + staleness discounts.
+    Returns (new_w2, delta_t2) like ``batched_epilogue``, but streams
+    the deltas through a (blocks, B) grid with B innermost instead of
+    holding all B resident — so ``rows`` stays at DEFAULT_ROWS no
+    matter how large the arrival buffer grows. At wgts == 1 the math is
+    ``batched_epilogue`` with mean replaced by an ordered partial-sum
+    accumulation (same values up to f32 summation order).
+    """
+    b, m, lane = d3.shape
+    assert lane == LANE, d3.shape
+    rows = min(rows or DEFAULT_ROWS, m)
+    while m % rows:                 # largest divisor <= target (trace-time)
+        rows -= 1
+    grid = (pl.cdiv(m, rows), b)    # j (deltas) innermost: dt block resident
+    coefs = jnp.asarray(coefs, jnp.float32).reshape(b)
+    scales = jnp.asarray(scales, jnp.float32).reshape(b)
+    wgts = jnp.asarray(wgts, jnp.float32).reshape(b)
+    eta = jnp.asarray(eta_g, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_buffer_fold_kernel, 1.0 / b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # coef_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # scale_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # staleness wgt_j
+            pl.BlockSpec((1,), lambda i, j: (0,)),    # eta_g (broadcast)
+            pl.BlockSpec((1, rows, LANE), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+        ],
+        # output index_maps ignore j -> blocks stay resident across the
+        # inner delta loop (the scatter-accumulate idiom)
+        out_specs=[pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+                   pl.BlockSpec((rows, LANE), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, lane), w2.dtype),
+                   jax.ShapeDtypeStruct((m, lane), jnp.float32)],
+        interpret=interpret,
+    )(coefs, scales, wgts, eta, d3, p2, w2)
+
+
 def _epilogue_kernel(coef_ref, scale_ref, d_ref, p_ref, out_ref):
     coef = coef_ref[0]
     scale = scale_ref[0]

@@ -108,6 +108,39 @@ def batched_server_epilogue(deltas, delta_prev, params, coefs, scales,
             jax.tree_util.tree_unflatten(treedef, new_dt))
 
 
+def buffered_server_fold(deltas, delta_prev, params, coefs, scales,
+                         weights, eta_g, interpret: bool = None):
+    """Staleness-weighted buffered-async server fold (kernel.buffer_fold
+    per leaf, DESIGN.md §11): deltas is the ARRIVAL BUFFER stacked
+    (B, ...), coefs/scales (B,) from the reduction pass, weights (B,)
+    the (1+s)^(-alpha) staleness discounts. Returns (new_params,
+    delta_t) like ``batched_server_epilogue``, but the scatter-
+    accumulate grid streams the buffered deltas one at a time, so the
+    row block stays at DEFAULT_ROWS regardless of the buffer size
+    (batched_epilogue's K-resident block would shrink as B grows).
+    interpret=None auto-selects: real kernel on TPU, interpret mode
+    elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat_d, treedef = jax.tree_util.tree_flatten(deltas)
+    flat_p = jax.tree.leaves(delta_prev)
+    flat_w = jax.tree.leaves(params)
+    new_w, new_dt = [], []
+    for d, p, w in zip(flat_d, flat_p, flat_w):
+        d3, n = _to_2d_batched(d, K.DEFAULT_ROWS)
+        rows = min(K.DEFAULT_ROWS, d3.shape[1])
+        p2 = jnp.pad(p.reshape(-1), (0, d3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w2 = jnp.pad(w.reshape(-1), (0, d3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w_out2, dt2 = K.buffer_fold(d3, p2, w2, coefs, scales, weights,
+                                    eta_g, rows=rows, interpret=interpret)
+        new_w.append(_from_2d(w_out2, n, w.shape, w.dtype))
+        new_dt.append(_from_2d(dt2, n, p.shape, jnp.float32))
+    return (jax.tree_util.tree_unflatten(treedef, new_w),
+            jax.tree_util.tree_unflatten(treedef, new_dt))
+
+
 def residual_scale_tree(delta, delta_prev, coef, scale, interpret: bool = True):
     """Per-leaf fused epilogue with precomputed scalars (pytree entry used
     by core/projection.project_and_scale(use_kernel=True))."""

@@ -30,6 +30,14 @@ def batched_epilogue_ref(d3, p2, w2, coefs, scales, eta_g):
     return new_w, dt                    # delta_t stays f32 (server state)
 
 
+def buffer_fold_ref(d3, p2, w2, coefs, scales, wgts, eta_g):
+    """Oracle for kernel.buffer_fold: the staleness discount multiplies
+    the adaptive scale (geometry stays raw), then the math IS the
+    batched epilogue with effective scales wgts * scales."""
+    s = jnp.asarray(scales, jnp.float32) * jnp.asarray(wgts, jnp.float32)
+    return batched_epilogue_ref(d3, p2, w2, coefs, s, eta_g)
+
+
 def project_and_scale_flat_ref(d: jnp.ndarray, p: jnp.ndarray, lam: float,
                                eps: float = 1e-12):
     """Whole FedDPC per-client modification on a FLAT vector (oracle for

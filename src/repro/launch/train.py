@@ -187,6 +187,30 @@ def main(argv=None):
                     help="keep the device-place stage on the consumer "
                          "thread (H2D at dispatch) instead of the "
                          "staging thread — the ingest bench's baseline")
+    ap.add_argument("--async-buffer", action="store_true",
+                    help="buffered-async rounds (DESIGN.md §11): waves "
+                         "train against possibly-stale snapshots and the "
+                         "server steps every --buffer-size arrivals with "
+                         "staleness-discounted aggregation")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="arrivals per async server step (default: the "
+                         "cohort size — the sync-equivalent anchor)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="staleness discount exponent: w(s)=(1+s)^-alpha")
+    ap.add_argument("--async-concurrency", type=int, default=1,
+                    help="max waves in flight at once (>1 lets fresh "
+                         "waves overlap stale stragglers)")
+    ap.add_argument("--runtime", default="deterministic",
+                    choices=["deterministic", "exponential", "heavytail",
+                             "markov"],
+                    help="client runtime model: arrival latencies + "
+                         "dropout of the async waves (core/runtime.py)")
+    ap.add_argument("--runtime-dropout", type=float, default=0.0,
+                    help="per-wave client dropout probability of the "
+                         "exponential/heavytail/markov runtime models")
+    ap.add_argument("--ingest-stall-s", type=float, default=None,
+                    help="staging-ring stall deadline in seconds (a hung "
+                         "producer raises instead of spinning forever)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -212,19 +236,30 @@ def main(argv=None):
         shard_clients=args.shard_clients, shard_model=args.model_shards,
         prefetch_depth=args.prefetch_depth,
         device_stage=not args.host_staged,
+        async_buffer=args.async_buffer, buffer_size=args.buffer_size,
+        staleness_alpha=args.staleness_alpha,
+        async_concurrency=args.async_concurrency,
+        ingest_stall_s=args.ingest_stall_s,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
+    runtime = None
+    if args.async_buffer:
+        from repro.core.runtime import make_runtime
+        rt_kw = ({} if args.runtime == "deterministic"
+                 else {"dropout": args.runtime_dropout})
+        runtime = make_runtime(args.runtime, k, **rt_kw)
 
     if args.resume:
         if not args.ckpt_dir:
             raise SystemExit("--resume needs --ckpt-dir")
         trainer = FederatedTrainer.resume(
             args.ckpt_dir, loss_fn, params, k, source, cfg, eval_fn,
-            algo=algo, sampler=sampler)
+            algo=algo, sampler=sampler, runtime=runtime)
         print(f"resumed from {args.ckpt_dir} at round {trainer.start_round}")
     else:
         trainer = FederatedTrainer(loss_fn, params, k, source, cfg, eval_fn,
-                                   algo=algo, sampler=sampler)
+                                   algo=algo, sampler=sampler,
+                                   runtime=runtime)
     with trainer:
         if args.ckpt_dir and args.ckpt_every > 0:
             for t in range(trainer.start_round, args.rounds):

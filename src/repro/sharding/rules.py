@@ -362,3 +362,56 @@ def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
     return (s_sh, p_sh, cli, cli, cli), (p_sh, s_sh, cli, rep)
 
 
+def async_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
+                          model_axis: str = "model",
+                          params: Optional[PyTree] = None,
+                          server_state: Optional[PyTree] = None):
+    """Sharding trees for the TWO jits of the buffered-async engine
+    (core/async_engine.py, DESIGN.md §11), which splits the fused round
+    at the arrival buffer:
+
+      wave_update (params, server_state, batches, masks)
+                  -> (deltas (Kp, ...), losses (Kp,))
+      fold        (server_state, params, deltas (B, ...), ids, weights)
+                  -> (new_params, new_state, diag)
+
+    The wave side mirrors the sync round: cohort-stacked inputs and the
+    per-client delta outputs shard over ``client_axis``. The FOLD side
+    differs: its leading axis is the ARRIVAL BUFFER (size B, arrival-
+    ordered, unrelated to the device count), so the buffered deltas
+    replicate their leading dim — only the trailing model dims stay
+    partitioned on a two-axis mesh. ids/weights are tiny (B,) vectors
+    and replicate.
+
+    Returns (wave_in, wave_out, fold_in, fold_out), each ready for
+    jax.jit's in_shardings/out_shardings.
+    """
+    if client_axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {client_axis!r} axis")
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    two_axis = axis_sizes.get(model_axis, 1) > 1
+    rep = NamedSharding(mesh, P())
+    cli = NamedSharding(mesh, P(client_axis))
+    if not two_axis:
+        return ((rep, rep, cli, cli), (cli, cli),
+                (rep, rep, rep, rep, rep), (rep, rep, rep))
+    if params is None or server_state is None:
+        raise ValueError(
+            f"mesh carries a {model_axis!r} axis of size "
+            f"{axis_sizes[model_axis]}: the two-axis async round needs "
+            "params/server_state templates for per-leaf specs")
+    is_spec = lambda x: isinstance(x, P)
+    pspecs = cohort_param_specs(params, mesh, client_axis, model_axis)
+    p_sh = to_named(pspecs, mesh)
+    s_sh = to_named(cohort_state_specs(server_state, params, mesh,
+                                       client_axis, model_axis), mesh)
+    # wave deltas: client axis leading, param layout trailing
+    d_sh = to_named(jax.tree.map(lambda s: P(client_axis, *s), pspecs,
+                                 is_leaf=is_spec), mesh)
+    # buffered deltas: leading B (arrival buffer) replicated
+    buf_sh = to_named(jax.tree.map(lambda s: P(None, *s), pspecs,
+                                   is_leaf=is_spec), mesh)
+    return ((p_sh, s_sh, cli, cli), (d_sh, cli),
+            (s_sh, p_sh, buf_sh, rep, rep), (p_sh, s_sh, rep))
+
+

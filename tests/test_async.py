@@ -1,0 +1,334 @@
+"""Buffered-async round engine (DESIGN.md §11): runtime-model RNG
+contracts, virtual-time arrival semantics, sync-anchor equivalence,
+determinism across staging depths, dropout, and the mid-buffer bitwise
+checkpoint.
+
+The cross-regime allclose cells (async_buffer vs serial on the forced
+8-device mesh) live in tests/test_regime_matrix.py; these are the fast
+single-process contracts.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.runtime import (DeterministicRuntime, ExponentialRuntime,
+                                HeavyTailRuntime, MarkovRuntime,
+                                make_runtime, runtime_matrix)
+
+NUM_CLIENTS = 8
+K = 3
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def ragged_batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 3) + 1)]
+
+
+def make_trainer(runtime=None, rounds=5, algo="feddpc", **exec_kw):
+    kw = dict(clients_per_round=K, seed=7, eval_every=10 ** 9,
+              async_buffer=True)
+    kw.update(exec_kw)
+    return FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                            ragged_batch_fn, ExecConfig(rounds=rounds, **kw),
+                            algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
+                            runtime=runtime)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------- runtime-model RNG contracts ----------------
+
+def test_deterministic_runtime_consumes_zero_draws():
+    """The anchor-cell property: DeterministicRuntime must not move the
+    trainer RNG at all (like CyclicSampler), so enabling async_buffer
+    with the default runtime cannot perturb the sampled schedule."""
+    rng = np.random.RandomState(3)
+    before = rng.get_state()
+    lat, dropped = DeterministicRuntime(2.5).draw(rng, 0, np.arange(4))
+    after = rng.get_state()
+    assert (lat == 2.5).all() and not dropped.any()
+    assert before[0] == after[0] and (before[1] == after[1]).all()
+    assert before[2:] == after[2:]
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (ExponentialRuntime, dict(mean=0.7)),
+    (HeavyTailRuntime, dict(shape=1.3, scale=0.4)),
+])
+def test_iid_runtimes_consume_two_config_independent_draws(cls, kw):
+    """Exponential/heavytail consume exactly TWO draws per wave — one
+    latency vector, one dropout vector — and the count must not depend
+    on the dropout config (dropout=0 still burns the dropout draw), or
+    a config change would shift every later round's schedule."""
+    states = []
+    for dropout in (0.0, 0.5):
+        rng = np.random.RandomState(11)
+        for wave in range(4):
+            lat, dropped = cls(dropout=dropout, **kw).draw(
+                rng, wave, np.arange(5))
+            assert lat.shape == (5,) and (lat > 0).all()
+            assert dropped.shape == (5,) and dropped.dtype == bool
+        states.append(rng.get_state())
+    assert (states[0][1] == states[1][1]).all()     # same rng trajectory
+    # pin the exact call sequence (the resume contract): latency draw
+    # then dropout draw, shaped by the cohort
+    rng_a, rng_b = np.random.RandomState(5), np.random.RandomState(5)
+    cls(dropout=0.2, **kw).draw(rng_a, 0, np.arange(7))
+    if cls is ExponentialRuntime:
+        rng_b.exponential(kw["mean"], size=7)
+    else:
+        rng_b.pareto(kw["shape"], size=7)
+    rng_b.rand(7)
+    assert (rng_a.get_state()[1] == rng_b.get_state()[1]).all()
+
+
+def test_markov_runtime_three_draws_and_client_independent_chain():
+    """MarkovRuntime consumes exactly THREE draws per wave (chain
+    evolution over ALL clients, latency, dropout) and the chain
+    trajectory is independent of WHICH clients were sampled — otherwise
+    the sampler's cohort would leak into every later wave's latencies."""
+    rng_a, rng_b = np.random.RandomState(2), np.random.RandomState(2)
+    ra = MarkovRuntime(10, fast=0.5, slow=3.0, p_slow=0.4, p_fast=0.5)
+    rb = MarkovRuntime(10, fast=0.5, slow=3.0, p_slow=0.4, p_fast=0.5)
+    for wave in range(5):
+        ra.draw(rng_a, wave, np.arange(3))
+        rb.draw(rng_b, wave, np.array([7, 2, 9]))
+    assert (ra._slow_state == rb._slow_state).all()
+    assert (rng_a.get_state()[1] == rng_b.get_state()[1]).all()
+    # exact draw sequence: rand(num_clients), exponential(k), rand(k)
+    rng_c = np.random.RandomState(2)
+    mc = MarkovRuntime(10, fast=0.5, slow=3.0, p_slow=0.4, p_fast=0.5)
+    rng_d = np.random.RandomState(2)
+    mc.draw(rng_c, 0, np.arange(4))
+    rng_d.rand(10)
+    rng_d.exponential(1.0, size=4)
+    rng_d.rand(4)
+    assert (rng_c.get_state()[1] == rng_d.get_state()[1]).all()
+
+
+def test_markov_runtime_state_json_roundtrip():
+    """The chain state survives the checkpoint JSON sidecar channel and
+    a restored model continues the exact trajectory."""
+    rng = np.random.RandomState(0)
+    m = MarkovRuntime(6, p_slow=0.5, p_fast=0.5)
+    for wave in range(3):
+        m.draw(rng, wave, np.arange(2))
+    snap_state = json.loads(json.dumps(m.state_dict()))
+    snap_rng = rng.get_state()
+    lat_a, drop_a = m.draw(rng, 3, np.arange(4))
+    m2 = MarkovRuntime(6, p_slow=0.5, p_fast=0.5)
+    m2.load_state_dict(snap_state)
+    rng2 = np.random.RandomState(0)
+    rng2.set_state(snap_rng)
+    lat_b, drop_b = m2.draw(rng2, 3, np.arange(4))
+    np.testing.assert_array_equal(lat_a, lat_b)
+    np.testing.assert_array_equal(drop_a, drop_b)
+
+
+def test_runtime_registry_and_config_echo():
+    models = runtime_matrix(12)
+    assert set(models) == {"deterministic", "exponential", "heavytail",
+                           "markov"}
+    for name, m in models.items():
+        built = make_runtime(name, 12)
+        assert type(built) is type(m)
+        cfg = m.config_dict()
+        assert cfg["class"] == type(m).__name__
+        assert json.loads(json.dumps(cfg)) == cfg
+    with pytest.raises(ValueError, match="unknown runtime"):
+        make_runtime("nope", 4)
+    with pytest.raises(ValueError):
+        ExponentialRuntime(mean=-1.0)
+    with pytest.raises(ValueError):
+        HeavyTailRuntime(dropout=1.0)
+    with pytest.raises(ValueError):
+        MarkovRuntime(4, fast=2.0, slow=1.0)
+
+
+# ---------------- engine semantics ----------------
+
+def test_anchor_cell_matches_sync_round_in_process():
+    """DeterministicRuntime + B=K + concurrency 1: the buffered-async
+    run consumes the same schedule and reports staleness identically 0
+    — arrivals keep wave order so every buffer holds exactly the
+    current wave. (The allclose-vs-serial matrix cell is the subprocess
+    test; here we pin schedule + zero staleness + loss closeness.)"""
+    with make_trainer(async_buffer=False) as sync:
+        sync.run()
+    with make_trainer() as tr:           # registry defaults = anchor cell
+        tr.run()
+    for a, b in zip(sync.schedule, tr.schedule):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    for r in tr.history:
+        assert r.staleness_mean == 0.0 and r.staleness_max == 0.0
+    for a, b in zip(sync.history, tr.history):
+        assert b.train_loss == pytest.approx(a.train_loss, rel=1e-5)
+    for x, y in zip(jax.tree.leaves(sync.params), jax.tree.leaves(tr.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_async_is_bitwise_deterministic_and_prefetch_independent():
+    """Same seed + same runtime config => bitwise identical run, with
+    the ingest producer staging ahead (prefetch=True) or blocking —
+    the round-order RNG contract extended to runtime draws."""
+    def go(prefetch):
+        rt = MarkovRuntime(NUM_CLIENTS, fast=0.5, slow=3.0,
+                           p_slow=0.4, p_fast=0.5, dropout=0.1)
+        with make_trainer(runtime=rt, prefetch=prefetch, buffer_size=2,
+                          async_concurrency=3) as tr:
+            tr.run()
+        return tr
+    a, b, c = go(True), go(True), go(False)
+    for other in (b, c):
+        assert_trees_equal(a.params, other.params)
+        assert_trees_equal(a.server_state, other.server_state)
+        assert [r.train_loss for r in a.history] == \
+            [r.train_loss for r in other.history]
+        assert [(r.staleness_mean, r.staleness_max) for r in a.history] == \
+            [(r.staleness_mean, r.staleness_max) for r in other.history]
+        for s, t in zip(a.schedule, other.schedule):
+            assert (np.asarray(s) == np.asarray(t)).all()
+
+
+def test_staleness_appears_under_concurrency():
+    """With B < K*concurrency and spread-out latencies, some buffered
+    updates must be stale (version gap > 0) and the records say so."""
+    rt = ExponentialRuntime(mean=1.0)
+    with make_trainer(runtime=rt, buffer_size=2, async_concurrency=3,
+                      rounds=6) as tr:
+        tr.run()
+    assert any(r.staleness_max > 0 for r in tr.history)
+    for r in tr.history:
+        assert r.staleness_mean <= r.staleness_max
+        assert np.isfinite(r.train_loss)
+
+
+def test_dropout_path_still_fills_buffers():
+    """Dropped clients never reach the buffer; the engine keeps
+    dispatching waves until every round's buffer fills anyway."""
+    rt = ExponentialRuntime(mean=1.0, dropout=0.4)
+    with make_trainer(runtime=rt, buffer_size=3, async_concurrency=2,
+                      rounds=4) as tr:
+        hist = tr.run()
+    assert len(hist) == 4
+    assert all(np.isfinite(r.train_loss) for r in hist)
+    # dropout consumed waves: more cohorts were sampled than rounds run
+    assert len(tr.schedule) >= len(hist)
+
+
+def test_prescaling_algorithms_fold_staleness_too():
+    """A non-staleness-aware rule (fedavg) takes the discount by delta
+    pre-scaling — the run completes and differs from the undiscounted
+    one once staleness is non-zero."""
+    def go(alpha):
+        rt = ExponentialRuntime(mean=1.0)
+        with make_trainer(runtime=rt, algo="fedavg", buffer_size=2,
+                          async_concurrency=3, staleness_alpha=alpha) as tr:
+            tr.run()
+        return tr
+    a, b = go(0.5), go(2.0)
+    assert any(r.staleness_max > 0 for r in a.history)
+    la = jax.tree.leaves(a.params)
+    lb = jax.tree.leaves(b.params)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="async_buffer"):
+        make_trainer(runtime=DeterministicRuntime(), async_buffer=False)
+    with pytest.raises(ValueError, match="vectorize"):
+        make_trainer(vectorize=False)
+
+
+# ---------------- mid-buffer checkpointing ----------------
+
+def _markov_rt():
+    return MarkovRuntime(NUM_CLIENTS, fast=0.5, slow=3.0,
+                         p_slow=0.4, p_fast=0.5, dropout=0.1)
+
+
+def test_mid_buffer_save_resume_is_bitwise(tmp_path):
+    """The acceptance criterion: cut the run at a server-round boundary
+    with IN-FLIGHT waves on the virtual-time heap (concurrency 3 >
+    buffer 2 guarantees a non-empty heap), save, resume in a fresh
+    trainer — params, server state, losses, staleness series, and the
+    schedule all reproduce the uninterrupted run bitwise."""
+    kw = dict(buffer_size=2, async_concurrency=3, rounds=6)
+    with make_trainer(runtime=_markov_rt(), **kw) as full:
+        full.run()
+    with make_trainer(runtime=_markov_rt(), **kw) as part:
+        for t in range(3):
+            part.run_round(t)
+        assert len(part._engine.inflight()) > 0      # mid-buffer cut
+        part.save(str(tmp_path))
+    res = FederatedTrainer.resume(
+        str(tmp_path), loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+        ExecConfig(clients_per_round=K, seed=7, eval_every=10 ** 9,
+                   async_buffer=True, **kw),
+        algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1),
+        runtime=_markov_rt())
+    with res:
+        assert res.start_round == 3
+        res.run()
+    assert_trees_equal(full.params, res.params)
+    assert_trees_equal(full.server_state, res.server_state)
+    assert [r.train_loss for r in full.history] == \
+        [r.train_loss for r in res.history]
+    assert [(r.staleness_mean, r.staleness_max) for r in full.history] == \
+        [(r.staleness_mean, r.staleness_max) for r in res.history]
+    for a, b in zip(full.schedule, res.schedule):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_resume_rejects_mismatched_async_config(tmp_path):
+    """The checkpoint echoes buffer/alpha/concurrency and the runtime
+    config; resuming under a different async parameterization must fail
+    loudly instead of silently diverging."""
+    kw = dict(buffer_size=2, async_concurrency=3, rounds=4)
+    with make_trainer(runtime=_markov_rt(), **kw) as tr:
+        tr.run_round(0)
+        tr.save(str(tmp_path))
+    common = dict(clients_per_round=K, seed=7, eval_every=10 ** 9,
+                  async_buffer=True)
+    algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+    with pytest.raises(ValueError):
+        FederatedTrainer.resume(
+            str(tmp_path), loss_fn, make_params(), NUM_CLIENTS,
+            ragged_batch_fn,
+            ExecConfig(rounds=4, buffer_size=3, async_concurrency=3,
+                       **common), algo=algo, runtime=_markov_rt())
+    with pytest.raises(ValueError):
+        FederatedTrainer.resume(
+            str(tmp_path), loss_fn, make_params(), NUM_CLIENTS,
+            ragged_batch_fn,
+            ExecConfig(**common, **kw), algo=algo,
+            runtime=ExponentialRuntime())
+    with pytest.raises(ValueError):
+        # async checkpoint into a sync trainer
+        FederatedTrainer.resume(
+            str(tmp_path), loss_fn, make_params(), NUM_CLIENTS,
+            ragged_batch_fn,
+            ExecConfig(rounds=4, clients_per_round=K, seed=7,
+                       eval_every=10 ** 9), algo=algo)

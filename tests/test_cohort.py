@@ -156,6 +156,49 @@ def test_ragged_cohort_matches_per_client():
         assert np.isclose(float(l_vec[j]), float(l_ser), rtol=1e-5)
 
 
+@pytest.mark.parametrize("algo", ["feddpc", "fedavg", "fedvarp"])
+def test_zero_data_client_counts_as_real_under_padding(algo):
+    """Pad detection via ``real_clients`` (regression): a genuinely
+    sampled client with ZERO valid minibatches (all-False mask row)
+    must still count in the server mean / FedVARP table — the legacy
+    masks.any(axis=1) fallback reclassified it as padding. A padded
+    round told its pad count must equal the unpadded round on the same
+    cohort."""
+    from repro.core.baselines import make_algorithm
+    from repro.core.round import make_cohort_round
+
+    lists = [ragged_batch_fn(0, 0), [], ragged_batch_fn(2, 0)]
+    mx = max(len(b) for b in lists)
+    batches, masks = stack_cohort(lists, mx)                # (3, mx, ...)
+    batches_p, masks_p = stack_cohort(lists, mx, pad_to=4)  # + 1 pad row
+    assert not masks[1].any()                               # zero-data row
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+    ids_p = jnp.asarray([0, 1, 2, NUM_CLIENTS], jnp.int32)
+
+    def run(**round_kw):
+        a = make_algorithm(algo)
+        rnd = make_cohort_round(loss_fn, a, 0.05, 0.1, donate=False,
+                                **round_kw)
+        state = a.init(make_params(), NUM_CLIENTS)
+        if round_kw:
+            return rnd(state, make_params(), batches_p, masks_p, ids_p)
+        return rnd(state, make_params(), batches, masks, ids)
+
+    ref_p, ref_s, ref_l, _ = run()
+    new_p, new_s, new_l, _ = run(pad_clients=True, real_clients=3)
+    assert_trees_close(ref_p, new_p, rtol=1e-6, atol=1e-7)
+    assert_trees_close(ref_s, new_s, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_l)[:3], np.asarray(ref_l),
+                               rtol=1e-6)
+    # the legacy fallback drops the zero-data client from the mean
+    # denominator — documented misclassification, kept only for callers
+    # that cannot know their pad count
+    leg_p, _, _, _ = run(pad_clients=True)
+    assert any(not np.allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+               for x, y in zip(jax.tree.leaves(ref_p),
+                               jax.tree.leaves(leg_p)))
+
+
 def test_prefetch_matches_blocking():
     """Double-buffered ingest determinism: same seed => identical client
     schedule, losses, and final state as the blocking stack_cohort path

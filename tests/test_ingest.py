@@ -146,6 +146,83 @@ def test_ring_horizon_and_out_of_order_errors():
         ring.stop()
 
 
+def test_ring_stall_deadline_raises_instead_of_spinning():
+    """A producer hung inside produce_fn (alive thread, nothing staged)
+    used to spin get() forever — the 1s dead-thread poll only escaped
+    on a DEAD producer. With a stall deadline the consumer raises,
+    naming the stuck round (regression)."""
+    import threading
+    import time
+    hang = threading.Event()
+
+    def produce(t, slot):
+        if t == 1:
+            hang.wait(timeout=30)       # simulate a deadlocked source read
+        return t
+
+    ring = CohortPrefetcher(produce, 0, 4, slots=1, stall_timeout=0.3)
+    try:
+        item, slot = ring.get(0)
+        assert item == 0
+        ring.release(slot)
+        tic = time.monotonic()
+        with pytest.raises(RuntimeError, match="round 1"):
+            ring.get(1)
+        assert time.monotonic() - tic < 5.0     # bounded, not the 30s hang
+        assert ring._thread.is_alive()          # the ALIVE-but-stuck case
+    finally:
+        hang.set()                              # unstick before join
+        ring.stop()
+
+
+def test_ring_stop_joins_producer_and_drains_staged_slots():
+    """stop() must JOIN the producer (not just drop a sentinel) and
+    drain staged-but-unconsumed items so their buffers aren't pinned by
+    the dead ring (regression: stop() returned with the producer still
+    mid-produce and _ready still holding staged rounds)."""
+    staged = []
+
+    def produce(t, slot):
+        staged.append(t)
+        return ("payload", t)
+
+    ring = CohortPrefetcher(produce, 0, 100, slots=4)
+    item, slot = ring.get(0)                    # let the producer spin up
+    ring.release(slot)
+    ring.stop()
+    assert not ring._thread.is_alive()          # joined, not abandoned
+    assert ring._ready.empty()                  # staged work was drained
+    assert len(staged) <= 100
+    ring.stop()                                 # idempotent
+
+
+def test_trainer_threads_stall_deadline_to_the_ring():
+    """ExecConfig.ingest_stall_s reaches the staging ring: a source that
+    blocks forever on a mid-run round surfaces as the stall error
+    instead of hanging the round loop."""
+    import threading
+    hang = threading.Event()
+
+    def hanging_batch_fn(c, t):
+        if t == 2:
+            hang.wait(timeout=30)
+        return ragged_batch_fn(c, t)
+
+    cfg = ExecConfig(rounds=4, clients_per_round=K, seed=3,
+                     eval_every=10 ** 9, prefetch=True,
+                     ingest_stall_s=0.3)
+    try:
+        with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                              hanging_batch_fn, cfg,
+                              algo=AlgoConfig(eta_l=0.05, eta_g=0.1)) as tr:
+            tr.run_round(0)
+            tr.run_round(1)
+            with pytest.raises(RuntimeError, match="stall"):
+                tr.run_round(2)
+    finally:
+        hang.set()
+
+
 def test_staged_cohort_release_is_idempotent():
     src = ListDataSource(ragged_batch_fn)
     pipe = CohortIngestPipeline(

@@ -75,6 +75,83 @@ def test_feddpc_batched_server_step_matches_jnp(round1, rng):
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.parametrize("b,n", [(1, 512 * 128), (3, 1000), (7, 70001)])
+def test_feddpc_buffer_fold_sweep(b, n, rng):
+    """kernel.buffer_fold (scatter-accumulate over the arrival buffer,
+    DESIGN.md §11) vs the pure-jnp oracle: the row block stays at
+    DEFAULT_ROWS for every buffer size B (unlike batched_epilogue's
+    K-resident block), and the staleness weights fold into the scales."""
+    from repro.kernels.feddpc_project import kernel as fp_kernel
+    ks = jax.random.split(rng, 6)
+    m = -(-n // 128)
+    m += (-m) % fp_kernel.DEFAULT_ROWS            # full blocks, like ops.py
+    d3 = jax.random.normal(ks[0], (b, m, 128))
+    p2 = jax.random.normal(ks[1], (m, 128))
+    w2 = jax.random.normal(ks[2], (m, 128))
+    coefs = jax.random.normal(ks[3], (b,))
+    scales = 1.0 + jnp.abs(jax.random.normal(ks[4], (b,)))
+    wgts = jax.random.uniform(ks[5], (b,), minval=0.1, maxval=1.0)
+    got_w, got_dt = fp_kernel.buffer_fold(d3, p2, w2, coefs, scales, wgts,
+                                          0.3)
+    want_w, want_dt = fp_ref.buffer_fold_ref(d3, p2, w2, coefs, scales,
+                                             wgts, 0.3)
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_dt, want_dt, rtol=2e-5, atol=2e-5)
+
+
+def test_feddpc_buffer_fold_unit_weights_match_batched_epilogue(rng):
+    """At weights==1 (the zero-staleness anchor) the buffer fold is the
+    plain batched epilogue on the same inputs — the property that makes
+    the async anchor cell reproduce the sync round through the kernel
+    path too."""
+    from repro.kernels.feddpc_project import kernel as fp_kernel
+    ks = jax.random.split(rng, 5)
+    b, m = 4, 512
+    d3 = jax.random.normal(ks[0], (b, m, 128))
+    p2 = jax.random.normal(ks[1], (m, 128))
+    w2 = jax.random.normal(ks[2], (m, 128))
+    coefs = jax.random.normal(ks[3], (b,))
+    scales = 1.0 + jnp.abs(jax.random.normal(ks[4], (b,)))
+    ones = jnp.ones((b,))
+    got_w, got_dt = fp_kernel.buffer_fold(d3, p2, w2, coefs, scales, ones,
+                                          0.3)
+    rows = max(8, fp_kernel.DEFAULT_ROWS // b)
+    want_w, want_dt = fp_kernel.batched_epilogue(d3, p2, w2, coefs, scales,
+                                                 0.3, rows=rows)
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(got_dt, want_dt, rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("round1", [True, False])
+def test_feddpc_buffered_server_step_matches_jnp(round1, rng):
+    """feddpc.server_step(use_kernel=True, staleness_weights=...) routes
+    to ops.buffered_server_fold and matches the jnp path (which folds
+    the weights into the reduction-pass scales)."""
+    from repro.core import feddpc
+    ks = jax.random.split(rng, 4)
+    params = {"w": jax.random.normal(ks[0], (40, 37)),
+              "b": jax.random.normal(ks[1], (37,))}
+    deltas = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.fold_in(ks[2], x.ndim),
+                                    (5,) + x.shape), params)
+    prev = (jax.tree.map(jnp.zeros_like, params) if round1
+            else jax.tree.map(lambda x: x * 0.3, params))
+    wgts = jax.random.uniform(ks[3], (5,), minval=0.2, maxval=1.0)
+    outs = {}
+    for uk in (False, True):
+        outs[uk] = feddpc.server_step({"delta_prev": prev}, params, deltas,
+                                      0.1, 1.0, use_kernel=uk,
+                                      staleness_weights=wgts)
+    for a, b in zip(jax.tree.leaves(outs[False][:2]),
+                    jax.tree.leaves(outs[True][:2])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    for key, va in outs[False][2].items():
+        np.testing.assert_allclose(np.asarray(va),
+                                   np.asarray(outs[True][2][key]),
+                                   rtol=2e-4, atol=2e-5)
+
+
 def test_feddpc_batched_server_step_bf16_state_stays_f32(rng):
     """delta_prev is server STATE: both epilogue paths must keep it f32
     even for bf16 params/deltas (regression: the kernel path used to

@@ -72,6 +72,12 @@ FAST_SLICE = [
     ("feddpc", "uniform", "staged2d", True),
     ("fedvarp", "markov", "staged2d", True),
     ("feddpc", "uniform", "hoststaged", True),
+    # buffered-async anchor cells (DESIGN.md §11): DeterministicRuntime
+    # + B=K + concurrency 1 must reproduce the synchronous round — for
+    # the staleness-aware rule and a pre-scaling (FedBuff-mean) rule
+    ("feddpc", "uniform", "async_buffer", True),
+    ("feddpc", "uniform", "async_buffer", False),
+    ("fedvarp", "markov", "async_buffer", True),
 ]
 
 
@@ -81,7 +87,7 @@ def test_matrix_axes_come_from_the_registries():
     touching the tests — and the slices stay valid sub-sets."""
     assert {"serial", "vectorized", "sharded1d", "sharded2d",
             "staged", "staged1d", "staged2d",
-            "hoststaged"} <= set(REGIMES)
+            "hoststaged", "async_buffer"} <= set(REGIMES)
     assert {"uniform", "weighted", "cyclic", "markov"} <= set(SAMPLERS)
     assert {"feddpc", "fedavg", "fedvarp", "fedexp"} <= set(ALGOS)
     cells = set(full_matrix())
@@ -95,6 +101,9 @@ def test_matrix_axes_come_from_the_registries():
         assert EXEC_REGIMES[reg]["prefetch_depth"] == 4
     assert EXEC_REGIMES["staged2d"]["shard_model"] > 1
     assert EXEC_REGIMES["hoststaged"]["device_stage"] is False
+    # buffered-async streaming aggregation enrolled (DESIGN.md §11);
+    # its registry defaults ARE the sync-equivalence anchor cell
+    assert EXEC_REGIMES["async_buffer"]["async_buffer"] is True
 
 
 def test_regime_matrix_fast_slice():

@@ -101,6 +101,87 @@ def test_state_roundtrips_at_arbitrary_round_boundary(kind, n, k, seed,
         assert (a == b).all(), (kind, boundary)
 
 
+def test_markov_rng_draw_count_is_pinned_per_branch():
+    """The MarkovSampler consumes a FIXED number of draws per branch:
+    chain evolution + ONE cohort draw normally, chain evolution + TWO
+    (shortfall choice + the de-sorting permutation) when fewer than K
+    clients are up. The permutation is part of the contract — without
+    it the shortfall branch returned sorted up_ids first, leaking
+    availability through cohort position (regression)."""
+    from repro.core.samplers import MarkovSampler
+    n, k = 6, 3
+    # normal branch: plenty of clients up
+    s = MarkovSampler(n, k, p_on=1.0, p_off=0.0)
+    s.load_state_dict({"avail": [1] * n})
+    rng_a, rng_b = np.random.RandomState(5), np.random.RandomState(5)
+    cohort = s.sample(rng_a, 1)
+    rng_b.rand(n)                          # chain evolution
+    rng_b.choice(np.arange(n), size=k, replace=False)
+    assert (rng_a.get_state()[1] == rng_b.get_state()[1]).all()
+    assert len(cohort) == k
+    # shortfall branch: force exactly one client up (p_off=0 keeps the
+    # up client up, p_on~0 keeps the rest down, so the post-evolution
+    # availability is deterministic)
+    s = MarkovSampler(n, k, p_on=1e-9, p_off=0.0)
+    s.load_state_dict({"avail": [1] + [0] * (n - 1)})
+    rng_a, rng_b = np.random.RandomState(9), np.random.RandomState(9)
+    cohort = s.sample(rng_a, 1)
+    rng_b.rand(n)                          # chain evolution
+    up = np.flatnonzero(np.asarray([1] + [0] * (n - 1), bool))
+    down = np.flatnonzero(~np.asarray([1] + [0] * (n - 1), bool))
+    drafted = rng_b.choice(down, size=k - len(up), replace=False)
+    perm = rng_b.permutation(k)
+    assert (rng_a.get_state()[1] == rng_b.get_state()[1]).all()
+    # and the cohort is the shuffled concatenation, not sorted-up-first
+    want = np.concatenate([up, drafted])[perm]
+    assert (np.asarray(cohort) == want).all()
+    assert 0 in cohort and len(np.unique(cohort)) == k
+
+
+@given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 2 ** 16))
+def test_markov_shortfall_keeps_schedule_state_contract(n, k, seed):
+    """Even when the chain strands fewer than K clients up, cohorts stay
+    exact/distinct and the boundary-roundtrip property holds — the
+    shortfall branch draws through the same rng in round order."""
+    k = min(k, n)
+    sampler = sampler_matrix(n, k)["markov"]
+    sampler.p_on, sampler.p_off = 0.05, 0.95      # starve availability
+    rng = np.random.RandomState(seed)
+    for t in range(ROUNDS):
+        cohort = np.asarray(sampler.sample(rng, t))
+        assert len(np.unique(cohort)) == k
+        assert cohort.min() >= 0 and cohort.max() < n
+
+
+def test_weighted_config_echo_is_scale_free_and_digested():
+    """WeightedSampler's config echo is a digest + length, not the raw
+    probability vector (regression: an O(num_clients) float list in the
+    JSON sidecar, string-compared every resume) — and the legacy "p"
+    spelling normalizes to the same digest so old checkpoints still
+    compare equal."""
+    from repro.core.samplers import (WeightedSampler,
+                                     normalize_sampler_config)
+    w = np.arange(1, 201, dtype=np.float64)
+    s = WeightedSampler(w, 5)
+    cfg = s.config_dict()
+    assert "p" not in cfg
+    assert cfg["p_len"] == 200 and isinstance(cfg["p_digest"], str)
+    # the echo stays O(1) in num_clients
+    import json
+    assert len(json.dumps(cfg)) < 200
+    # legacy sidecar (raw vector) normalizes to the live digest form
+    legacy = {k: v for k, v in cfg.items()
+              if k not in ("p_digest", "p_len")}
+    legacy["p"] = (w / w.sum()).tolist()
+    assert normalize_sampler_config(legacy) == cfg
+    # round-tripping through JSON (float value-exactness) is stable
+    via_json = dict(legacy, p=json.loads(json.dumps(legacy["p"])))
+    assert normalize_sampler_config(via_json) == cfg
+    # different weights => different digest
+    assert WeightedSampler(w[::-1], 5).config_dict()["p_digest"] \
+        != cfg["p_digest"]
+
+
 @given(st.integers(2, 40), st.integers(1, 6), st.integers(0, 2 ** 16))
 def test_markov_state_dict_json_roundtrip(n, k, seed):
     """The Markov availability vector survives the JSON sidecar channel
