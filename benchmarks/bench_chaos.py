@@ -1,0 +1,206 @@
+"""Chaos-smoke receipt — the fault-injection harness driven end to end
+(DESIGN.md §12): one seeded FaultPlan exercising EVERY injector kind
+against the guarded trainer, per algorithm, plus the self-healing
+checkpoint fallback and the guard-off control.
+
+Per algorithm mode the receipt records the RoundRecord health counters
+(quarantined / clipped / deadline_fired / deadline_dropped /
+ingest_restarts) and the exactness signal ``quarantine_matches_plan``:
+the guarded run must quarantine EXACTLY the plan's delta-fault target
+set (``FaultPlan.delta_targets`` over the realized schedule) — no
+misses, no false positives — and still finish with finite parameters.
+
+Top-level checks:
+
+  injectors_fired               every injector kind fired >= once
+  unguarded_control_nonfinite   the same NaN plan with guard=False
+                                poisons the params (the guard is
+                                load-bearing, not decorative)
+  ckpt_fallback                 truncate / bitflip / drop_digest each
+                                corrupt the newest step; resume falls
+                                back to the last intact one
+
+All of it is virtual-time / seed-deterministic, so the bench gate holds
+the counters EXACTLY (benchmarks/bench_gate.py HEALTH_KEYS); only the
+wall-clock keys get the perf band.
+
+  PYTHONPATH=src python -m benchmarks.bench_chaos --out /tmp/chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+import warnings
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.baselines import default_hyper
+from repro.core.faults import FaultPlan, corrupt_checkpoint
+from repro.core.runtime import make_runtime
+from repro.checkpoint import checkpoint as ckpt
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_chaos.json")
+
+NUM_CLIENTS = 10
+K = 4
+ROUNDS = 6
+ALGOS = ("feddpc", "fedavg", "fedvarp")
+
+# one plan, every injector: delta faults on warm-threshold rounds (the
+# guard's norm threshold needs one round of accepted history), hangs on
+# their own round so the quarantine oracle stays clean of deadline drops
+PLAN_KW = dict(nan_rate=0.5, nan_rounds=(2,),
+               explode_rate=0.5, explode_rounds=(3,),
+               hang_rate=0.5, hang_rounds=(4,),
+               ingest_crash_rounds=(1,))
+
+
+def build_task(seed: int = 0):
+    r = np.random.RandomState(seed)
+    params = {"w1": jnp.asarray(r.randn(8, 16) * 0.3, jnp.float32),
+              "b1": jnp.zeros((16,), jnp.float32),
+              "w2": jnp.asarray(r.randn(16, 4) * 0.3, jnp.float32),
+              "b2": jnp.zeros((4,), jnp.float32)}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["w1"] + p["b1"])
+        pred = h @ p["w2"] + p["b2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    def batch_fn(c, t):
+        rc = np.random.RandomState(1000 * c + t)
+        return [{"x": rc.randn(8, 8).astype(np.float32),
+                 "y": rc.randn(8, 4).astype(np.float32)}
+                for _ in range((c % 2) + 1)]
+
+    return params, loss_fn, batch_fn
+
+
+def _trainer(algorithm: str, plan, *, guard: bool):
+    params, loss_fn, batch_fn = build_task()
+    cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                     eval_every=10 ** 9, guard=guard, guard_min_history=1,
+                     round_deadline=10.0, ingest_max_restarts=2)
+    algo = AlgoConfig(name=algorithm, eta_l=0.05, eta_g=0.1,
+                      hyper=default_hyper(algorithm, lam=1.0))
+    return FederatedTrainer(loss_fn, params, NUM_CLIENTS, batch_fn, cfg,
+                            algo=algo, fault_plan=plan,
+                            runtime=make_runtime("deterministic",
+                                                 NUM_CLIENTS))
+
+
+def run_mode(algorithm: str, plan) -> Dict:
+    tic = time.perf_counter()
+    with _trainer(algorithm, plan, guard=True) as tr:
+        recs = tr.run()
+        sched = [np.asarray(s) for s in tr.schedule]
+        finite = bool(all(np.all(np.isfinite(np.asarray(leaf)))
+                          for leaf in jax.tree.leaves(tr.params)))
+    expected_q = sum(int(plan.delta_targets(t, sched[t]).sum())
+                     for t in range(ROUNDS))
+    got_q = sum(r.quarantined for r in recs)
+    return {
+        "quarantined": got_q,
+        "clipped": sum(r.clipped for r in recs),
+        "deadline_fired": sum(r.deadline_fired for r in recs),
+        "deadline_dropped": sum(r.deadline_dropped for r in recs),
+        "ingest_restarts": sum(r.ingest_restarts for r in recs),
+        "expected_quarantined": expected_q,
+        "quarantine_matches_plan": bool(got_q == expected_q),
+        "params_finite": finite,
+        "final_train_loss": float(recs[-1].train_loss),
+        "mean_s": (time.perf_counter() - tic) / ROUNDS,
+    }
+
+
+def run_control(plan) -> bool:
+    """guard=False under the NaN plan: the params MUST go non-finite —
+    proof the counters above measure a real defense."""
+    with _trainer("fedavg", plan, guard=False) as tr:
+        tr.run()
+        return bool(any(not np.all(np.isfinite(np.asarray(leaf)))
+                        for leaf in jax.tree.leaves(tr.params)))
+
+
+def run_ckpt_fallback() -> Dict[str, bool]:
+    """Corrupt the newest step each way; resolve_step must fall back to
+    the older intact step (and never pick the damaged one)."""
+    out = {}
+    for mode in ("truncate", "bitflip", "drop_digest"):
+        with tempfile.TemporaryDirectory() as d:
+            with _trainer("fedavg", FaultPlan.seeded(0), guard=True) as tr:
+                for t in range(4):
+                    tr.run_round(t)
+                    if t in (1, 3):
+                        tr.save(d, keep=5)
+            corrupt_checkpoint(d, 4, mode)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                out[mode] = bool(ckpt.resolve_step(d) == 2)
+    return out
+
+
+def run(out: str = None) -> Dict:
+    plan = FaultPlan.seeded(7, **PLAN_KW)
+    fired = {
+        "nan_delta": False, "explode_delta": False, "client_hang": False,
+        "ingest_crash": bool(plan.ingest_crash(1)),
+    }
+    modes = {}
+    for algorithm in ALGOS:
+        print(f"[chaos] {algorithm} ...")
+        modes[algorithm] = run_mode(algorithm, plan)
+    # which delta/hang injectors actually fired, from the realized
+    # schedule of the last run (all runs share seed + sampler => same
+    # schedule); codes: 1 = nan, 2 = explode
+    with _trainer("fedavg", plan, guard=True) as tr:
+        tr.run()
+        sched = [np.asarray(s) for s in tr.schedule]
+    for t in range(ROUNDS):
+        codes = plan.delta_codes(t, sched[t])
+        fired["nan_delta"] |= bool((codes == 1).any())
+        fired["explode_delta"] |= bool((codes == 2).any())
+        fired["client_hang"] |= bool(plan.latency_boost(t, sched[t]).any())
+    payload = {
+        "bench": "chaos_smoke",
+        "num_clients": NUM_CLIENTS, "clients_per_round": K,
+        "rounds": ROUNDS, "plan": plan.config_dict(),
+        "modes": modes,
+        "injectors_fired": fired,
+        "all_injectors_fired": bool(all(fired.values())),
+        "unguarded_control_nonfinite": run_control(plan),
+        "ckpt_fallback": run_ckpt_fallback(),
+        "backend": jax.default_backend(),
+    }
+    out = out or DEFAULT_OUT
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"[chaos] wrote {out}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"receipt path (default {DEFAULT_OUT})")
+    a = ap.parse_args(argv)
+    payload = run(out=a.out)
+    ok = (payload["all_injectors_fired"]
+          and payload["unguarded_control_nonfinite"]
+          and all(payload["ckpt_fallback"].values())
+          and all(m["quarantine_matches_plan"] and m["params_finite"]
+                  for m in payload["modes"].values()))
+    print("chaos smoke OK" if ok else "chaos smoke FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

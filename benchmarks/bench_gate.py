@@ -42,6 +42,15 @@ PERF_SUBSTR = ("_reduction_",)
 SIM_KEYS = ("staleness_mean", "staleness_max", "final_train_loss",
             "train_loss", "waves_dispatched", "anchor_zero_staleness",
             "heavytail_stream_staleness_mean")
+# chaos-hardening health counters (DESIGN.md §12): integer tallies of a
+# seed-deterministic fault plan — gated EXACTLY, never banded; a drift
+# of even one quarantine/drop/restart means the guard or the plan
+# derivation changed behavior
+HEALTH_KEYS = ("quarantined", "clipped", "deadline_fired",
+               "deadline_dropped", "ingest_restarts",
+               "expected_quarantined", "quarantine_matches_plan",
+               "params_finite", "all_injectors_fired",
+               "unguarded_control_nonfinite")
 # host-dependent context fields: echoed for humans, never gated (the
 # committed receipts come from dev machines, CI runs elsewhere)
 CONTEXT_KEYS = ("backend", "note", "kernel_note")
@@ -50,6 +59,8 @@ CONTEXT_KEYS = ("backend", "note", "kernel_note")
 def classify(key: str) -> str:
     if key in CONTEXT_KEYS:
         return "context"
+    if key in HEALTH_KEYS:
+        return "exact"
     if key in SIM_KEYS:
         return "sim"
     if (key.endswith(PERF_SUFFIXES) or key.startswith(PERF_PREFIXES)

@@ -19,16 +19,30 @@ RNG/round/schedule/history through the sidecars (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
 import shutil
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+# files covered by the manifest's content digests (aux sidecars are
+# optional; only files actually written are digested)
+_DIGESTED = ("state.npz", "aux.npz", "aux.json")
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree):
@@ -57,8 +71,11 @@ def save(ckpt_dir: str, step: int, state: PyTree, keep: int = 3,
     if aux_json is not None:
         with open(os.path.join(tmp, "aux.json"), "w") as f:
             json.dump(aux_json, f, default=float)
+    digests = {name: _sha256(os.path.join(tmp, name))
+               for name in _DIGESTED
+               if os.path.exists(os.path.join(tmp, name))}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "keys": keys}, f)
+        json.dump({"step": step, "keys": keys, "digests": digests}, f)
     old = None
     if os.path.exists(path):        # re-saving the same step: keep the
         old = path + ".old"         # previous copy until the new one is
@@ -120,6 +137,70 @@ def _rotate(ckpt_dir: str, keep: int):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = _steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def verify_step(ckpt_dir: str, step: int) -> Optional[str]:
+    """Content-integrity check for one step (DESIGN.md §12). Returns
+    None when the step verifies, else a human-readable reason.
+
+    A missing manifest is corruption (save() always writes one); a
+    legacy manifest without ``digests`` is trusted as-is so pre-digest
+    checkpoints keep restoring. Every digested file must still exist
+    and hash to its recorded sha256 — truncation, bit-flips, and
+    deleted sidecars all surface here instead of as silent bad math."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not os.path.isdir(path):
+        return f"step dir {path} does not exist"
+    man_path = os.path.join(path, "manifest.json")
+    if not os.path.exists(man_path):
+        return "manifest.json missing"
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return f"manifest.json unreadable: {e}"
+    digests = manifest.get("digests")
+    if digests is None:      # legacy (pre-digest) checkpoint: trusted
+        return None
+    for name, want in digests.items():
+        fpath = os.path.join(path, name)
+        if not os.path.exists(fpath):
+            return f"{name} missing (recorded in manifest)"
+        got = _sha256(fpath)
+        if got != want:
+            return (f"{name} digest mismatch: manifest {want[:12]}..., "
+                    f"file {got[:12]}... (truncated or corrupted)")
+    return None
+
+
+def resolve_step(ckpt_dir: str, step: Optional[int] = None) -> int:
+    """Pick the step to restore, verifying content digests.
+
+    Explicit ``step``: verified and returned, or ValueError with the
+    corruption reason — an explicit request never silently falls back.
+    ``step=None``: walk the available steps newest-first and return the
+    first that verifies (self-healing last-good fallback), warning for
+    each corrupt step skipped; FileNotFoundError when none survive."""
+    if step is not None:
+        reason = verify_step(ckpt_dir, step)
+        if reason is not None:
+            raise ValueError(
+                f"checkpoint step {step} in {ckpt_dir} failed "
+                f"verification: {reason}")
+        return step
+    steps = _steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    for s in reversed(steps):
+        reason = verify_step(ckpt_dir, s)
+        if reason is None:
+            return s
+        warnings.warn(
+            f"skipping corrupt checkpoint step {s} in {ckpt_dir}: "
+            f"{reason}", RuntimeWarning)
+    raise FileNotFoundError(
+        f"no checkpoint step in {ckpt_dir} passed verification "
+        f"(tried {list(reversed(steps))})")
 
 
 def restore(ckpt_dir: str, like: PyTree, step: Optional[int] = None) -> PyTree:

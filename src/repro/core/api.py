@@ -153,6 +153,26 @@ class ExecConfig:
     # stuck inside produce_fn raises instead of spinning forever; None
     # keeps the historical wait-forever behavior
     ingest_stall_s: Optional[float] = None
+    # ---- self-healing ingest (DESIGN.md §12) ----
+    # bounded supervised restart of a crashed staging producer: up to
+    # this many retries PER ROUND with exponential backoff before the
+    # failure poisons the ring; 0 keeps the historical fail-fast
+    ingest_max_restarts: int = 0
+    ingest_restart_backoff_s: float = 0.05
+    # ---- chaos hardening (DESIGN.md §12) ----
+    # update guard: validate every arriving client delta (non-finite /
+    # exploded-norm quarantine via client_mask folding, norm clipping
+    # against a rolling robust threshold) before the server rule sees it
+    guard: bool = False
+    guard_quarantine_mult: float = 1e3
+    guard_clip_mult: float = 1e2
+    guard_window: int = 64
+    guard_min_history: int = 8
+    # round deadline in VIRTUAL seconds (the runtime model's latency
+    # unit). Sync engines drop-and-mask clients whose latency exceeds
+    # it; the buffered-async engine folds a PARTIAL buffer rather than
+    # waiting past the deadline for stragglers. None = wait forever.
+    round_deadline: Optional[float] = None
     # data-shape hints for drivers that build sources from raw datasets
     # (the trainer itself never reads them)
     batch_size: int = 256
@@ -231,6 +251,10 @@ EXEC_REGIMES = {
     # wave schedule, arrival order and staleness-0 discounts reproduce
     # the synchronous round — the anchor cell the matrix pins
     "async_buffer": {"async_buffer": True},
+    # chaos-hardened rounds (DESIGN.md §12): with no faults injected the
+    # guard's every multiplier is literally 1.0 (threshold starts +inf),
+    # so the guarded round must reproduce the unguarded serial reference
+    "guarded": {"guard": True},
 }
 
 
@@ -257,6 +281,13 @@ class RoundRecord:
     # run); identically 0.0 in every synchronous regime
     staleness_mean: float = 0.0
     staleness_max: float = 0.0
+    # ---- health counters (DESIGN.md §12) — identically 0 in a healthy
+    # run, and kept OUT of diagnostics for the same matrix reason ----
+    quarantined: int = 0           # deltas zeroed + masked by the guard
+    clipped: int = 0               # deltas norm-clipped by the guard
+    deadline_fired: int = 0        # 1 if the round hit round_deadline
+    deadline_dropped: int = 0      # clients dropped by the deadline
+    ingest_restarts: int = 0       # staging-producer restarts this round
 
 
 @dataclass
@@ -316,12 +347,18 @@ class FederatedTrainer:
                  eval_fn: Optional[Callable[[PyTree], float]] = None, *,
                  algo: Optional[AlgoConfig] = None,
                  sampler: Optional[ClientSampler] = None,
-                 runtime=None):
+                 runtime=None, fault_plan=None):
         algo_cfg, exec_cfg = _coerce_cfg(cfg, algo)
-        if runtime is not None and not exec_cfg.async_buffer:
+        if (runtime is not None and not exec_cfg.async_buffer
+                and exec_cfg.round_deadline is None):
             raise ValueError(
-                "a runtime model only drives the buffered-async regime — "
-                "pass ExecConfig(async_buffer=True) with it")
+                "a runtime model drives the buffered-async regime or a "
+                "round deadline — pass ExecConfig(async_buffer=True) or "
+                "ExecConfig(round_deadline=...) with it")
+        if (exec_cfg.round_deadline is not None
+                and exec_cfg.round_deadline <= 0):
+            raise ValueError(f"round_deadline must be positive, "
+                             f"got {exec_cfg.round_deadline}")
         if exec_cfg.async_buffer and not exec_cfg.vectorize:
             raise ValueError("async_buffer dispatches whole waves through "
                              "the cohort-vectorized update; it cannot "
@@ -338,6 +375,24 @@ class FederatedTrainer:
             UniformSampler(num_clients, exec_cfg.clients_per_round)
         self.algo: ServerAlgo = make_algorithm(algo_cfg.name, algo_cfg.hyper)
         self.server_state = self.algo.init(self.params, num_clients)
+        # ---- chaos hardening (DESIGN.md §12) ----
+        self.fault_plan = fault_plan
+        self._inject_deltas = (fault_plan is not None
+                               and fault_plan.injects_deltas)
+        self._guard = None
+        if exec_cfg.guard:
+            from repro.core.guards import GuardConfig, UpdateGuard
+            self._guard = UpdateGuard(GuardConfig(
+                quarantine_mult=exec_cfg.guard_quarantine_mult,
+                clip_mult=exec_cfg.guard_clip_mult,
+                window=exec_cfg.guard_window,
+                min_history=exec_cfg.guard_min_history))
+        # sync engines mask timed-out clients out of the round; the async
+        # engine instead stops collecting arrivals at the deadline (the
+        # partial-buffer fold), so only the sync paths take the mask input
+        self._deadline_mask = (exec_cfg.round_deadline is not None
+                               and not exec_cfg.async_buffer)
+        self._ingest_restarts_seen = 0
         self.mesh = (self._build_mesh()
                      if exec_cfg.shard_clients or exec_cfg.shard_model > 1
                      else None)
@@ -358,13 +413,39 @@ class FederatedTrainer:
         # fused path: local training + server step, one program per round.
         # real_clients carries the pad count so a zero-data client (all
         # minibatches masked) still counts as SAMPLED — the legacy
-        # masks.any() fallback would reclassify it as padding
+        # masks.any() fallback would reclassify it as padding.
+        # The chaos extras (fault codes / live mask / guard threshold +
+        # guard stats, DESIGN.md §12) extend the jit signature; the BASE
+        # 5-in/4-out sharding pair stays untouched because _placements()
+        # and the ingest placer unpack it by position.
+        round_shardings = self._round_shardings
+        if round_shardings is not None and (
+                self._inject_deltas or self._deadline_mask or self._guard):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(self.mesh, P())
+            cli = NamedSharding(self.mesh, P("clients"))
+            ins = list(round_shardings[0])
+            outs = list(round_shardings[1])
+            if self._inject_deltas:
+                ins.append(cli)              # fault_codes (K,)
+            if self._deadline_mask:
+                ins.append(cli)              # live_mask (K,)
+            if self._guard is not None:
+                ins.append(rep)              # guard_thresh scalar
+                outs.append(cli)             # guard_stats (K,) prefix
+            round_shardings = (tuple(ins), tuple(outs))
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
             optimizer=algo_cfg.local_optimizer, mesh=self.mesh,
             pad_clients=self._pad_to > k,
             real_clients=k if self._pad_to > k else None,
-            shardings=self._round_shardings)
+            shardings=round_shardings,
+            guard=self._guard is not None,
+            guard_cfg=None if self._guard is None else self._guard.config,
+            inject_faults=self._inject_deltas,
+            deadline_mask=self._deadline_mask,
+            fault_magnitude=(fault_plan.explode_magnitude
+                             if fault_plan is not None else 1e12))
         if self.mesh is not None:
             # pre-place so the first round's donation matches: replicated
             # on the 1-D client mesh, per-leaf model-sharded on a
@@ -377,9 +458,11 @@ class FederatedTrainer:
         self.local_update = client_mod.make_local_update(
             loss_fn, algo_cfg.eta_l, variant=self.algo.client_variant,
             optimizer=algo_cfg.local_optimizer, **client_kwargs(self.algo))
+        # cm=None is the historical unmasked path; the serial chaos path
+        # passes the live/quarantine fold exactly like the fused round
         self._server_step = jax.jit(
-            lambda st, p, d, ids: self.algo.step(
-                st, p, d, ids, algo_cfg.eta_g, 0))
+            lambda st, p, d, ids, cm: self.algo.step(
+                st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm))
         self.rng = np.random.RandomState(exec_cfg.seed)
         self.history: List[RoundRecord] = []
         self.schedule: List[np.ndarray] = []     # sampled cohort per round
@@ -400,16 +483,23 @@ class FederatedTrainer:
             depth=exec_cfg.prefetch_depth,
             device_stage=exec_cfg.device_stage,
             placer=CohortPlacer(input_sh), pad_to=self._pad_to,
-            stall_timeout=exec_cfg.ingest_stall_s)
+            stall_timeout=exec_cfg.ingest_stall_s,
+            max_restarts=exec_cfg.ingest_max_restarts,
+            restart_backoff=exec_cfg.ingest_restart_backoff_s,
+            crash_hook=(fault_plan.ingest_crash
+                        if fault_plan is not None else None))
         # buffered-async engine (DESIGN.md §11): owns the virtual-time
-        # wave heap; the runtime model's draws ride the sampling lock
+        # wave heap; the runtime model's draws ride the sampling lock.
+        # A round deadline WITHOUT async_buffer also needs a runtime
+        # model (latencies decide who times out) — default deterministic
         self._runtime = None
         self._engine = None
         self._wave_runtime: Dict[int, tuple] = {}
-        if exec_cfg.async_buffer:
+        if exec_cfg.async_buffer or exec_cfg.round_deadline is not None:
             from repro.core.runtime import DeterministicRuntime
             self._runtime = (runtime if runtime is not None
                              else DeterministicRuntime())
+        if exec_cfg.async_buffer:
             self._engine = self._build_async_engine(loss_fn, algo_cfg,
                                                     exec_cfg)
         self._start_round = 0                    # advanced by restore()
@@ -466,27 +556,70 @@ class FederatedTrainer:
             extra = algo.client_extra(server_state)
             return local(params, batches, masks, extra)
 
-        def fold(server_state, params, deltas, ids, weights):
+        inject = self._inject_deltas
+        guard = self._guard is not None
+        guard_cfg = None if self._guard is None else self._guard.config
+        magnitude = (self.fault_plan.explode_magnitude
+                     if self.fault_plan is not None else 1e12)
+
+        def fold(server_state, params, deltas, ids, weights, *chaos):
+            # chaos extras (DESIGN.md §12) in the same fixed order as the
+            # fused sync round: fault codes re-derived per ARRIVAL (so
+            # checkpointed in-flight entries stay clean and resume
+            # bitwise), then the guard threshold
+            it = iter(chaos)
+            if inject:
+                deltas = round_mod.apply_fault_codes(deltas, next(it),
+                                                     magnitude)
+            cm = gstats = None
+            if guard:
+                deltas, ids, cm, gstats = round_mod.apply_guard(
+                    deltas, ids, cm, next(it), guard_cfg)
             if algo.staleness_aware:
-                return algo.step(server_state, params, deltas, ids, eta_g,
-                                 0, client_mask=None,
-                                 model_sharded=model_sharded,
-                                 staleness_weights=weights)
-            pre = jax.tree.map(
-                lambda x: weights.reshape((-1,) + (1,) * (x.ndim - 1))
-                * x.astype(jnp.float32), deltas)
-            return algo.step(server_state, params, pre, ids, eta_g, 0,
-                             client_mask=None, model_sharded=model_sharded)
+                out = algo.step(server_state, params, deltas, ids, eta_g,
+                                0, client_mask=cm,
+                                model_sharded=model_sharded,
+                                staleness_weights=weights)
+            else:
+                pre = jax.tree.map(
+                    lambda x: weights.reshape((-1,) + (1,) * (x.ndim - 1))
+                    * x.astype(jnp.float32), deltas)
+                out = algo.step(server_state, params, pre, ids, eta_g, 0,
+                                client_mask=cm, model_sharded=model_sharded)
+            return out + (gstats,) if guard else out
+
+        fold_extras = None
+        if inject or guard:
+            def fold_extras(entries):
+                out = []
+                if inject:
+                    # per-(kind, wave) streams are prefix-stable in the
+                    # client id, so per-entry derivation equals the
+                    # whole-cohort call made by the sync engines
+                    out.append(jnp.asarray(np.asarray(
+                        [self.fault_plan.delta_codes(
+                            e.wave, np.asarray([e.client]))[0]
+                         for e in entries], np.int32)))
+                if guard:
+                    out.append(jnp.float32(self._guard.threshold()))
+                return tuple(out)
 
         wave_kw: Dict[str, Any] = {}
         # NO donation on the wave: params/server_state survive for the
         # next wave of the same server round; the fold donates both
         fold_kw: Dict[str, Any] = {"donate_argnums": (0, 1)}
         if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.sharding.rules import async_round_shardings
             w_in, w_out, f_in, f_out = async_round_shardings(
                 self.mesh, params=self.params,
                 server_state=self.server_state)
+            rep = NamedSharding(self.mesh, P())
+            # chaos extras are tiny (B,) / scalar host-built arrays and
+            # the guard stats come straight back to the host: replicate
+            f_in = f_in + (rep,) * (int(inject) + int(guard))
+            if guard:
+                f_out = f_out + (rep,)
             wave_kw.update(in_shardings=w_in, out_shardings=w_out)
             fold_kw.update(in_shardings=f_in, out_shardings=f_out)
         return BufferedAsyncEngine(
@@ -498,7 +631,10 @@ class FederatedTrainer:
                          or exec_cfg.clients_per_round),
             alpha=exec_cfg.staleness_alpha,
             concurrency=exec_cfg.async_concurrency,
-            prefetch=exec_cfg.prefetch)
+            prefetch=exec_cfg.prefetch,
+            deadline=exec_cfg.round_deadline,
+            fold_extras=fold_extras,
+            fold_returns_stats=guard)
 
     def _runtime_take(self, wave: int):
         """Hand the engine the (latencies, dropped) pair captured for
@@ -552,8 +688,13 @@ class FederatedTrainer:
                 # runtime in wave order — prefetched waves replay
                 # bitwise on resume (round-order RNG contract)
                 lat, dropped = self._runtime.draw(self.rng, t, clients)
-                self._wave_runtime[t] = (np.asarray(lat, np.float64),
-                                         np.asarray(dropped, bool))
+                lat = np.asarray(lat, np.float64)
+                if self.fault_plan is not None:
+                    # hang injection (core/faults.py): stateless, derived
+                    # AFTER the runtime draw, so the RNG stream is the
+                    # no-faults stream and the boost replays on resume
+                    lat = lat + self.fault_plan.latency_boost(t, clients)
+                self._wave_runtime[t] = (lat, np.asarray(dropped, bool))
         return clients
 
     def _round_batches(self, clients: Sequence[int], t: int):
@@ -563,20 +704,69 @@ class FederatedTrainer:
     def _run_round_vectorized(self, t: int):
         staged = (self._pipeline.get(t) if self.cfg.prefetch
                   else self._pipeline.stage_blocking(t))
+        chaos = (self._inject_deltas or self._deadline_mask
+                 or self._guard is not None)
         try:
-            self.params, self.server_state, losses, diag = self._cohort_round(
-                self.server_state, self.params, staged.batches, staged.masks,
-                staged.ids)
-            # syncs on the round's result: after this the device is done
-            # with the inputs and the staging slot is reusable; dummy
-            # padded clients sit past the real K and report loss 0
-            train_loss = float(jnp.mean(losses[:len(staged.clients)]))
+            if not chaos:
+                self.params, self.server_state, losses, diag = \
+                    self._cohort_round(
+                        self.server_state, self.params, staged.batches,
+                        staged.masks, staged.ids)
+                # syncs on the round's result: after this the device is
+                # done with the inputs and the staging slot is reusable;
+                # dummy padded clients sit past the real K and report
+                # loss 0
+                train_loss = float(jnp.mean(losses[:len(staged.clients)]))
+                return (train_loss, diag, staged.host_seconds,
+                        staged.device_seconds, {})
+            # ---- chaos-hardened round (DESIGN.md §12): same program,
+            # extended by the fixed-order extras ----
+            n = len(staged.clients)
+            kp = int(np.shape(staged.ids)[0])        # padded cohort size
+            args = [self.server_state, self.params, staged.batches,
+                    staged.masks, staged.ids]
+            extra: Dict[str, Any] = {}
+            live = np.ones(n, bool)
+            if self._inject_deltas:
+                codes = np.zeros(kp, np.int32)
+                codes[:n] = self.fault_plan.delta_codes(t, staged.clients)
+                args.append(jnp.asarray(codes))
+            if self._deadline_mask:
+                lat, dropped = self._runtime_take(t)
+                live = (~dropped) & (lat <= self.cfg.round_deadline)
+                lv = np.zeros(kp, bool)
+                lv[:n] = live
+                args.append(jnp.asarray(lv))
+                extra["deadline_dropped"] = int((~live).sum())
+                extra["deadline_fired"] = int((~live).any())
+            if self._guard is not None:
+                args.append(jnp.float32(self._guard.threshold()))
+                self.params, self.server_state, losses, diag, gstats = \
+                    self._cohort_round(*args)
+                q = np.asarray(gstats["quarantined"])[:n]
+                c = np.asarray(gstats["clipped"])[:n]
+                norms = np.asarray(gstats["norm"])[:n]
+                # deadline-dropped rows are already counted as dropped;
+                # a row that is both dropped and bad counts once
+                extra["quarantined"] = int((q & live).sum())
+                extra["clipped"] = int((c & live).sum())
+                self._guard.observe(norms[live & ~q],
+                                    quarantined=extra["quarantined"],
+                                    clipped=extra["clipped"])
+            else:
+                self.params, self.server_state, losses, diag = \
+                    self._cohort_round(*args)
+            # train loss over clients whose update ARRIVED (live rows) —
+            # identical to the historical mean when nothing timed out
+            losses_h = np.asarray(losses[:n])
+            train_loss = (float(losses_h[live].mean()) if live.any()
+                          else 0.0)
         finally:
             # released on error too — leaking the slot would deadlock the
             # NEXT run_round inside the staging ring instead of erroring
             staged.release()
         return (train_loss, diag, staged.host_seconds,
-                staged.device_seconds, {})
+                staged.device_seconds, extra)
 
     def _run_round_serial(self, t: int):
         clients = self._sample_clients(t)
@@ -591,19 +781,68 @@ class FederatedTrainer:
             losses.append(float(loss))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
         ids = jnp.asarray(clients, jnp.int32)
+        # chaos hardening (DESIGN.md §12) on the reference path: the SAME
+        # transforms the fused round applies, run eagerly on the host-
+        # stacked deltas — injection, deadline fold, guard — so the
+        # chaos regimes stay cross-checkable against this path too
+        out: Dict[str, Any] = {}
+        cm = None
+        n = len(clients)
+        live = np.ones(n, bool)
+        if self._inject_deltas:
+            codes = self.fault_plan.delta_codes(t, clients)
+            stacked = round_mod.apply_fault_codes(
+                stacked, jnp.asarray(codes),
+                self.fault_plan.explode_magnitude)
+        if self._deadline_mask:
+            lat, dropped = self._runtime_take(t)
+            live = (~dropped) & (lat <= self.cfg.round_deadline)
+            lv = jnp.asarray(live)
+            ids = jnp.where(lv, ids, round_mod.ID_SENTINEL)
+            cm = lv
+            out["deadline_dropped"] = int((~live).sum())
+            out["deadline_fired"] = int((~live).any())
+        if self._guard is not None:
+            stacked, ids, cm, gstats = round_mod.apply_guard(
+                stacked, ids, cm, self._guard.threshold(),
+                self._guard.config)
+            q = np.asarray(gstats["quarantined"])
+            c = np.asarray(gstats["clipped"])
+            norms = np.asarray(gstats["norm"])
+            out["quarantined"] = int((q & live).sum())
+            out["clipped"] = int((c & live).sum())
+            self._guard.observe(norms[live & ~q],
+                                quarantined=out["quarantined"],
+                                clipped=out["clipped"])
         self.params, self.server_state, diag = self._server_step(
-            self.server_state, self.params, stacked, ids)
-        return float(np.mean(losses)), diag, ingest, 0.0, {}
+            self.server_state, self.params, stacked, ids, cm)
+        losses_h = np.asarray(losses)
+        train_loss = float(losses_h[live].mean()) if live.any() else 0.0
+        return train_loss, diag, ingest, 0.0, out
 
     def _run_round_async(self, t: int):
         """One buffered-async server step: the engine collects the next
-        buffer_size arrivals (dispatching waves as concurrency allows)
-        and folds them with their staleness discounts."""
+        buffer_size arrivals (dispatching waves as concurrency allows,
+        stopping at the round deadline) and folds them with their
+        staleness discounts."""
         self.params, self.server_state, m = self._engine.run_server_round(
             t, self.params, self.server_state)
+        extra = {"staleness_mean": m["staleness_mean"],
+                 "staleness_max": m["staleness_max"]}
+        if self.cfg.round_deadline is not None:
+            extra["deadline_fired"] = int(m["deadline_fired"])
+            extra["deadline_dropped"] = int(m["deadline_dropped"])
+        if self._guard is not None and m["guard_stats"] is not None:
+            nb = int(m["n_arrivals"])
+            q = np.asarray(m["guard_stats"]["quarantined"])[:nb]
+            c = np.asarray(m["guard_stats"]["clipped"])[:nb]
+            norms = np.asarray(m["guard_stats"]["norm"])[:nb]
+            extra["quarantined"] = int(q.sum())
+            extra["clipped"] = int(c.sum())
+            self._guard.observe(norms[~q], quarantined=extra["quarantined"],
+                                clipped=extra["clipped"])
         return (m["train_loss"], m["diag"], m["host_seconds"],
-                m["device_seconds"], {"staleness_mean": m["staleness_mean"],
-                                      "staleness_max": m["staleness_max"]})
+                m["device_seconds"], extra)
 
     def _resolve_pending_eval(self):
         if self._pending_eval is not None:
@@ -625,6 +864,12 @@ class FederatedTrainer:
                else self._run_round_vectorized if self.cfg.vectorize
                else self._run_round_serial)
         train_loss, diag, ingest_host, ingest_dev, extra = run(t)
+        # supervised-restart accounting (DESIGN.md §12): the staging
+        # ring's cumulative restart counter, differenced per round
+        restarts = self._pipeline.restart_count
+        if restarts != self._ingest_restarts_seen:
+            extra["ingest_restarts"] = restarts - self._ingest_restarts_seen
+            self._ingest_restarts_seen = restarts
         rec = RoundRecord(
             round=t, train_loss=train_loss,
             seconds=time.perf_counter() - tic,
@@ -835,6 +1080,26 @@ class FederatedTrainer:
                 "runtime": {"config": self._runtime.config_dict(),
                             "state": st.runtime_state or {}},
             }
+        elif self._runtime is not None:
+            # sync round-deadline regime: the runtime model rides the
+            # sampling lock exactly like the async one, and its pre-draw
+            # state is captured in the same per-round caps
+            aux_json["sync_runtime"] = {
+                "config": self._runtime.config_dict(),
+                "state": st.runtime_state or {}}
+        if (self._guard is not None or self.fault_plan is not None
+                or self.cfg.round_deadline is not None):
+            # chaos-hardening echo (DESIGN.md §12): the guard window is
+            # consumed-round state (observe() runs at consumption, never
+            # ahead of it), so it checkpoints verbatim — resume bitwise
+            aux_json["chaos"] = {
+                "round_deadline": self.cfg.round_deadline,
+                "fault_plan": (None if self.fault_plan is None
+                               else self.fault_plan.config_dict()),
+                "guard": (None if self._guard is None else
+                          {"config": self._guard.config.config_dict(),
+                           "state": self._guard.state_dict()}),
+            }
         return ckpt.save(ckpt_dir, st.round,
                          {"params": st.params,
                           "server_state": st.server_state},
@@ -862,6 +1127,11 @@ class FederatedTrainer:
                 "restore() requires a freshly constructed trainer that "
                 "has not run any rounds — use FederatedTrainer.resume()")
         from repro.checkpoint import checkpoint as ckpt
+        # self-healing resume (DESIGN.md §12): verify content digests and
+        # fall back to the newest INTACT step when the latest is corrupt
+        # (truncated / bit-flipped / missing manifest); an explicitly
+        # requested step never falls back silently — it fails loudly
+        step = ckpt.resolve_step(ckpt_dir, step)
         like = {"params": self.params, "server_state": self.server_state}
         state = ckpt.restore(ckpt_dir, like, step=step)
         arrays, meta = ckpt.load_aux(ckpt_dir, step)
@@ -930,6 +1200,54 @@ class FederatedTrainer:
                     f"{rt['config']}, trainer's is "
                     f"{self._runtime.config_dict()} — resume with the "
                     "original runtime model")
+        meta_sync_rt = meta.get("sync_runtime")
+        if meta_sync_rt is not None:
+            if self._engine is not None or self._runtime is None:
+                raise ValueError(
+                    "checkpoint carries a sync-deadline runtime model but "
+                    "the trainer was not built with one — resume with the "
+                    "original ExecConfig(round_deadline=...) and runtime")
+            if meta_sync_rt["config"] != self._runtime.config_dict():
+                raise ValueError(
+                    f"checkpoint sync runtime model was built as "
+                    f"{meta_sync_rt['config']}, trainer's is "
+                    f"{self._runtime.config_dict()} — resume with the "
+                    "original runtime model")
+        meta_chaos = meta.get("chaos")
+        if meta_chaos is not None:
+            # the chaos configuration is part of the trajectory: the
+            # fault plan decides the injected faults, the guard window
+            # decides the thresholds, the deadline decides the folds —
+            # any mismatch silently diverges, so fail at restore
+            mine_chaos = {
+                "round_deadline": self.cfg.round_deadline,
+                "fault_plan": (None if self.fault_plan is None
+                               else self.fault_plan.config_dict()),
+                "guard_config": (None if self._guard is None
+                                 else self._guard.config.config_dict()),
+            }
+            saved_chaos = {
+                "round_deadline": meta_chaos.get("round_deadline"),
+                "fault_plan": meta_chaos.get("fault_plan"),
+                "guard_config": (meta_chaos["guard"] or {}).get("config")
+                                if meta_chaos.get("guard") is not None
+                                else None,
+            }
+            # JSON round-trips tuples as lists: normalize through the
+            # same encoder before comparing
+            import json as _json
+            if (_json.loads(_json.dumps(mine_chaos, default=float))
+                    != saved_chaos):
+                raise ValueError(
+                    f"checkpoint chaos configuration {saved_chaos} does "
+                    f"not match the trainer's {mine_chaos} — resume with "
+                    "the original guard/fault-plan/deadline configuration")
+        elif (self._guard is not None or self.fault_plan is not None
+              or self.cfg.round_deadline is not None):
+            raise ValueError(
+                "trainer was built with chaos hardening (guard/fault "
+                "plan/deadline) but the checkpoint has none — resume "
+                "with the original configuration")
         self.params = state["params"]
         self.server_state = state["server_state"]
         if self.mesh is not None:
@@ -953,6 +1271,13 @@ class FederatedTrainer:
         self.history = [RoundRecord(**r) for r in meta["history"]]
         if meta["sampler"].get("state"):
             self.sampler.load_state_dict(meta["sampler"]["state"])
+        if meta.get("sync_runtime", {}).get("state"):
+            self._runtime.load_state_dict(meta["sync_runtime"]["state"])
+        if (meta.get("chaos") or {}).get("guard") is not None \
+                and self._guard is not None:
+            gst = meta["chaos"]["guard"].get("state")
+            if gst:
+                self._guard.load_state_dict(gst)
         if self._engine is not None:
             from repro.core.async_engine import BufferEntry
             eng = self._engine
@@ -989,14 +1314,16 @@ class FederatedTrainer:
                num_clients: int, data, cfg=None, eval_fn=None, *,
                algo: Optional[AlgoConfig] = None,
                sampler: Optional[ClientSampler] = None,
-               runtime=None,
+               runtime=None, fault_plan=None,
                step: Optional[int] = None) -> "FederatedTrainer":
         """Fresh-process resume: construct the trainer exactly as the
         original run did, then restore the saved TrainerState. ``run()``
         continues from the checkpointed round and reproduces the
         uninterrupted run bit for bit — including mid-buffer async
-        state (pass the same ``runtime`` model the original run used)."""
+        state (pass the same ``runtime`` model — and, chaos-hardened,
+        the same ``fault_plan`` — the original run used)."""
         algo, cfg = _coerce_cfg(cfg, algo)
         tr = cls(loss_fn, params, num_clients, data, cfg, eval_fn,
-                 algo=algo, sampler=sampler, runtime=runtime)
+                 algo=algo, sampler=sampler, runtime=runtime,
+                 fault_plan=fault_plan)
         return tr.restore(ckpt_dir, step=step)

@@ -86,13 +86,17 @@ class BufferedAsyncEngine:
     def __init__(self, *, pipeline, wave_update: Callable,
                  fold: Callable, runtime_take: Callable,
                  buffer_size: int, alpha: float = 0.5,
-                 concurrency: int = 1, prefetch: bool = True):
+                 concurrency: int = 1, prefetch: bool = True,
+                 deadline: float = None, fold_extras: Callable = None,
+                 fold_returns_stats: bool = False):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         if concurrency < 1:
             raise ValueError(f"concurrency must be >= 1, got {concurrency}")
         if alpha < 0:
             raise ValueError(f"staleness alpha must be >= 0, got {alpha}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be positive, got {deadline}")
         self.pipeline = pipeline
         self.wave_update = wave_update
         self.fold = fold
@@ -101,6 +105,19 @@ class BufferedAsyncEngine:
         self.alpha = float(alpha)
         self.concurrency = int(concurrency)
         self.prefetch = prefetch
+        # round deadline in virtual seconds (DESIGN.md §12): stop
+        # collecting arrivals once the next one would land more than
+        # ``deadline`` past the round's start and fold the PARTIAL
+        # buffer (at least one arrival always folds — an empty fold is
+        # undefined). Stragglers stay in flight and fold later with
+        # their staleness discount; nothing is discarded.
+        self.deadline = None if deadline is None else float(deadline)
+        # chaos hooks (trainer-owned, DESIGN.md §12): fold_extras maps
+        # the arrival list to extra jit inputs (fault codes, guard
+        # threshold); fold_returns_stats marks a fold returning a 4th
+        # guard-stats element that run_server_round surfaces in metrics
+        self.fold_extras = fold_extras
+        self.fold_returns_stats = fold_returns_stats
         # ---- virtual-time state (all checkpointed — see api.save) ----
         self.clock = 0.0               # virtual time of the last arrival
         self.seq = 0                   # global dispatch counter (tiebreak)
@@ -156,6 +173,8 @@ class BufferedAsyncEngine:
         arrivals: List[BufferEntry] = []
         host_s = dev_s = 0.0
         empty_streak = 0
+        start_clock = self.clock
+        deadline_fired = 0
         while len(arrivals) < self.buffer_size:
             # top up in-flight waves: always at least one pending
             # arrival, and up to `concurrency` waves in flight
@@ -173,6 +192,14 @@ class BufferedAsyncEngine:
                     raise RuntimeError(
                         f"{empty_streak} consecutive waves dropped every "
                         "client — runtime model starves the buffer")
+            if (self.deadline is not None and arrivals
+                    and self._heap[0][0] > start_clock + self.deadline):
+                # partial-buffer fold (DESIGN.md §12): the next arrival
+                # would land past the deadline — fold what we have; the
+                # stragglers stay in flight and fold later, discounted
+                # by whatever staleness the wait earned them
+                deadline_fired = 1
+                break
             finish, _, entry = heapq.heappop(self._heap)
             self.clock = max(self.clock, finish)
             arrivals.append(entry)
@@ -184,9 +211,15 @@ class BufferedAsyncEngine:
         ids = np.asarray([e.client for e in arrivals], np.int32)
         stacked = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
                                *[e.delta for e in arrivals])
-        params, server_state, diag = self.fold(
+        extras = self.fold_extras(arrivals) if self.fold_extras else ()
+        out = self.fold(
             server_state, params, stacked, jax.numpy.asarray(ids),
-            jax.numpy.asarray(weights))
+            jax.numpy.asarray(weights), *extras)
+        gstats = None
+        if self.fold_returns_stats:
+            params, server_state, diag, gstats = out
+        else:
+            params, server_state, diag = out
         self.version += 1
         metrics = {
             "train_loss": float(np.mean([e.loss for e in arrivals])),
@@ -195,6 +228,11 @@ class BufferedAsyncEngine:
             "diag": diag,
             "host_seconds": host_s,
             "device_seconds": dev_s,
+            "n_arrivals": len(arrivals),
+            "deadline_fired": deadline_fired,
+            "deadline_dropped": (self.buffer_size - len(arrivals)
+                                 if deadline_fired else 0),
+            "guard_stats": gstats,
         }
         return params, server_state, metrics
 

@@ -21,15 +21,12 @@ Client variants (selected by the server algorithm):
   ga     FedGA:   local model initialized at w - beta*eta_l*Delta_prev
 
 The host-ingest helpers that used to live here (``stack_batches`` /
-``stack_cohort`` / ``stack_cohort_into`` / ``CohortPrefetcher``) moved
-to the staged ingest subsystem — ``repro.ingest`` (DESIGN.md §10).
-Importing them from this module still works for one release but warns
-(module ``__getattr__`` shim below, CI-tested like the PR 3 config
-split); library code imports ``repro.ingest`` directly.
+``stack_cohort`` / ``stack_cohort_into`` / ``CohortPrefetcher``) live in
+the staged ingest subsystem — ``repro.ingest`` (DESIGN.md §10); the
+one-release deprecation aliases are gone.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -38,21 +35,6 @@ import jax.numpy as jnp
 from repro.optim.optimizers import Optimizer, get_optimizer
 
 PyTree = Any
-
-# deprecated name -> its home in the ingest subsystem
-_MOVED_TO_INGEST = ("stack_batches", "stack_cohort", "stack_cohort_into",
-                    "CohortPrefetcher")
-
-
-def __getattr__(name: str):
-    if name in _MOVED_TO_INGEST:
-        warnings.warn(
-            f"repro.core.client.{name} moved to repro.ingest.{name} "
-            "(DESIGN.md §10); this alias will be removed next release",
-            DeprecationWarning, stacklevel=2)
-        import repro.ingest
-        return getattr(repro.ingest, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _build_local_update(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],

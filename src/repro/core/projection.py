@@ -44,6 +44,18 @@ def tree_norm(a: PyTree) -> jnp.ndarray:
     return jnp.sqrt(tree_sqnorm(a))
 
 
+def tree_nonfinite_count(a: PyTree) -> jnp.ndarray:
+    """Number of non-finite (NaN/Inf) entries over the flattened vector,
+    f32 scalar — the update guard's validity reduction (DESIGN.md §12).
+    Dim-preserving per-leaf sums like tree_vdot, so it shares the HBM
+    pass with the reduction scalars and GSPMD psums the partials; the
+    fused Pallas form is kernels/feddpc_project.guard_dots."""
+    parts = jax.tree.leaves(
+        jax.tree.map(lambda x: jnp.sum((~jnp.isfinite(x)).astype(jnp.float32)),
+                     a))
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.zeros((), jnp.float32)
+
+
 def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
     """alpha * x + y (alpha scalar)."""
     return jax.tree.map(

@@ -32,9 +32,81 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import client as client_mod
+from repro.core import faults as faults_mod
+from repro.core import projection as proj
 from repro.core.baselines import ServerAlgo, client_kwargs, make_algorithm
 
 PyTree = Any
+
+# out-of-range id for quarantined / deadline-dropped rows: FedVARP's
+# masked scatter (mode="drop") only ignores OUT-OF-RANGE ids — an
+# in-range id would still clobber that client's table row even with its
+# client_mask bit cleared (DESIGN.md §12)
+ID_SENTINEL = 2_147_483_647      # jnp.iinfo(jnp.int32).max
+
+
+def _bc(v: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (K,) vector over a client-stacked leaf."""
+    return v.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def apply_fault_codes(deltas: PyTree, fault_codes: jnp.ndarray,
+                      magnitude: float) -> PyTree:
+    """Chaos harness (core/faults.py): corrupt the coded clients' rows of
+    a client-stacked delta tree — CODE_NAN fills with NaN, CODE_EXPLODE
+    multiplies by ``magnitude`` — AFTER local training, BEFORE
+    validation/aggregation: exactly where a byzantine or numerically-
+    diverged client would surface in a real deployment. Shared by the
+    fused sync round and the buffered-async fold."""
+    mult = jnp.where(fault_codes == faults_mod.CODE_EXPLODE,
+                     jnp.float32(magnitude), jnp.float32(1.0))
+    return jax.tree.map(
+        lambda d: jnp.where(
+            _bc(fault_codes == faults_mod.CODE_NAN, d), jnp.nan,
+            d.astype(jnp.float32) * _bc(mult, d)).astype(d.dtype),
+        deltas)
+
+
+def apply_guard(deltas: PyTree, client_ids: jnp.ndarray, client_mask,
+                guard_thresh, guard_cfg):
+    """Update-guard validation (core/guards.py, DESIGN.md §12) on a
+    client-stacked delta tree: per-row ||Δ||² + non-finite count (the
+    same dim-preserving reduction pass FedDPC's projection scalars ride;
+    fused Pallas form in kernels/feddpc_project.guard_dots), quarantine
+    on any non-finite entry or norm > quarantine_mult x thresh, clip to
+    clip_mult x thresh otherwise.
+
+    Quarantined rows are ZEROED in-program — client_mask folding alone is
+    NOT enough, because a masked row still multiplies into the masked
+    means (0 x NaN = NaN) — their ids are replaced by the out-of-range
+    sentinel, and they fold into ``client_mask``, so every server rule
+    stays exact with zero rule changes. With thresh = +inf and finite
+    rows every multiplier is exactly 1.0: the guarded computation IS the
+    unguarded one. Returns (deltas, client_ids, client_mask, stats) with
+    stats = {"quarantined": (K,) bool, "clipped": (K,) bool,
+    "norm": (K,) f32 post-clip norms}."""
+    sq = jax.vmap(proj.tree_sqnorm)(deltas)                   # (K,)
+    nfin = jax.vmap(proj.tree_nonfinite_count)(deltas)        # (K,)
+    norm = jnp.sqrt(sq)
+    thresh = jnp.asarray(guard_thresh, jnp.float32)
+    q_lim = jnp.float32(guard_cfg.quarantine_mult) * thresh
+    c_lim = jnp.float32(guard_cfg.clip_mult) * thresh
+    bad = (nfin > 0) | (norm > q_lim)
+    # clip multiplier is EXACTLY 1.0 below the limit (and always 1.0
+    # while thresh is +inf); a NaN norm compares False, so a non-finite
+    # row takes cs=1.0 — harmless, it is where-selected to zero below
+    cs = jnp.where(norm > c_lim, c_lim / jnp.maximum(norm, proj.EPS),
+                   jnp.float32(1.0))
+    clipped = jnp.logical_and(~bad, norm > c_lim)
+    deltas = jax.tree.map(
+        lambda d: jnp.where(_bc(bad, d), jnp.float32(0.0),
+                            d.astype(jnp.float32) * _bc(cs, d)
+                            ).astype(d.dtype), deltas)
+    client_ids = jnp.where(bad, ID_SENTINEL, client_ids.astype(jnp.int32))
+    client_mask = ~bad if client_mask is None else client_mask & ~bad
+    stats = {"quarantined": bad, "clipped": clipped,
+             "norm": jnp.minimum(norm, c_lim)}
+    return deltas, client_ids, client_mask, stats
 
 
 def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
@@ -46,9 +118,40 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       pad_clients: bool = False,
                       real_clients: int = None,
                       shard_templates: Tuple[PyTree, PyTree] = None,
-                      shardings=None):
+                      shardings=None,
+                      guard: bool = False, guard_cfg=None,
+                      inject_faults: bool = False,
+                      deadline_mask: bool = False,
+                      fault_magnitude: float = 1e12):
     """Returns cohort_round(server_state, params, batches, masks,
-    client_ids) -> (new_params, new_server_state, losses, diag).
+    client_ids, *extras) -> (new_params, new_server_state, losses, diag
+    [, guard_stats]).
+
+    The chaos-hardening extras (DESIGN.md §12) extend the signature in a
+    FIXED order — ``inject_faults`` appends a (K,) int32 ``fault_codes``
+    input (0 = pass through, faults.CODE_NAN fills the client's delta
+    with NaN, faults.CODE_EXPLODE multiplies it by ``fault_magnitude``),
+    ``deadline_mask`` appends a (K,) bool ``live_mask`` (False = the
+    client timed out: its row folds out of ``client_mask`` and its id is
+    replaced by an out-of-range sentinel so FedVARP's scatter drops it),
+    and ``guard`` appends a scalar f32 ``guard_thresh`` and a trailing
+    ``guard_stats`` output.
+
+    The guard validates every delta BEFORE the server rule sees it:
+    per-client ||Δ||² + non-finite count (the reduction-pass sweep the
+    FedDPC scalars come from; fused Pallas form in
+    kernels/feddpc_project.guard_dots), quarantine on any non-finite
+    entry or ||Δ|| > quarantine_mult x thresh, clip to
+    clip_mult x thresh otherwise. Quarantined deltas are ZEROED in-
+    program — client_mask folding alone is NOT enough, because FedDPC's
+    scale=0 still multiplies the delta (0 x NaN = NaN) — their ids are
+    sentineled, and their rows fold into ``client_mask``, so every
+    server rule stays exact with zero rule changes. With thresh = +inf
+    and no non-finite entries every multiplier is exactly 1.0 and the
+    guarded round computes the unguarded round's values.
+    ``guard_stats`` = {"quarantined": (K,) bool, "clipped": (K,) bool,
+    "norm": (K,) f32 post-clip norms} — the trainer filters real rows
+    and feeds accepted norms back into the rolling threshold window.
 
     batches: pytree with leading axes (K, M, ...) — K participating
     clients, M padded minibatches each; masks (K, M) bool marks the valid
@@ -107,9 +210,16 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         mesh is not None and model_axis in mesh.axis_names
         and dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis] > 1)
 
-    def cohort_round(server_state, params, batches, masks, client_ids):
+    def cohort_round(server_state, params, batches, masks, client_ids,
+                     *extras):
+        it = iter(extras)
+        fault_codes = next(it) if inject_faults else None
+        live_mask = next(it) if deadline_mask else None
+        guard_thresh = next(it) if guard else None
         extra = algo.client_extra(server_state)
         deltas, losses = local(params, batches, masks, extra)
+        if inject_faults:
+            deltas = apply_fault_codes(deltas, fault_codes, fault_magnitude)
         if real_clients is not None:
             # pad mask from the caller's pad count: rows >= real_clients
             # are padding, everything below is a sampled client — even
@@ -121,9 +231,19 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             cm = masks.any(axis=1)
         else:
             cm = None
+        if deadline_mask:
+            client_ids = jnp.where(live_mask, client_ids.astype(jnp.int32),
+                                   ID_SENTINEL)
+            cm = live_mask if cm is None else cm & live_mask
+        gstats = None
+        if guard:
+            deltas, client_ids, cm, gstats = apply_guard(
+                deltas, client_ids, cm, guard_thresh, guard_cfg)
         new_params, new_state, diag = algo.step(
             server_state, params, deltas, client_ids, eta_g, 0,
             client_mask=cm, model_sharded=model_sharded)
+        if guard:
+            return new_params, new_state, losses, diag, gstats
         return new_params, new_state, losses, diag
 
     if not jit:

@@ -7,9 +7,6 @@
 # adapters, the stacking stage, the depth-N staging ring, device
 # placement, the orchestrating CohortIngestPipeline, the array-backed
 # synthetic image pipeline, and the disk-backed dataset sources.
-# (core/client.py's stacking/prefetch names, core/datasources.py and
-# data/pipeline.py remain as deprecated shims over this package for one
-# release.)
 from repro.ingest.datasets import (CIFAR10Source, CIFAR100Source,
                                    DiskImageSource, TinyImageNetSource,
                                    augment_images, decode_images)

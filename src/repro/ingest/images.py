@@ -1,6 +1,6 @@
 """Array-backed federated image pipeline: per-client datasets + seeded
-batch iteration (moved here from data/pipeline.py, which remains as a
-deprecated shim for one release — DESIGN.md §10).
+batch iteration (moved here from the retired
+data/pipeline.py — DESIGN.md §10).
 
 Mirrors the paper's setup: each client holds a Dirichlet-skewed shard;
 every local epoch shuffles with a round-dependent seed; batches are padded

@@ -86,7 +86,9 @@ class CohortIngestPipeline:
                  device_stage: bool = True,
                  placer: Optional[CohortPlacer] = None,
                  pad_to: Optional[int] = None,
-                 stall_timeout: Optional[float] = None):
+                 stall_timeout: Optional[float] = None,
+                 max_restarts: int = 0, restart_backoff: float = 0.05,
+                 crash_hook: Optional[Callable[[int, int], bool]] = None):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.source = source
@@ -100,6 +102,16 @@ class CohortIngestPipeline:
         self.placer = placer if placer is not None else CohortPlacer()
         self.pad_to = pad_to
         self.stall_timeout = stall_timeout
+        # producer supervision (DESIGN.md §12): a produce raise is
+        # retried up to max_restarts times (lifetime budget) with
+        # exponential backoff; crash_hook(t, attempt) -> bool is the
+        # fault-injection seam (core/faults.FaultPlan.ingest_crash)
+        self.max_restarts = max(0, int(max_restarts))
+        self.restart_backoff = float(restart_backoff)
+        self._crash_hook = crash_hook
+        self._attempts: dict = {}       # round -> produce attempts so far
+        self._sampled: dict = {}        # round -> drawn cohort (retry cache)
+        self._blocking_restarts = 0     # stage_blocking's share of the tally
         self._max_batches: Optional[int] = None
         self._ring: Optional[CohortPrefetcher] = None
         self._blocking_slot: dict = {}   # stage_blocking's private buffer
@@ -138,8 +150,17 @@ class CohortIngestPipeline:
         return ids
 
     def _stage_host(self, t: int, slot: dict):
-        """sample -> read -> stack into the slot's buffers."""
-        clients = self.sample_fn(t)
+        """sample -> read -> stack into the slot's buffers.
+
+        The drawn cohort is cached per round until staging SUCCEEDS: a
+        supervised producer retry must not call ``sample_fn`` again —
+        the trainer's sampler snapshots pre-draw RNG state per round,
+        and a re-draw would shift every later round's schedule."""
+        if t in self._sampled:
+            clients = self._sampled[t]
+        else:
+            clients = self.sample_fn(t)
+            self._sampled[t] = clients
         lists = self.client_lists(clients, t)
         batches, masks = stack_cohort_into(lists, self._max_batches, slot,
                                            pad_to=self.pad_to)
@@ -148,10 +169,20 @@ class CohortIngestPipeline:
     def _produce(self, t: int, slot: dict):
         """Ring-producer body. In device-staged mode the place stage
         runs here too, so the H2D wait lands on this thread (overlapped
-        with device compute) instead of at dispatch."""
+        with device compute) instead of at dispatch. The crash hook
+        fires BEFORE sampling so an injected crash + restart replays
+        the exact no-fault RNG stream."""
+        attempt = self._attempts.get(t, 0)
+        self._attempts[t] = attempt + 1
+        if self._crash_hook is not None and self._crash_hook(t, attempt):
+            raise RuntimeError(
+                f"injected ingest producer crash at round {t} "
+                f"(attempt {attempt})")
         clients, batches, masks, ids = self._stage_host(t, slot)
         if self.device_stage:
             batches, masks, ids = self.placer.place(batches, masks, ids)
+        self._sampled.pop(t, None)
+        self._attempts.pop(t, None)
         return clients, batches, masks, ids
 
     def get(self, t: int) -> StagedCohort:
@@ -162,7 +193,9 @@ class CohortIngestPipeline:
         if self._ring is None:
             self._ring = CohortPrefetcher(self._produce, t, self.rounds,
                                           slots=self.depth,
-                                          stall_timeout=self.stall_timeout)
+                                          stall_timeout=self.stall_timeout,
+                                          max_restarts=self.max_restarts,
+                                          restart_backoff=self.restart_backoff)
         tic = time.perf_counter()
         (clients, batches, masks, ids), slot = self._ring.get(t)
         host_s = time.perf_counter() - tic
@@ -186,8 +219,26 @@ class CohortIngestPipeline:
         valid because the caller synchronizes each round before staging
         the next (release() is a no-op here)."""
         tic = time.perf_counter()
-        clients, batches, masks, ids = self._stage_host(
-            t, self._blocking_slot)
+        while True:
+            try:
+                attempt = self._attempts.get(t, 0)
+                self._attempts[t] = attempt + 1
+                if (self._crash_hook is not None
+                        and self._crash_hook(t, attempt)):
+                    raise RuntimeError(
+                        f"injected ingest producer crash at round {t} "
+                        f"(attempt {attempt})")
+                clients, batches, masks, ids = self._stage_host(
+                    t, self._blocking_slot)
+                break
+            except BaseException:
+                if self._blocking_restarts >= self.max_restarts:
+                    raise
+                self._blocking_restarts += 1
+                if self.restart_backoff > 0:
+                    time.sleep(self.restart_backoff * (2 ** attempt))
+        self._sampled.pop(t, None)
+        self._attempts.pop(t, None)
         host_s = time.perf_counter() - tic
         tic = time.perf_counter()
         batches, masks, ids = self.placer.place(batches, masks, ids)
@@ -200,6 +251,14 @@ class CohortIngestPipeline:
     def started(self) -> bool:
         """True once the staging ring exists (some round was prefetched)."""
         return self._ring is not None
+
+    @property
+    def restart_count(self) -> int:
+        """Total supervised producer recoveries so far (both the
+        prefetch ring's and stage_blocking's), RoundRecord's
+        ``ingest_restarts`` source."""
+        ring = self._ring.restart_count if self._ring is not None else 0
+        return ring + self._blocking_restarts
 
     def close(self):
         """Stop the staging ring. The source is CALLER-owned (sweeps

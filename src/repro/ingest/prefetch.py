@@ -28,6 +28,8 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+import time
+import traceback
 from typing import Optional
 
 
@@ -43,18 +45,31 @@ class CohortPrefetcher:
     ``produce_fn`` (slow disk read, deadlocked source) previously spun
     the consumer forever — the 1s poll only escaped on a *dead* thread.
     With a deadline the consumer raises, naming the stuck round, so the
-    caller can surface the hang instead of inheriting it."""
+    caller can surface the hang instead of inheriting it.
+
+    ``max_restarts`` supervises the producer (DESIGN.md §12): a
+    ``produce_fn`` raise is retried for the SAME round up to
+    ``max_restarts`` times total across the ring's lifetime, with
+    bounded exponential backoff (``restart_backoff * 2**attempt``)
+    between tries; ``restart_count`` tallies the recoveries. Past the
+    budget the failure propagates exactly as before: the consumer's
+    next ``get`` raises, carrying the producer's traceback text."""
 
     def __init__(self, produce_fn, start: int, end: Optional[int],
-                 slots: int = 2, stall_timeout: Optional[float] = None):
+                 slots: int = 2, stall_timeout: Optional[float] = None,
+                 max_restarts: int = 0, restart_backoff: float = 0.0):
         self._end = end
         self._stall_timeout = stall_timeout
+        self._max_restarts = max(0, int(max_restarts))
+        self._restart_backoff = float(restart_backoff)
+        self.restart_count = 0
         self._ready = queue.Queue()
         self._free = queue.Queue()
         self.slots = max(1, slots)
         for _ in range(self.slots):
             self._free.put({})
         self._exc = None
+        self._exc_tb = None             # producer traceback text, for get()
         self._stopped = False
         self._thread = threading.Thread(
             target=self._loop, args=(produce_fn, start, end), daemon=True,
@@ -69,11 +84,28 @@ class CohortPrefetcher:
                 slot = self._free.get()
                 if slot is None:        # stop() sentinel
                     return
-                item = produce_fn(t, slot)
+                item = self._produce_supervised(produce_fn, t, slot)
                 self._ready.put((t, item, slot))
         except BaseException as e:      # surfaced on the next get()
             self._exc = e
+            self._exc_tb = traceback.format_exc()
             self._ready.put((None, None, None))
+
+    def _produce_supervised(self, produce_fn, t, slot):
+        """Retry produce_fn(t, slot) against a lifetime restart budget.
+        Backoff doubles per retry of the same round so a persistently
+        failing source drains the budget slowly instead of hot-looping."""
+        attempt = 0
+        while True:
+            try:
+                return produce_fn(t, slot)
+            except BaseException:
+                if self.restart_count >= self._max_restarts:
+                    raise
+                self.restart_count += 1
+                if self._restart_backoff > 0:
+                    time.sleep(self._restart_backoff * (2 ** attempt))
+                attempt += 1
 
     def get(self, t: int):
         if self._end is not None and t >= self._end:
@@ -103,7 +135,7 @@ class CohortPrefetcher:
                             f"prefetch producer exited (rounds consumed "
                             f"or stopped) — round {t} was never staged; "
                             "set ExecConfig.prefetch=False to re-run rounds"
-                        ) from self._exc
+                            + self._cause_suffix()) from self._exc
                 waited += poll
                 if (self._stall_timeout is not None
                         and waited >= self._stall_timeout):
@@ -119,13 +151,25 @@ class CohortPrefetcher:
             # staged BEFORE the failure is still valid and returned above.
             # Re-poison so every later get() fails too instead of hanging.
             self._ready.put((None, None, None))
-            raise RuntimeError("cohort prefetch thread failed") from self._exc
+            # the producer's own traceback is re-raised inline: `from`
+            # chaining alone loses the frames inside produce_fn when the
+            # consumer's RuntimeError is caught and reported elsewhere
+            raise RuntimeError("cohort prefetch thread failed"
+                               + self._cause_suffix()) from self._exc
         if got != t:
             raise RuntimeError(
                 f"prefetched round {got} but round {t} was requested — "
                 "prefetching requires run_round(t) in sequential order "
                 "(set ExecConfig.prefetch=False for out-of-order rounds)")
         return item, slot
+
+    def _cause_suffix(self) -> str:
+        """The producer's formatted traceback, for re-raise messages —
+        the frames inside produce_fn are otherwise lost when the
+        consumer-side RuntimeError is caught and reported elsewhere."""
+        if self._exc_tb is None:
+            return ""
+        return "\nproducer traceback:\n" + self._exc_tb
 
     def release(self, slot: dict):
         self._free.put(slot)

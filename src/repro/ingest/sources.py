@@ -1,6 +1,5 @@
 """Pluggable client data sources — the READ stage of the ingest pipeline
-(DESIGN.md §10; moved here from core/datasources.py, which remains as a
-deprecated shim for one release).
+(DESIGN.md §10; moved here from the retired core/datasources.py).
 
 ``DataSource`` replaces the bare ``batch_fn(client, round) -> list``
 callable the trainer historically took: a source yields one client's

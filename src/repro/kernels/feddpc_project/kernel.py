@@ -59,6 +59,42 @@ def fused_dots(d2: jnp.ndarray, p2: jnp.ndarray, *, rows: int = DEFAULT_ROWS,
     )(d2, p2)
 
 
+def _guard_reduce_kernel(d_ref, p_ref, out_ref):
+    """Reduction pass + guard epilogue in ONE sweep (DESIGN.md §12): the
+    three FedDPC dots plus the update-guard's non-finite count, so
+    validating a delta costs zero extra HBM traffic over computing its
+    reduction scalars. Non-finite entries are zeroed before the dots —
+    exact for clean deltas, and the dots stay finite (usable) even when
+    the guard column flags the client for quarantine."""
+    d = d_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    finite = jnp.isfinite(d)
+    df = jnp.where(finite, d, 0.0)
+    out_ref[0, 0] = jnp.sum(df * p)
+    out_ref[0, 1] = jnp.sum(df * df)
+    out_ref[0, 2] = jnp.sum(p * p)
+    out_ref[0, 3] = jnp.sum((~finite).astype(jnp.float32))
+
+
+def guard_dots(d2: jnp.ndarray, p2: jnp.ndarray, *, rows: int = DEFAULT_ROWS,
+               interpret: bool = True) -> jnp.ndarray:
+    """d2/p2: (M, 128). Returns (G, 4) per-block partials of
+    [<d,p>, <d,d>, <p,p>, nonfinite(d)] — ``fused_dots`` with the guard
+    column riding the same pass; sum over G outside."""
+    m = d2.shape[0]
+    rows = min(rows, m)
+    grid = (pl.cdiv(m, rows),)
+    return pl.pallas_call(
+        _guard_reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 4), jnp.float32),
+        interpret=interpret,
+    )(d2, p2)
+
+
 def _batched_epilogue_kernel(coef_ref, scale_ref, eta_ref, d_ref, p_ref,
                              w_ref, w_out_ref, dt_out_ref):
     """Whole-cohort server epilogue on one (rows, 128) tile:

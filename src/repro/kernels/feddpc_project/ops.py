@@ -45,6 +45,17 @@ def fused_dots_flat(d: jnp.ndarray, p: jnp.ndarray, interpret: bool = True):
     return partials.sum(axis=0)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def guard_dots_flat(d: jnp.ndarray, p: jnp.ndarray, interpret: bool = True):
+    """-> (4,) = [<d,p>, <d,d>, <p,p>, nonfinite(d)]: the reduction pass
+    with the update-guard's validity column fused into the same HBM
+    sweep (DESIGN.md §12). The zero padding added by ``_to_2d`` is
+    finite, so it never inflates the non-finite count."""
+    d2, _ = _to_2d(d)
+    p2, _ = _to_2d(p)
+    return K.guard_dots(d2, p2, interpret=interpret).sum(axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=("lam", "interpret"))
 def project_and_scale_flat(d: jnp.ndarray, p: jnp.ndarray, lam: float = 1.0,
                            interpret: bool = True) -> jnp.ndarray:

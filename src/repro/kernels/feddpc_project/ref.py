@@ -12,6 +12,17 @@ def dots_ref(d2: jnp.ndarray, p2: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack([jnp.sum(df * pf), jnp.sum(df * df), jnp.sum(pf * pf)])
 
 
+def guard_dots_ref(d2: jnp.ndarray, p2: jnp.ndarray) -> jnp.ndarray:
+    """-> (4,) = [<d,p>, <d,d>, <p,p>, nonfinite(d)] with non-finite
+    entries of d zeroed before the dots (oracle for kernel.guard_dots)."""
+    df = d2.astype(jnp.float32)
+    pf = p2.astype(jnp.float32)
+    finite = jnp.isfinite(df)
+    dz = jnp.where(finite, df, 0.0)
+    return jnp.stack([jnp.sum(dz * pf), jnp.sum(dz * dz), jnp.sum(pf * pf),
+                      jnp.sum((~finite).astype(jnp.float32))])
+
+
 def epilogue_ref(d2, p2, coef, scale):
     return (scale * (d2.astype(jnp.float32)
                      - coef * p2.astype(jnp.float32))).astype(d2.dtype)

@@ -1,0 +1,43 @@
+# Launch environment hygiene for benchmarks and training runs.
+#
+# Source this before any python entry point (benchmarks, launch/train.py,
+# CI bench lanes):
+#
+#     source src/repro/launch/env.sh            # defaults
+#     REPRO_HOST_DEVICES=8 source src/repro/launch/env.sh
+#
+# Every setting is additive and overridable: values already exported by
+# the caller win, so CI lanes can pin their own device counts and local
+# users their own allocator.
+
+# --- allocator: tcmalloc beats glibc malloc for the host-side staging
+# ring's large short-lived cohort buffers, but only preload it where it
+# actually exists (CI runners and dev boxes differ)
+if [ -z "${LD_PRELOAD:-}" ]; then
+  for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+              /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+    if [ -e "${_tcm}" ]; then
+      export LD_PRELOAD="${_tcm}"
+      break
+    fi
+  done
+  unset _tcm
+fi
+# numpy's big staging allocations trip tcmalloc's large-alloc report;
+# silence it (60 GB threshold) instead of spamming every bench log
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# --- log hygiene: drop TF/XLA C++ chatter below error level
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# --- dtype discipline: the repo's numerics are f32-by-default with
+# explicit f64 host state (RNG caches); never let x64 flip globally
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-0}"
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
+
+# --- forced host devices: the CPU-backed sharded lanes tile a virtual
+# device mesh; REPRO_HOST_DEVICES > 0 appends the XLA flag (callers that
+# already set XLA_FLAGS keep whatever they exported — the flags compose)
+if [ "${REPRO_HOST_DEVICES:-0}" -gt 0 ] 2>/dev/null; then
+  export XLA_FLAGS="${XLA_FLAGS:+${XLA_FLAGS} }--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi

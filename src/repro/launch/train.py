@@ -16,7 +16,11 @@ with --prefetch-depth/--host-staged steering the staging ring —
 DESIGN.md §2 — per-leaf model-sharded params for >HBM configs), and
 --ckpt-dir/--ckpt-every/--resume checkpoint the full TrainerState so an
 interrupted run continues exactly where it stopped (mesh-shape changes
-across save/resume included).
+across save/resume included). The chaos-hardening levers of DESIGN.md
+§12 ride along: --guard validates every client delta, --round-deadline
+bounds each round in virtual time, --fault-plan replays a seeded
+injector schedule, and --ingest-max-restarts supervises the staging
+producer.
 
 Also supports federated *LM* training with any assigned architecture's
 smoke config (--model starcoder2-3b etc.) — the beyond-paper scenario
@@ -211,6 +215,24 @@ def main(argv=None):
     ap.add_argument("--ingest-stall-s", type=float, default=None,
                     help="staging-ring stall deadline in seconds (a hung "
                          "producer raises instead of spinning forever)")
+    ap.add_argument("--guard", action="store_true",
+                    help="update-guard validation (DESIGN.md §12): "
+                         "quarantine non-finite / exploded-norm client "
+                         "deltas, clip outliers against the rolling "
+                         "robust norm threshold")
+    ap.add_argument("--round-deadline", type=float, default=None,
+                    help="virtual-seconds round deadline (DESIGN.md "
+                         "§12): sync rounds drop-and-mask clients whose "
+                         "runtime draw misses it; async rounds fold the "
+                         "partial buffer (needs a --runtime model)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="chaos harness: JSON FaultPlan config (inline "
+                         "string or @/path/to/plan.json) — the seeded "
+                         "injector schedule of core/faults.py")
+    ap.add_argument("--ingest-max-restarts", type=int, default=0,
+                    help="supervised staging-producer restarts: retry a "
+                         "crashed produce up to N times (bounded "
+                         "exponential backoff) before failing the run")
     ap.add_argument("--out", default=None)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -240,26 +262,37 @@ def main(argv=None):
         staleness_alpha=args.staleness_alpha,
         async_concurrency=args.async_concurrency,
         ingest_stall_s=args.ingest_stall_s,
+        guard=args.guard, round_deadline=args.round_deadline,
+        ingest_max_restarts=args.ingest_max_restarts,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
     runtime = None
-    if args.async_buffer:
+    if args.async_buffer or args.round_deadline is not None:
         from repro.core.runtime import make_runtime
         rt_kw = ({} if args.runtime == "deterministic"
                  else {"dropout": args.runtime_dropout})
         runtime = make_runtime(args.runtime, k, **rt_kw)
+    fault_plan = None
+    if args.fault_plan:
+        from repro.core.faults import FaultPlan
+        raw = args.fault_plan
+        if raw.startswith("@"):
+            with open(raw[1:]) as fh:
+                raw = fh.read()
+        fault_plan = FaultPlan.from_config(json.loads(raw))
 
     if args.resume:
         if not args.ckpt_dir:
             raise SystemExit("--resume needs --ckpt-dir")
         trainer = FederatedTrainer.resume(
             args.ckpt_dir, loss_fn, params, k, source, cfg, eval_fn,
-            algo=algo, sampler=sampler, runtime=runtime)
+            algo=algo, sampler=sampler, runtime=runtime,
+            fault_plan=fault_plan)
         print(f"resumed from {args.ckpt_dir} at round {trainer.start_round}")
     else:
         trainer = FederatedTrainer(loss_fn, params, k, source, cfg, eval_fn,
                                    algo=algo, sampler=sampler,
-                                   runtime=runtime)
+                                   runtime=runtime, fault_plan=fault_plan)
     with trainer:
         if args.ckpt_dir and args.ckpt_every > 0:
             for t in range(trainer.start_round, args.rounds):

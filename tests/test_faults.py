@@ -1,0 +1,345 @@
+"""Chaos-hardening contracts (DESIGN.md §12): seeded fault plans are
+order-invariant and replayable, the update guard quarantines EXACTLY the
+plan's target set (with the guard-off control going non-finite, so the
+counters measure a real defense), round deadlines drop/partial-fold, the
+supervised ingest restart preserves the RNG stream bit for bit, and
+corruption of the newest checkpoint falls back to the last intact step.
+
+The cross-regime allclose cells for the ``guarded`` regime live in
+tests/test_regime_matrix.py; these are the fast single-process contracts.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.faults import FaultPlan, corrupt_checkpoint
+from repro.core.runtime import make_runtime
+
+NUM_CLIENTS = 8
+K = 3
+ROUNDS = 4
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 2) + 1)]
+
+
+def make_trainer(plan=None, *, algo="feddpc", rounds=ROUNDS, runtime=None,
+                 **exec_kw):
+    kw = dict(clients_per_round=K, seed=7, eval_every=10 ** 9)
+    kw.update(exec_kw)
+    return FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                            ExecConfig(rounds=rounds, **kw),
+                            algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
+                            runtime=runtime, fault_plan=plan)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def params_finite(tr):
+    return bool(all(np.all(np.isfinite(np.asarray(leaf)))
+                    for leaf in jax.tree.leaves(tr.params)))
+
+
+# delta faults on rounds >= 1 so the guard's rolling threshold has one
+# round of accepted history (round-0 faults would slip past the +inf
+# cold-start threshold by design — non-finite still quarantines, norm
+# explosions do not)
+QPLAN_KW = dict(nan_rate=0.5, nan_rounds=(1,),
+                explode_rate=0.5, explode_rounds=(2,))
+
+
+# ---------------- fault-plan determinism ----------------
+
+def test_plan_codes_are_per_client_and_order_invariant():
+    """delta_codes must be a pure function of (seed, round, CLIENT ID):
+    permuting the sampled cohort permutes the codes with it, so the plan
+    is sampling-order-invariant and the async fold can derive each
+    arrival's code individually (prefix stability)."""
+    plan = FaultPlan.seeded(11, nan_rate=0.5, explode_rate=0.5)
+    sampled = np.array([5, 1, 7, 2])
+    codes = plan.delta_codes(3, sampled)
+    assert codes.dtype == np.int32 and codes.shape == (4,)
+    perm = np.array([2, 0, 3, 1])
+    np.testing.assert_array_equal(plan.delta_codes(3, sampled[perm]),
+                                  codes[perm])
+    # per-arrival derivation == whole-cohort derivation
+    singles = [plan.delta_codes(3, np.array([c]))[0] for c in sampled]
+    np.testing.assert_array_equal(np.array(singles, np.int32), codes)
+    # replay: same query, same answer
+    np.testing.assert_array_equal(plan.delta_codes(3, sampled), codes)
+
+
+def test_plan_config_roundtrip_replays_identically():
+    plan = FaultPlan.seeded(7, nan_rate=0.4, nan_rounds=(1, 3),
+                            explode_rate=0.3, hang_rate=0.5,
+                            ingest_crash_rounds=(2,))
+    clone = FaultPlan.from_config(plan.config_dict())
+    sampled = np.arange(6)
+    for t in range(5):
+        np.testing.assert_array_equal(clone.delta_codes(t, sampled),
+                                      plan.delta_codes(t, sampled))
+        np.testing.assert_array_equal(clone.latency_boost(t, sampled),
+                                      plan.latency_boost(t, sampled))
+        assert clone.ingest_crash(t) == plan.ingest_crash(t)
+
+
+# ---------------- guard vs plan: the quarantine oracle ----------------
+
+@pytest.mark.parametrize("algo", ["feddpc", "fedavg", "fedvarp"])
+def test_guard_quarantines_exactly_the_plan_targets(algo):
+    """Per round, RoundRecord.quarantined == |plan.delta_targets| over
+    the realized schedule — no misses, no false positives — and the
+    params stay finite through NaN and 1e12x exploded deltas."""
+    plan = FaultPlan.seeded(7, **QPLAN_KW)
+    with make_trainer(plan, algo=algo, guard=True,
+                      guard_min_history=1) as tr:
+        recs = tr.run()
+        sched = [np.asarray(s) for s in tr.schedule]
+        assert params_finite(tr)
+    expected = [int(plan.delta_targets(t, sched[t]).sum())
+                for t in range(ROUNDS)]
+    assert sum(expected) >= 2, expected          # the plan must really fire
+    assert [r.quarantined for r in recs] == expected
+    assert all(np.isfinite(r.train_loss) for r in recs)
+
+
+def test_unguarded_nan_control_goes_nonfinite():
+    """The control: the same NaN plan with guard=False poisons the
+    params — proof the quarantine counters measure a live defense."""
+    plan = FaultPlan.seeded(7, **QPLAN_KW)
+    with make_trainer(plan, algo="fedavg", guard=False) as tr:
+        tr.run()
+        assert not params_finite(tr)
+
+
+def test_guarded_zero_fault_matches_the_unguarded_run():
+    """With no faults the guard's threshold stays +inf and every
+    multiplier is literally 1.0 — the math is the unguarded round's,
+    though the extra guard ops change XLA fusion, so equality is tight
+    allclose rather than bitwise (the property the ``guarded``
+    regime-matrix regime enrolls on). Zero rows quarantine or clip."""
+    outs = {}
+    for guard in (False, True):
+        with make_trainer(None, guard=guard) as tr:
+            recs = tr.run()
+            outs[guard] = (tr.params, [r.train_loss for r in recs],
+                           sum(r.quarantined + r.clipped for r in recs))
+    for a, b in zip(jax.tree.leaves(outs[False][0]),
+                    jax.tree.leaves(outs[True][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(outs[False][1], outs[True][1],
+                               rtol=1e-6, atol=1e-7)
+    assert outs[True][2] == 0
+
+
+def test_moderate_explosions_clip_instead_of_quarantining():
+    """Norms between clip_mult x thresh and quarantine_mult x thresh are
+    scaled DOWN to the clip limit, not dropped: the clipped counter
+    fires, quarantined stays 0, and the run stays finite."""
+    plan = FaultPlan.seeded(3, explode_rate=1.0, explode_rounds=(1,),
+                            explode_magnitude=50.0)
+    with make_trainer(plan, guard=True, guard_min_history=1,
+                      guard_clip_mult=2.0,
+                      guard_quarantine_mult=1e8) as tr:
+        recs = tr.run()
+        sched = [np.asarray(s) for s in tr.schedule]
+        assert params_finite(tr)
+    expected = int(plan.delta_targets(1, sched[1]).sum())
+    assert expected == K                         # rate 1.0: whole cohort
+    assert recs[1].clipped == expected
+    assert sum(r.quarantined for r in recs) == 0
+    assert sum(r.clipped for r in recs) == expected
+
+
+# ---------------- round deadlines ----------------
+
+def test_sync_deadline_drops_hung_clients():
+    """DeterministicRuntime + a rate-1.0 hang on round 1: every sampled
+    client's latency blows past round_deadline, the round fires its
+    deadline, all K rows fold out (sentinel + mask), and the run stays
+    finite with the other rounds untouched."""
+    plan = FaultPlan.seeded(5, hang_rate=1.0, hang_rounds=(1,))
+    with make_trainer(plan, guard=True, round_deadline=10.0,
+                      runtime=make_runtime("deterministic",
+                                           NUM_CLIENTS)) as tr:
+        recs = tr.run()
+        assert params_finite(tr)
+    assert [r.deadline_fired for r in recs] == [0, 1, 0, 0]
+    assert [r.deadline_dropped for r in recs] == [0, K, 0, 0]
+    assert all(np.isfinite(r.train_loss) for r in recs)
+
+
+def test_async_deadline_folds_partial_buffer():
+    """Buffered-async + heavy-tail latencies + a tight deadline: some
+    server steps must fold a PARTIAL buffer (deadline_fired, with the
+    missing arrivals counted as deadline_dropped), and every fold still
+    folds at least one arrival, so the run completes finite."""
+    with make_trainer(None, guard=True, async_buffer=True,
+                      async_concurrency=4, round_deadline=0.3,
+                      runtime=make_runtime("heavytail", NUM_CLIENTS,
+                                           shape=1.2, scale=0.5)) as tr:
+        recs = tr.run()
+        assert params_finite(tr)
+    assert sum(r.deadline_fired for r in recs) > 0
+    assert sum(r.deadline_dropped for r in recs) > 0
+    assert all(np.isfinite(r.train_loss) for r in recs)
+
+
+# ---------------- self-healing ingest ----------------
+
+def test_ingest_crash_restart_preserves_the_run_bitwise():
+    """A budgeted producer crash is retried — and because the crash hook
+    fires BEFORE the cohort draw (and the draw is cached across retries),
+    the recovered run's schedule, params, and losses are bitwise the
+    no-fault run's."""
+    plan = FaultPlan.seeded(5, ingest_crash_rounds=(1,))
+    with make_trainer(plan, ingest_max_restarts=2) as tr:
+        recs = tr.run()
+        faulted = (tr.params, [r.train_loss for r in recs],
+                   [np.asarray(s) for s in tr.schedule])
+        assert sum(r.ingest_restarts for r in recs) == 1
+    with make_trainer(None) as tr:
+        recs = tr.run()
+        clean = (tr.params, [r.train_loss for r in recs],
+                 [np.asarray(s) for s in tr.schedule])
+        assert sum(r.ingest_restarts for r in recs) == 0
+    assert_trees_equal(faulted[0], clean[0])
+    np.testing.assert_array_equal(faulted[1], clean[1])
+    for a, b in zip(faulted[2], clean[2]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ingest_crash_past_budget_raises_with_producer_traceback():
+    """ingest_max_restarts=0 keeps the historical fail-fast: the injected
+    crash propagates out of run(), and the consumer-side RuntimeError
+    carries the producer's own traceback text (the frames inside
+    produce_fn would otherwise be lost)."""
+    plan = FaultPlan.seeded(5, ingest_crash_rounds=(1,))
+    with make_trainer(plan, ingest_max_restarts=0) as tr:
+        with pytest.raises(RuntimeError,
+                           match="injected ingest producer crash") as ei:
+            tr.run()
+    assert "producer traceback" in str(ei.value)
+
+
+# ---------------- self-healing checkpoints ----------------
+
+def _run_and_save_twice(d, plan=None, **exec_kw):
+    """Run 4 rounds saving after rounds 1 and 3 (steps 2 and 4); return
+    the params snapshot at each saved step."""
+    snaps = {}
+    with make_trainer(plan, **exec_kw) as tr:
+        for t in range(ROUNDS):
+            tr.run_round(t)
+            if t in (1, 3):
+                tr.save(d, keep=5)
+                snaps[t + 1] = jax.tree.map(np.asarray, tr.params)
+    return snaps
+
+
+@pytest.mark.parametrize("mode", ["truncate", "bitflip", "drop_digest",
+                                  "missing_sidecar"])
+def test_corrupt_newest_step_falls_back_to_last_good(mode, tmp_path):
+    """Every corruption shape — truncated npz, digest mismatch (bitflip),
+    missing manifest, missing digested sidecar — must skip the damaged
+    newest step and restore the older intact one BITWISE; an EXPLICITLY
+    requested corrupt step must fail loudly, never silently fall back."""
+    d = str(tmp_path)
+    snaps = _run_and_save_twice(d)
+    if mode == "missing_sidecar":
+        os.remove(os.path.join(d, "step_00000004", "aux.npz"))
+    else:
+        corrupt_checkpoint(d, 4, mode)
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.resolve_step(d) == 2
+    with make_trainer(None) as tr:
+        with pytest.warns(RuntimeWarning):
+            tr.restore(d)
+        assert tr.start_round == 2
+        assert_trees_equal(tr.params, snaps[2])
+    with make_trainer(None) as tr:
+        with pytest.raises(ValueError):
+            tr.restore(d, step=4)
+
+
+def test_guarded_faulted_resume_is_bitwise(tmp_path):
+    """Save mid-run with the guard active and the fault plan firing;
+    a fresh resume (same plan) must reproduce the uninterrupted run's
+    params and losses bit for bit — guard window state included."""
+    plan = FaultPlan.seeded(7, **QPLAN_KW)
+    kw = dict(guard=True, guard_min_history=1)
+    with make_trainer(plan, **kw) as tr:
+        full_recs = tr.run()
+        full = jax.tree.map(np.asarray, tr.params)
+    d = str(tmp_path)
+    with make_trainer(plan, **kw) as tr:
+        for t in range(2):
+            tr.run_round(t)
+        tr.save(d)
+    tr = FederatedTrainer.resume(
+        d, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+        ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=7,
+                   eval_every=10 ** 9, **kw),
+        algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1),
+        fault_plan=plan)
+    with tr:
+        res_recs = tr.run()
+        assert_trees_equal(tr.params, full)
+    np.testing.assert_array_equal(
+        [r.train_loss for r in full_recs],
+        [r.train_loss for r in res_recs])
+
+
+def test_async_guarded_midbuffer_resume_is_bitwise(tmp_path):
+    """The hardest resume cell: buffered-async with concurrency > 1 (so
+    the in-flight heap is non-empty at save time), guard on, faults
+    firing — the fresh-resume run must still be bitwise."""
+    plan = FaultPlan.seeded(7, **QPLAN_KW)
+    kw = dict(guard=True, guard_min_history=1, async_buffer=True,
+              async_concurrency=2)
+    rt = lambda: make_runtime("exponential", NUM_CLIENTS, mean=0.7)
+    with make_trainer(plan, runtime=rt(), **kw) as tr:
+        full_recs = tr.run()
+        full = jax.tree.map(np.asarray, tr.params)
+        assert params_finite(tr)
+    d = str(tmp_path)
+    with make_trainer(plan, runtime=rt(), **kw) as tr:
+        for t in range(2):
+            tr.run_round(t)
+        tr.save(d)
+    tr = FederatedTrainer.resume(
+        d, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+        ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=7,
+                   eval_every=10 ** 9, **kw),
+        algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1),
+        runtime=rt(), fault_plan=plan)
+    with tr:
+        res_recs = tr.run()
+        assert_trees_equal(tr.params, full)
+    np.testing.assert_array_equal(
+        [r.train_loss for r in full_recs],
+        [r.train_loss for r in res_recs])

@@ -295,58 +295,6 @@ def test_save_restore_with_deep_inflight_staging(tmp_path):
         assert (np.asarray(a) == np.asarray(b)).all()
 
 
-# ---------------- deprecation shims ----------------
-
-@pytest.mark.parametrize("name", ["stack_batches", "stack_cohort",
-                                  "stack_cohort_into", "CohortPrefetcher"])
-def test_client_shim_warns_and_forwards(name):
-    import repro.ingest
-    from repro.core import client as shim
-    with pytest.warns(DeprecationWarning, match="repro.ingest"):
-        obj = getattr(shim, name)
-    assert obj is getattr(repro.ingest, name)
-
-
-@pytest.mark.parametrize("module,name", [
-    ("repro.core.datasources", "DataSource"),
-    ("repro.core.datasources", "ListDataSource"),
-    ("repro.core.datasources", "IteratorDataSource"),
-    ("repro.core.datasources", "as_data_source"),
-    ("repro.data.pipeline", "StreamingImageSource"),
-    ("repro.data.pipeline", "build_federated_image_data"),
-    ("repro.data.pipeline", "client_batches"),
-    ("repro.data.pipeline", "FederatedImageData"),
-])
-def test_module_shims_warn_and_forward(module, name):
-    import importlib
-    import repro.ingest
-    shim = importlib.import_module(module)
-    with pytest.warns(DeprecationWarning, match="repro.ingest"):
-        obj = getattr(shim, name)
-    assert obj is getattr(repro.ingest, name)
-
-
-def test_shim_unknown_attribute_raises():
-    from repro.core import datasources as shim
-    with pytest.raises(AttributeError):
-        shim.nonexistent_name
-
-
-def test_legacy_spelling_still_runs_end_to_end():
-    """The old imports (warned) drive the trainer identically to the
-    new ones — the one-release compatibility guarantee."""
-    with pytest.warns(DeprecationWarning):
-        from repro.core.datasources import ListDataSource as OldList
-    old = run_trainer(rounds=3)
-    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
-                          OldList(ragged_batch_fn),
-                          ExecConfig(rounds=3, clients_per_round=K, seed=7,
-                                     eval_every=10 ** 9),
-                          algo=AlgoConfig(eta_l=0.05, eta_g=0.1)) as tr:
-        tr.run()
-    assert_trees_equal(old.params, tr.params)
-
-
 def test_stack_cohort_reexport_identical():
     """stack_cohort via repro.ingest is the one the trainer uses (no
     forked copies): same padding semantics as before the move."""

@@ -176,6 +176,48 @@ def test_feddpc_fused_dots(rng):
     np.testing.assert_allclose(got, want, rtol=1e-5)
 
 
+@pytest.mark.parametrize("m", [8, 64, 512, 1024])
+def test_feddpc_guard_dots_bitwise_vs_ref(m, rng):
+    """kernel.guard_dots (the reduction pass with the update guard's
+    non-finite column fused in — DESIGN.md §12) vs ref.guard_dots_ref,
+    BITWISE per grid block in interpret mode: same block, same jnp
+    reduction, same result — including NaN/Inf entries scattered through
+    d (they must zero out of the dots and land in the count). Full
+    blocks only, like ops._to_2d always produces (partial-block padding
+    semantics are exactly what the padding avoids)."""
+    from repro.kernels.feddpc_project import kernel as fp_kernel
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d2 = jax.random.normal(k1, (m, fp_kernel.LANE))
+    p2 = jax.random.normal(k2, (m, fp_kernel.LANE))
+    bad = jax.random.uniform(k3, d2.shape) < 0.05
+    d2 = jnp.where(bad, jnp.where(d2 > 0, jnp.nan, jnp.inf), d2)
+    rows = min(fp_kernel.DEFAULT_ROWS, m)
+    got = fp_kernel.guard_dots(d2, p2, rows=rows, interpret=True)
+    want = jnp.stack([fp_ref.guard_dots_ref(d2[i:i + rows], p2[i:i + rows])
+                      for i in range(0, m, rows)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the count column is exact by construction
+    assert int(got[:, 3].sum()) == int(bad.sum())
+
+
+def test_feddpc_guard_dots_flat_nonfinite(rng):
+    """ops.guard_dots_flat (padded flat entry point) against the whole-
+    array oracle: the zero padding must not inflate the non-finite
+    count, and the dots must stay finite despite NaN/Inf in d."""
+    k1, k2 = jax.random.split(rng)
+    d = jax.random.normal(k1, (5001,))
+    p = jax.random.normal(k2, (5001,))
+    d = d.at[7].set(jnp.nan).at[4999].set(jnp.inf)
+    got = fp_ops.guard_dots_flat(d, p)
+    d2, _ = fp_ops._to_2d(d)
+    p2, _ = fp_ops._to_2d(p)
+    want = fp_ref.guard_dots_ref(d2, p2)
+    assert np.all(np.isfinite(np.asarray(got)))
+    assert int(got[3]) == 2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------- flash_attention ----------------
 
 @pytest.mark.parametrize("b,sq,sk,h,kv,d", [
