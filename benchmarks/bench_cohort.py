@@ -31,6 +31,16 @@ host-staged baseline's dispatch-side transfer wait device staging
 removes (it moves the placement onto the staging thread, so the
 consumer-side wait collapses to ~0 by construction).
 
+``--codec-sweep`` runs the DELTA-CODEC receipt (DESIGN.md §13): the same
+round under codec {identity, bf16, int8, int8+ef}, reporting the uplink
+bytes the wire actually carries (``RoundRecord.comm_bytes_up``) and the
+device-stage bytes of the encoded cohort payload
+(``codec.EncodedCohort.nbytes`` — what ingest H2D placement moves) ->
+BENCH_codec.json. The headline keys are the byte-reduction factors int8
+vs identity; the acceptance bools (``int8_halves_uplink``,
+``int8_shrinks_stage_bytes``) assert the §13 criteria on the receipt
+itself so the bench gate holds them exactly.
+
 ``--devices N`` must be handled BEFORE jax initializes (the device count
 locks at first init), hence the argv scan at the top of this module.
 """
@@ -75,6 +85,8 @@ DEFAULT_OUT_2AXIS = os.path.join(_ROOT, "BENCH_cohort_2axis.json")
 DEFAULT_OUT_INGEST = os.path.join(_ROOT, "BENCH_ingest.json")
 # --async-sweep (runtime model x buffer/concurrency) receipt
 DEFAULT_OUT_ASYNC = os.path.join(_ROOT, "BENCH_async.json")
+# --codec-sweep (delta codec x error feedback) receipt
+DEFAULT_OUT_CODEC = os.path.join(_ROOT, "BENCH_codec.json")
 
 # mode name -> config overrides (use_kernel routes into the feddpc hyper,
 # the rest are ExecConfig fields); the sweep skips nothing silently — a
@@ -349,6 +361,128 @@ def run_async_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
     return payload
 
 
+def run_codec_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
+                    batches_per_client: int = 4, batch: int = None,
+                    dim: int = None, hidden: int = None, classes: int = 10,
+                    algorithm: str = "feddpc", out: str = None) -> Dict:
+    """Delta-codec receipt (DESIGN.md §13): the same vectorized (sharded
+    when >1 device) round under each uplink codec, plus int8 with
+    server-side error feedback.
+
+    Byte accounting has two independent receipts per mode, both
+    deterministic functions of the model shapes (gated exactly):
+
+      comm_bytes_up   what the cohort's LIVE clients ship per round —
+                      ``RoundRecord.comm_bytes_up``, i.e. the payload
+                      arrays as actually wired (q codes + per-leaf
+                      scale/zero vectors)
+      stage_bytes     the encoded cohort stack's device-placement bytes
+                      (``EncodedCohort.nbytes`` — what
+                      ``CohortPlacer.place_encoded`` moves over the bus)
+
+    ``final_train_loss`` is a simulation metric (deterministic given the
+    seed — lossy codecs quantize deterministically); wall-clock keys are
+    gated loosely like every other sweep's."""
+    from repro.codec import make_codec, tree_nbytes
+
+    batch = 8 if batch is None else batch
+    dim = 512 if dim is None else dim
+    hidden = 2048 if hidden is None else hidden
+    out = out or DEFAULT_OUT_CODEC
+    sharded = len(jax.devices()) > 1
+    params, loss_fn, batch_fn = build_task(
+        clients, batches_per_client, batch, dim, hidden, classes)
+    n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
+    raw_client_bytes = tree_nbytes(params)        # f32 delta, one client
+    codec_modes = [
+        ("identity", dict(codec="identity")),
+        ("bf16", dict(codec="bf16")),
+        ("int8", dict(codec="int8")),
+        ("int8+ef", dict(codec="int8", codec_ef=True)),
+    ]
+    results = {}
+    for mode, overrides in codec_modes:
+        try:
+            cfg = ExecConfig(rounds=warmup + rounds, clients_per_round=clients,
+                             seed=0, eval_every=10 ** 9,
+                             shard_clients=sharded, **overrides)
+            algo = AlgoConfig(name=algorithm, eta_l=0.05, eta_g=0.1)
+            with FederatedTrainer(loss_fn, params, clients, batch_fn,
+                                  cfg, None, algo=algo) as tr:
+                for t in range(warmup):               # compile warm
+                    tr.run_round(t)
+                recs = [tr.run_round(t)
+                        for t in range(warmup, warmup + rounds)]
+            times = np.asarray([r.seconds for r in recs])
+            # accounting receipts: per-client wire bytes and the
+            # K-stack's device-stage bytes depend only on the codec and
+            # the model shapes (encoded_template is shape-level)
+            codec_obj = make_codec(overrides["codec"])
+            stats = {
+                "mean_s": float(times.mean()),
+                "p50_s": float(np.median(times)),
+                "min_s": float(times.min()),
+                "rounds": int(rounds),
+                "comm_bytes_up": int(recs[-1].comm_bytes_up),
+                "client_bytes_up": int(codec_obj.client_bytes(params)),
+                "stage_bytes": int(tree_nbytes(
+                    codec_obj.encoded_template(params, clients))),
+                "error_feedback": bool(overrides.get("codec_ef", False)),
+                "final_train_loss": float(recs[-1].train_loss),
+            }
+            results[mode] = stats
+            print(f"{mode:10s} mean {stats['mean_s']*1e3:9.3f} ms"
+                  f"  round bytes {stats['comm_bytes_up']:>11d}"
+                  f"  stage bytes {stats['stage_bytes']:>11d}")
+        except Exception as e:                # record, never skip silently
+            results[mode] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"{mode:10s} FAILED: {results[mode]['error']}")
+
+    def bytes_of(m, key="comm_bytes_up"):
+        return results.get(m, {}).get(key)
+
+    payload = {
+        "bench": "cohort_codec",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "sharded": sharded,
+        "algorithm": algorithm,
+        "clients_per_round": clients,
+        "batches_per_client": batches_per_client,
+        "batch": batch, "dim": dim, "hidden": hidden,
+        "model_params": n_params,
+        "raw_client_bytes": raw_client_bytes,
+        "modes": results,
+        "note": ("client_bytes_up/stage_bytes are deterministic functions "
+                 "of the model shapes and the codec wire format "
+                 "(DESIGN.md §13) — gated exactly; identity must equal "
+                 "raw_client_bytes bitwise"),
+    }
+    ident, i8 = bytes_of("identity"), bytes_of("int8")
+    if ident and i8:
+        payload["comm_bytes_reduction_int8_vs_identity"] = ident / i8
+        # the §13 acceptance bool, held exactly by the bench gate
+        payload["int8_halves_uplink"] = ident / i8 >= 2.0
+    b16 = bytes_of("bf16")
+    if ident and b16:
+        payload["comm_bytes_reduction_bf16_vs_identity"] = ident / b16
+    sid, si8 = bytes_of("identity", "stage_bytes"), bytes_of("int8",
+                                                             "stage_bytes")
+    if sid and si8:
+        payload["stage_bytes_reduction_int8_vs_identity"] = sid / si8
+        payload["int8_shrinks_stage_bytes"] = si8 < sid
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    for key in ("comm_bytes_reduction_int8_vs_identity",
+                "comm_bytes_reduction_bf16_vs_identity",
+                "stage_bytes_reduction_int8_vs_identity",
+                "int8_halves_uplink", "int8_shrinks_stage_bytes"):
+        if key in payload:
+            print(f"{key}: {payload[key]}")
+    print(f"-> {out}")
+    return payload
+
+
 def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
         batches_per_client: int = 4, batch: int = 8, dim: int = 512,
         hidden: int = 2048, classes: int = 10, algorithm: str = "feddpc",
@@ -443,13 +577,25 @@ def main(argv=None):
                     help="run the buffered-async receipt instead: every "
                          "runtime model x {anchor, streaming} points -> "
                          "BENCH_async.json (DESIGN.md §11)")
+    ap.add_argument("--codec-sweep", action="store_true",
+                    help="run the delta-codec receipt instead: codec "
+                         "{identity, bf16, int8, int8+ef} uplink/stage "
+                         "byte accounting -> BENCH_codec.json "
+                         "(DESIGN.md §13)")
     ap.add_argument("--out", default=None,
                     help="defaults to BENCH_cohort_sharded.json, "
                          "BENCH_cohort_2axis.json with --model-shards, "
-                         "BENCH_ingest.json with --ingest-sweep, or "
-                         "BENCH_async.json with --async-sweep")
+                         "BENCH_ingest.json with --ingest-sweep, "
+                         "BENCH_async.json with --async-sweep, or "
+                         "BENCH_codec.json with --codec-sweep")
     a = ap.parse_args(argv)
-    if a.async_sweep:
+    if a.codec_sweep:
+        run_codec_sweep(clients=a.clients, rounds=a.rounds,
+                        warmup=a.warmup,
+                        batches_per_client=a.batches_per_client,
+                        batch=a.batch, dim=a.dim, hidden=a.hidden,
+                        algorithm=a.algorithm, out=a.out)
+    elif a.async_sweep:
         run_async_sweep(clients=a.clients, rounds=a.rounds,
                         warmup=a.warmup,
                         batches_per_client=a.batches_per_client,

@@ -21,9 +21,12 @@ them by naming convention):
             must match exactly — a missing mode or an ``error`` entry in
             any mode fails the gate outright
 
-Baseline keys missing from the fresh payload fail (coverage regression);
-fresh-only keys pass with a note (a new receipt field must not break the
-gate before its baseline is regenerated).
+Key coverage is gated in BOTH directions: baseline keys missing from
+the fresh payload fail (coverage regression), and fresh keys missing
+from the baseline fail too, naming the key — a receipt that silently
+grows fields is a receipt whose new fields are silently ungated, so
+adding a field means regenerating its committed baseline in the same
+change.
 
   PYTHONPATH=src python -m benchmarks.bench_gate \
       --fresh /tmp/bench_smoke.json \
@@ -69,7 +72,7 @@ def classify(key: str) -> str:
     return "exact"
 
 
-def check(base, fresh, path, problems, notes, *, perf_factor, sim_rtol):
+def check(base, fresh, path, problems, *, perf_factor, sim_rtol):
     key = path.rsplit(".", 1)[-1]
     cls = classify(key)
     if cls == "context":
@@ -84,11 +87,16 @@ def check(base, fresh, path, problems, notes, *, perf_factor, sim_rtol):
                 problems.append(f"{path}.{k}: missing from fresh payload "
                                 "(coverage regression)")
                 continue
-            check(base[k], fresh[k], f"{path}.{k}", problems, notes,
+            check(base[k], fresh[k], f"{path}.{k}", problems,
                   perf_factor=perf_factor, sim_rtol=sim_rtol)
         for k in fresh:
             if k not in base:
-                notes.append(f"{path}.{k}: new key (not in baseline)")
+                # loud by design: a fresh-only key is UNGATED — fail and
+                # name it so the baseline gets regenerated alongside the
+                # receipt change instead of drifting silently
+                problems.append(f"{path}.{k}: fresh key missing from "
+                                "baseline (regenerate the committed "
+                                "baseline to gate it)")
         return
     if isinstance(base, bool) or isinstance(fresh, bool):
         # bools before numbers: isinstance(True, int) holds
@@ -126,16 +134,14 @@ def gate(baseline_path: str, fresh_path: str, *, perf_factor: float = 10.0,
         base = json.load(fh)
     with open(fresh_path) as fh:
         fresh = json.load(fh)
-    problems, notes = [], []
+    problems = []
     # an error recorded in ANY fresh mode fails, even if the baseline
     # (wrongly) carries one too
     for mode, stats in fresh.get("modes", {}).items():
         if isinstance(stats, dict) and "error" in stats:
             problems.append(f"modes.{mode}: {stats['error']}")
-    check(base, fresh, "$", problems, notes,
+    check(base, fresh, "$", problems,
           perf_factor=perf_factor, sim_rtol=sim_rtol)
-    for n in notes:
-        print(f"note: {n}")
     if problems:
         print(f"BENCH GATE FAILED ({len(problems)} problem(s)) "
               f"[{fresh_path} vs {baseline_path}]:")
@@ -143,7 +149,7 @@ def gate(baseline_path: str, fresh_path: str, *, perf_factor: float = 10.0,
             print(f"  - {p}")
         return 1
     print(f"bench gate OK: {fresh_path} within tolerance of "
-          f"{baseline_path} ({len(notes)} new key(s))")
+          f"{baseline_path}")
     return 0
 
 

@@ -1,0 +1,26 @@
+"""repro.codec — communication-compressed client deltas (DESIGN.md §13).
+
+A ``DeltaCodec`` sits between local training and aggregation: clients
+quantize their update pytrees (the uplink payload), the server decodes —
+or feeds the quantized stack straight into the fused dequant→project
+Pallas epilogue — and an optional server-side error-feedback accumulator
+re-injects the quantization error so lossy codecs do not bias the run.
+
+Codecs register by name (``identity`` / ``bf16`` / ``int8`` /
+``int8_sym`` / ``int8_sr``); ``make_codec(name)`` builds one,
+``codec_names()`` enumerates the registry (the cross-regime matrix and
+the CLI resolve names through it).
+"""
+from repro.codec.base import (DeltaCodec, EncodedCohort, codec_names,
+                              make_codec, register_codec, tree_nbytes)
+from repro.codec.codecs import BF16Codec, IdentityCodec, Int8Codec
+
+# snapshot AFTER the built-in codecs above have registered (base's own
+# module attribute predates them); codec_names() is always live
+CODEC_NAMES = codec_names()
+
+__all__ = [
+    "BF16Codec", "CODEC_NAMES", "DeltaCodec", "EncodedCohort",
+    "IdentityCodec", "Int8Codec", "codec_names", "make_codec",
+    "register_codec", "tree_nbytes",
+]

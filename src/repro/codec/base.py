@@ -1,0 +1,161 @@
+"""DeltaCodec protocol, registry, and the EncodedCohort wire container.
+
+A codec maps a client's update pytree (f32 leaves) to a compact payload
+pytree and back.  The canonical lossy payload is a dict
+
+    {"q": <quantized leaves>, "scale": <per-leaf scales>,
+     "zero": <per-leaf zero-points>}
+
+where cohort-stacked encodes carry a leading client axis on ``q`` and a
+``(K,)`` vector per leaf for ``scale``/``zero`` — ONE uniform wire
+format, so decode, sharding specs, buffered-async stacking, checkpoint
+templates, and the fused dequant→project kernel all share a single code
+path (``dequant(x) = q.astype(f32) * scale + zero``; bf16 rides the same
+format with unit scales).  The identity codec passes trees through
+untouched — its round output is bitwise the no-codec round.
+
+Nonfinite propagation contract: a NaN/Inf client delta must still look
+nonfinite AFTER decode, so the chaos ``UpdateGuard`` (quarantine
+decisions read quantized-domain norms, DESIGN.md §12/§13) can still see
+it.  Quantizers therefore keep nonfinite scales instead of flushing
+them to 1 — only exact-zero ranges flatten.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_nbytes(tree: PyTree) -> int:
+    """Wire bytes of a pytree: sum of ``size * itemsize`` over leaves
+    (works on jnp/np arrays and ShapeDtypeStructs alike)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = tuple(getattr(leaf, "shape", ()))
+        dtype = np.dtype(getattr(leaf, "dtype", np.float32))
+        total += int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return total
+
+
+def sanitized_residual(raw: PyTree, dec: PyTree) -> PyTree:
+    """Per-element quantization residual ``raw - dec`` with nonfinite
+    entries zeroed: fault-injected NaN/Inf deltas must not poison the
+    error-feedback accumulator (the guard quarantines those rows; EF
+    only ever tracks well-formed quantization error)."""
+    def _r(x, d):
+        r = x.astype(jnp.float32) - d.astype(jnp.float32)
+        return jnp.where(jnp.isfinite(r), r, jnp.zeros_like(r))
+    return jax.tree.map(_r, raw, dec)
+
+
+@dataclasses.dataclass
+class EncodedCohort:
+    """A cohort's encoded uplink: the quantized payload pytree plus the
+    codec name and client count it was encoded under.  The API-boundary
+    container (ingest staging, benchmarks); jit-internal paths move the
+    raw ``payload`` pytree."""
+    codec: str
+    payload: PyTree
+    clients: int
+
+    @property
+    def nbytes(self) -> int:
+        return tree_nbytes(self.payload)
+
+
+class DeltaCodec:
+    """Base codec interface.  Subclasses set ``name``/``lossy`` and
+    implement the cohort-stacked encode/decode (leading client axis K);
+    single-delta encode/decode default to the K=1 cohort path."""
+
+    name: str = "abstract"
+    lossy: bool = False
+    stochastic: bool = False
+
+    # -------- cohort (leading client axis) --------
+    def encode_cohort(self, stacked: PyTree, *,
+                      key: Optional[jax.Array] = None) -> PyTree:
+        raise NotImplementedError
+
+    def decode_cohort(self, payload: PyTree) -> PyTree:
+        raise NotImplementedError
+
+    # -------- single delta --------
+    def encode(self, tree: PyTree, *,
+               key: Optional[jax.Array] = None) -> PyTree:
+        stacked = jax.tree.map(lambda x: x[None], tree)
+        payload = self.encode_cohort(stacked, key=key)
+        return jax.tree.map(lambda x: x[0], payload)
+
+    def decode(self, payload: PyTree) -> PyTree:
+        stacked = jax.tree.map(lambda x: x[None], payload)
+        dec = self.decode_cohort(stacked)
+        return jax.tree.map(lambda x: x[0], dec)
+
+    # -------- accounting / templates --------
+    def client_bytes(self, template: PyTree) -> int:
+        """Uplink wire bytes ONE client pays per round for a delta
+        shaped like ``template`` (payload arrays as actually shipped)."""
+        raise NotImplementedError
+
+    def encoded_template(self, template: PyTree, clients: int) -> PyTree:
+        """ShapeDtypeStruct pytree of ``encode_cohort`` output for a
+        K=``clients`` stack of ``template``-shaped deltas (checkpoint
+        restore + sharding-spec construction)."""
+        stacked = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((clients,) + tuple(x.shape),
+                                           jnp.float32), template)
+        key = jax.random.PRNGKey(0) if self.stochastic else None
+        return jax.eval_shape(
+            lambda s: self.encode_cohort(s, key=key), stacked)
+
+    def config_dict(self) -> Dict[str, Any]:
+        return {"name": self.name}
+
+
+# ---------------- registry ----------------
+
+_REGISTRY: Dict[str, Callable[[], DeltaCodec]] = {}
+
+
+def register_codec(name: str):
+    """Decorator: ``@register_codec("mycodec")`` over a zero-arg factory
+    (or codec class) adds it to the name registry."""
+    def deco(factory):
+        if name in _REGISTRY:
+            raise ValueError(f"codec {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def make_codec(name: Optional[str]) -> Optional[DeltaCodec]:
+    """Build a codec by registry name; None/"" -> None (codec off)."""
+    if not name:
+        return None
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r}; registered: "
+                         f"{', '.join(sorted(_REGISTRY))}") from None
+    return factory()
+
+
+def codec_names():
+    return tuple(sorted(_REGISTRY))
+
+
+# populated by repro.codec.codecs at import; kept as a module attribute
+# so launch/bench argparse choices can reference a stable tuple
+CODEC_NAMES = ()
+
+
+def _refresh_names():
+    global CODEC_NAMES
+    CODEC_NAMES = codec_names()

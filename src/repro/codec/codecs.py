@@ -1,0 +1,174 @@
+"""The shipped codecs: identity (pass-through), bf16, int8.
+
+All lossy codecs emit the uniform ``{"q", "scale", "zero"}`` payload of
+repro/codec/base.py with per-leaf, per-client scalars, so the decode —
+``q.astype(f32) * scale + zero`` — is one expression shared with the
+fused Pallas dequant epilogue (kernels/feddpc_project).
+
+int8 wire format (per leaf, per client): affine by default —
+``scale = (max - min) / 254``, ``zero = min + 127 * scale``, codes in
+[-127, 127]; ``symmetric=True`` drops the zero-point
+(``scale = max|x| / 127``, ``zero = 0``); ``stochastic=True`` (symmetric
+only) rounds with ``floor(y + u)``, u ~ U[0,1) — unbiased, key-driven.
+Zero-range leaves flatten scale to 1 (codes are all zero, decode is
+exact); nonfinite leaves keep nonfinite scales so the guard still sees
+them after decode (base.py contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codec import base
+from repro.codec.base import DeltaCodec, register_codec, tree_nbytes
+
+PyTree = object
+
+
+@register_codec("identity")
+class IdentityCodec(DeltaCodec):
+    """Pass-through: encode/decode return the SAME pytree (no casts, no
+    wrapper), so codec=identity rounds are bitwise the no-codec rounds."""
+
+    name = "identity"
+    lossy = False
+
+    def encode_cohort(self, stacked, *, key=None):
+        return stacked
+
+    def decode_cohort(self, payload):
+        return payload
+
+    def encode(self, tree, *, key=None):
+        return tree
+
+    def decode(self, payload):
+        return payload
+
+    def client_bytes(self, template):
+        return tree_nbytes(template)
+
+    def encoded_template(self, template, clients):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((clients,) + tuple(x.shape),
+                                           jnp.float32), template)
+
+
+def _broadcast(v, ndim):
+    """(K,) per-client scalars -> (K, 1, ..., 1) against a (K, ...) leaf."""
+    return v.reshape(v.shape + (1,) * (ndim - 1))
+
+
+def _decode_leaf(q, scale, zero):
+    return (q.astype(jnp.float32) * _broadcast(scale, q.ndim)
+            + _broadcast(zero, q.ndim))
+
+
+class _QuantCodec(DeltaCodec):
+    """Shared cohort plumbing: per-leaf encode over the payload dict."""
+
+    def _encode_leaf(self, x, key):
+        raise NotImplementedError
+
+    def encode_cohort(self, stacked, *, key=None):
+        if self.stochastic and key is None:
+            raise ValueError(
+                f"codec {self.name!r} rounds stochastically and needs an "
+                "explicit PRNG key per encode (pass key=)")
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        qs, ss, zs = [], [], []
+        for i, leaf in enumerate(leaves):
+            lk = None if key is None else jax.random.fold_in(key, i)
+            q, s, z = self._encode_leaf(leaf, lk)
+            qs.append(q), ss.append(s), zs.append(z)
+        unflat = jax.tree_util.tree_unflatten
+        return {"q": unflat(treedef, qs), "scale": unflat(treedef, ss),
+                "zero": unflat(treedef, zs)}
+
+    def decode_cohort(self, payload):
+        return jax.tree.map(_decode_leaf, payload["q"], payload["scale"],
+                            payload["zero"])
+
+
+@register_codec("bf16")
+class BF16Codec(_QuantCodec):
+    """bfloat16 round-to-nearest-even, unit scales: halves uplink bytes
+    with ~2^-8 relative error; bf16->f32 decode is exact."""
+
+    name = "bf16"
+    lossy = True
+    _itemsize = 2
+
+    def _encode_leaf(self, x, key):
+        k = x.shape[0]
+        q = x.astype(jnp.float32).astype(jnp.bfloat16)
+        return q, jnp.ones((k,), jnp.float32), jnp.zeros((k,), jnp.float32)
+
+    def client_bytes(self, template):
+        return _payload_bytes(template, self._itemsize)
+
+
+def _payload_bytes(template, itemsize: int) -> int:
+    """q bytes + (scale, zero) f32 scalars per leaf."""
+    leaves = jax.tree.leaves(template)
+    elems = sum(int(np.prod(tuple(x.shape), dtype=np.int64))
+                for x in leaves)
+    return elems * itemsize + 8 * len(leaves)
+
+
+@register_codec("int8")
+class Int8Codec(_QuantCodec):
+    """int8 with per-leaf/per-client scales and zero-points (affine by
+    default); see module docstring for the wire format."""
+
+    name = "int8"
+    lossy = True
+    _itemsize = 1
+
+    def __init__(self, symmetric: bool = False, stochastic: bool = False):
+        if stochastic and not symmetric:
+            raise ValueError("stochastic rounding is the symmetric "
+                             "option (int8_sr); affine int8 rounds to "
+                             "nearest")
+        self.symmetric = symmetric
+        self.stochastic = stochastic
+        self.name = ("int8_sr" if stochastic
+                     else "int8_sym" if symmetric else "int8")
+
+    def _encode_leaf(self, x, key):
+        x = x.astype(jnp.float32)
+        red = tuple(range(1, x.ndim))
+        if self.symmetric:
+            amax = jnp.max(jnp.abs(x), axis=red) if red else jnp.abs(x)
+            scale = amax / 127.0
+            zero = jnp.zeros_like(scale)
+        else:
+            mn = jnp.min(x, axis=red) if red else x
+            mx = jnp.max(x, axis=red) if red else x
+            scale = (mx - mn) / 254.0
+            zero = mn + 127.0 * scale
+        # zero ranges -> unit scale (codes all 0, decode exact); the
+        # where() keeps NaN/Inf scales so nonfinite rows survive decode
+        scale = jnp.where(scale <= 0.0, jnp.ones_like(scale), scale)
+        y = (x - _broadcast(zero, x.ndim)) / _broadcast(scale, x.ndim)
+        if self.stochastic:
+            y = jnp.floor(y + jax.random.uniform(key, y.shape))
+        else:
+            y = jnp.round(y)
+        q = jnp.clip(y, -127.0, 127.0).astype(jnp.int8)
+        return q, scale, zero
+
+    def client_bytes(self, template):
+        return _payload_bytes(template, self._itemsize)
+
+    def config_dict(self):
+        return {"name": self.name, "symmetric": self.symmetric,
+                "stochastic": self.stochastic}
+
+
+register_codec("int8_sym")(lambda: Int8Codec(symmetric=True))
+register_codec("int8_sr")(lambda: Int8Codec(symmetric=True,
+                                            stochastic=True))
+
+base._refresh_names()

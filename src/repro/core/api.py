@@ -101,6 +101,16 @@ class AlgoConfig:
     eta_g: float = 1.0               # server learning rate
     local_optimizer: str = "sgd"
     hyper: Any = None
+    # ---- uplink compression (repro.codec, DESIGN.md §13) ----
+    # delta codec by registry name ("identity" / "bf16" / "int8" /
+    # "int8_sym" / "int8_sr"); None = no codec (identical to "identity",
+    # which is a literal pass-through). Lives on AlgoConfig because a
+    # lossy codec changes WHAT the server aggregates — ExecConfig.codec
+    # can override it per execution regime.
+    codec: Optional[str] = None
+    # server-side error feedback: clients ship Delta_j + ef, the server
+    # keeps the mean sanitized quantization residual as the next ef
+    codec_ef: bool = False
 
 
 @dataclass
@@ -173,6 +183,16 @@ class ExecConfig:
     # it; the buffered-async engine folds a PARTIAL buffer rather than
     # waiting past the deadline for stragglers. None = wait forever.
     round_deadline: Optional[float] = None
+    # ---- uplink compression overrides (repro.codec, DESIGN.md §13) ----
+    # execution-level codec override: None defers to AlgoConfig.codec
+    # (the primary home of the knob); a regime entry in EXEC_REGIMES can
+    # set it so the cross-regime matrix auto-enrolls codec cells
+    codec: Optional[str] = None
+    codec_ef: Optional[bool] = None
+    # bounded thread pool for the per-image file decode of disk-backed
+    # sources (ingest/readers.py) — a driver hint like batch_size: the
+    # trainer never reads it, source constructors do. 0 = serial decode.
+    decode_workers: int = 0
     # data-shape hints for drivers that build sources from raw datasets
     # (the trainer itself never reads them)
     batch_size: int = 256
@@ -255,6 +275,17 @@ EXEC_REGIMES = {
     # guard's every multiplier is literally 1.0 (threshold starts +inf),
     # so the guarded round must reproduce the unguarded serial reference
     "guarded": {"guard": True},
+    # delta codecs (repro.codec, DESIGN.md §13): identity must reproduce
+    # the no-codec round BITWISE; the lossy cells must track the serial
+    # reference within the documented codec tolerance
+    # (tests/_regime_matrix_check.py CODEC_TOL), including the two-axis
+    # mesh and the buffered-async anchor
+    "codec_identity": {"codec": "identity"},
+    "codec_bf16": {"codec": "bf16"},
+    "codec_int8": {"codec": "int8"},
+    "codec_int8_2d": {"codec": "int8", "shard_clients": True,
+                      "shard_model": 4},
+    "codec_int8_async": {"codec": "int8", "async_buffer": True},
 }
 
 
@@ -288,6 +319,11 @@ class RoundRecord:
     deadline_fired: int = 0        # 1 if the round hit round_deadline
     deadline_dropped: int = 0      # clients dropped by the deadline
     ingest_restarts: int = 0       # staging-producer restarts this round
+    # uplink bytes this round: clients-that-shipped x the codec's wire
+    # bytes per delta (repro.codec, DESIGN.md §13) — full-precision f32
+    # bytes with no codec, so compression wins are measured, not
+    # asserted; kept OUT of diagnostics for the same matrix reason
+    comm_bytes_up: int = 0
 
 
 @dataclass
@@ -387,6 +423,38 @@ class FederatedTrainer:
                 clip_mult=exec_cfg.guard_clip_mult,
                 window=exec_cfg.guard_window,
                 min_history=exec_cfg.guard_min_history))
+        # ---- delta codec (repro.codec, DESIGN.md §13) ----
+        # ExecConfig overrides (regime enrollment) defer to AlgoConfig,
+        # the knob's primary home
+        from repro.codec import make_codec, tree_nbytes
+        codec_name = (exec_cfg.codec if exec_cfg.codec is not None
+                      else algo_cfg.codec)
+        want_ef = (exec_cfg.codec_ef if exec_cfg.codec_ef is not None
+                   else algo_cfg.codec_ef)
+        self._codec = make_codec(codec_name)
+        self._codec_lossy = bool(self._codec is not None
+                                 and self._codec.lossy)
+        if want_ef and not self._codec_lossy:
+            raise ValueError(
+                "codec_ef=True needs a LOSSY codec (bf16/int8 family): "
+                f"codec={codec_name!r} has no quantization residual to "
+                "feed back")
+        self._codec_ef = bool(self._codec_lossy and want_ef)
+        self._codec_stochastic = bool(self._codec_lossy
+                                      and self._codec.stochastic)
+        self._codec_key = (jax.random.PRNGKey(exec_cfg.seed)
+                           if self._codec_stochastic else None)
+        # server-side error-feedback accumulator: params-shaped f32,
+        # carried in TrainerState (checkpointed; bitwise on resume)
+        self._ef = (jax.tree.map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32), self.params)
+            if self._codec_ef else None)
+        # per-client uplink bytes (host-side static accounting for
+        # RoundRecord.comm_bytes_up): the codec's wire bytes, or the raw
+        # full-precision tree without one
+        self._client_bytes_up = (
+            self._codec.client_bytes(self.params)
+            if self._codec is not None else tree_nbytes(self.params))
         # sync engines mask timed-out clients out of the round; the async
         # engine instead stops collecting arrivals at the deadline (the
         # partial-buffer fold), so only the sync paths take the mask input
@@ -420,7 +488,8 @@ class FederatedTrainer:
         # and the ingest placer unpack it by position.
         round_shardings = self._round_shardings
         if round_shardings is not None and (
-                self._inject_deltas or self._deadline_mask or self._guard):
+                self._inject_deltas or self._deadline_mask or self._guard
+                or self._codec_stochastic or self._codec_ef):
             from jax.sharding import NamedSharding, PartitionSpec as P
             rep = NamedSharding(self.mesh, P())
             cli = NamedSharding(self.mesh, P("clients"))
@@ -433,6 +502,14 @@ class FederatedTrainer:
             if self._guard is not None:
                 ins.append(rep)              # guard_thresh scalar
                 outs.append(cli)             # guard_stats (K,) prefix
+            if self._codec_stochastic:
+                ins.append(rep)              # per-round PRNG key
+            if self._codec_ef:
+                # the EF accumulator mirrors the params tree, so it
+                # takes the params' shardings (per-leaf on a two-axis
+                # mesh) on the way in AND out
+                ins.append(ins[1])
+                outs.append(ins[1])
             round_shardings = (tuple(ins), tuple(outs))
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
@@ -445,7 +522,8 @@ class FederatedTrainer:
             inject_faults=self._inject_deltas,
             deadline_mask=self._deadline_mask,
             fault_magnitude=(fault_plan.explode_magnitude
-                             if fault_plan is not None else 1e12))
+                             if fault_plan is not None else 1e12),
+            codec=self._codec, codec_ef=self._codec_ef)
         if self.mesh is not None:
             # pre-place so the first round's donation matches: replicated
             # on the 1-D client mesh, per-leaf model-sharded on a
@@ -453,6 +531,8 @@ class FederatedTrainer:
             p_sh, s_sh = self._placements()
             self.params = jax.device_put(self.params, p_sh)
             self.server_state = jax.device_put(self.server_state, s_sh)
+            if self._ef is not None:
+                self._ef = jax.device_put(self._ef, p_sh)
         # serial reference path (exec.vectorize=False): per-client dispatch
         from repro.core.baselines import client_kwargs
         self.local_update = client_mod.make_local_update(
@@ -541,6 +621,8 @@ class FederatedTrainer:
         rule (FedDPC family) takes the discounts as its own reduction-
         pass scalars; any other rule gets the buffered deltas pre-scaled
         (FedBuff mean semantics)."""
+        from repro.codec import base as codec_base
+        from repro.core import projection as proj
         from repro.core.async_engine import BufferedAsyncEngine
         from repro.core.baselines import client_kwargs
         local = client_mod.make_cohort_local_update(
@@ -551,10 +633,41 @@ class FederatedTrainer:
             self.mesh is not None and "model" in self.mesh.axis_names
             and dict(zip(self.mesh.axis_names,
                          self.mesh.devices.shape))["model"] > 1)
+        # codec stage (repro.codec, DESIGN.md §13): the wave ENCODES its
+        # cohort before the entries hit the arrival heap — in-flight and
+        # checkpointed entries carry the quantized wire payload, and the
+        # fold decodes (staleness weights compose with the dequant
+        # scales: both are per-arrival multipliers on the reduction-pass
+        # scalars). EF updates at encode time, in dispatch order.
+        codec_obj = self._codec if self._codec_lossy else None
+        codec_stoch = self._codec_stochastic
+        codec_ef = self._codec_ef
+        k_real = exec_cfg.clients_per_round
 
-        def wave_update(params, server_state, batches, masks):
+        def wave_update(params, server_state, batches, masks, *codec_in):
+            it = iter(codec_in)
+            key = next(it) if codec_stoch else None
+            ef = next(it) if codec_ef else None
             extra = algo.client_extra(server_state)
-            return local(params, batches, masks, extra)
+            deltas, losses = local(params, batches, masks, extra)
+            if codec_obj is None:
+                return deltas, losses
+            shipped = deltas
+            if ef is not None:
+                shipped = jax.tree.map(
+                    lambda d, e: (d.astype(jnp.float32)
+                                  + e.astype(jnp.float32)[None]
+                                  ).astype(d.dtype), deltas, ef)
+            payload = codec_obj.encode_cohort(shipped, key=key)
+            if ef is None:
+                return payload, losses
+            dec = codec_obj.decode_cohort(payload)
+            resid = codec_base.sanitized_residual(shipped, dec)
+            # padded dummy rows (sharded path) ship nothing: mask them
+            # out of the accumulator mean
+            cmw = jnp.arange(losses.shape[0]) < k_real
+            new_ef = proj.masked_client_mean(resid, cmw)
+            return payload, losses, new_ef
 
         inject = self._inject_deltas
         guard = self._guard is not None
@@ -563,23 +676,33 @@ class FederatedTrainer:
                      if self.fault_plan is not None else 1e12)
 
         def fold(server_state, params, deltas, ids, weights, *chaos):
-            # chaos extras (DESIGN.md §12) in the same fixed order as the
-            # fused sync round: fault codes re-derived per ARRIVAL (so
-            # checkpointed in-flight entries stay clean and resume
-            # bitwise), then the guard threshold
+            # the buffered arrivals carry the codec wire payload: decode
+            # FIRST, then the chaos extras (DESIGN.md §12) in the same
+            # fixed order as the fused sync round: fault codes re-derived
+            # per ARRIVAL (so checkpointed in-flight entries stay clean
+            # and resume bitwise), then the guard threshold — both
+            # operate on the decoded (quantized-domain) values, exactly
+            # like the sync round's guard
+            encoded = None
+            if codec_obj is not None:
+                encoded = deltas
+                deltas = codec_obj.decode_cohort(deltas)
             it = iter(chaos)
             if inject:
                 deltas = round_mod.apply_fault_codes(deltas, next(it),
                                                      magnitude)
+                encoded = None       # payload no longer matches the rows
             cm = gstats = None
             if guard:
                 deltas, ids, cm, gstats = round_mod.apply_guard(
                     deltas, ids, cm, next(it), guard_cfg)
+                encoded = None
             if algo.staleness_aware:
                 out = algo.step(server_state, params, deltas, ids, eta_g,
                                 0, client_mask=cm,
                                 model_sharded=model_sharded,
-                                staleness_weights=weights)
+                                staleness_weights=weights,
+                                encoded=encoded)
             else:
                 pre = jax.tree.map(
                     lambda x: weights.reshape((-1,) + (1,) * (x.ndim - 1))
@@ -613,8 +736,16 @@ class FederatedTrainer:
             from repro.sharding.rules import async_round_shardings
             w_in, w_out, f_in, f_out = async_round_shardings(
                 self.mesh, params=self.params,
-                server_state=self.server_state)
+                server_state=self.server_state,
+                codec_payload=codec_obj is not None)
             rep = NamedSharding(self.mesh, P())
+            # codec extras on the wave: the PRNG key replicates, the EF
+            # accumulator mirrors the params tree (w_in[0]) in and out
+            if codec_stoch:
+                w_in = w_in + (rep,)
+            if codec_ef:
+                w_in = w_in + (w_in[0],)
+                w_out = w_out + (w_in[0],)
             # chaos extras are tiny (B,) / scalar host-built arrays and
             # the guard stats come straight back to the host: replicate
             f_in = f_in + (rep,) * (int(inject) + int(guard))
@@ -622,9 +753,29 @@ class FederatedTrainer:
                 f_out = f_out + (rep,)
             wave_kw.update(in_shardings=w_in, out_shardings=w_out)
             fold_kw.update(in_shardings=f_in, out_shardings=f_out)
+        jit_wave = jax.jit(wave_update, **wave_kw)
+        wave_call = jit_wave
+        if codec_stoch or codec_ef:
+            # python wrapper around the jit: feeds the per-wave PRNG key
+            # and the CURRENT EF accumulator, and commits the new one —
+            # EF advances in dispatch order (deterministic; the engine
+            # dispatches waves in wave_frontier order), so save/resume
+            # replays it bitwise
+            def wave_call(params, server_state, batches, masks):
+                args = [params, server_state, batches, masks]
+                if codec_stoch:
+                    args.append(jax.random.fold_in(
+                        self._codec_key, self._engine.wave_frontier))
+                if codec_ef:
+                    args.append(self._ef)
+                out = jit_wave(*args)
+                if codec_ef:
+                    payload, losses, self._ef = out
+                    return payload, losses
+                return out
         return BufferedAsyncEngine(
             pipeline=self._pipeline,
-            wave_update=jax.jit(wave_update, **wave_kw),
+            wave_update=wave_call,
             fold=jax.jit(fold, **fold_kw),
             runtime_take=self._runtime_take,
             buffer_size=(exec_cfg.buffer_size
@@ -649,6 +800,18 @@ class FederatedTrainer:
         (the same trees the round's jit donates against)."""
         (s_sh, p_sh, _, _, _), _ = self._round_shardings
         return p_sh, s_sh
+
+    def _entry_delta_template(self) -> PyTree:
+        """ShapeDtypeStruct tree of ONE async BufferEntry's delta: the
+        raw params tree without a codec, the codec's single-client wire
+        payload with one — the async checkpoint arrays stack its leaves
+        per entry with exact dtypes (int8 q codes stay int8 on disk)."""
+        if self._codec_lossy:
+            stacked = self._codec.encoded_template(self.params, 1)
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(tuple(s.shape)[1:], s.dtype),
+                stacked)
+        return self.params
 
     def _sample_clients(self, t: int) -> np.ndarray:
         with self._sample_lock:
@@ -705,7 +868,8 @@ class FederatedTrainer:
         staged = (self._pipeline.get(t) if self.cfg.prefetch
                   else self._pipeline.stage_blocking(t))
         chaos = (self._inject_deltas or self._deadline_mask
-                 or self._guard is not None)
+                 or self._guard is not None or self._codec_stochastic
+                 or self._codec_ef)
         try:
             if not chaos:
                 self.params, self.server_state, losses, diag = \
@@ -716,11 +880,13 @@ class FederatedTrainer:
                 # done with the inputs and the staging slot is reusable;
                 # dummy padded clients sit past the real K and report
                 # loss 0
-                train_loss = float(jnp.mean(losses[:len(staged.clients)]))
+                n = len(staged.clients)
+                train_loss = float(jnp.mean(losses[:n]))
                 return (train_loss, diag, staged.host_seconds,
-                        staged.device_seconds, {})
-            # ---- chaos-hardened round (DESIGN.md §12): same program,
-            # extended by the fixed-order extras ----
+                        staged.device_seconds,
+                        {"comm_bytes_up": self._client_bytes_up * n})
+            # ---- chaos-hardened / codec-extra round (DESIGN.md §12,
+            # §13): same program, extended by the fixed-order extras ----
             n = len(staged.clients)
             kp = int(np.shape(staged.ids)[0])        # padded cohort size
             args = [self.server_state, self.params, staged.batches,
@@ -741,8 +907,17 @@ class FederatedTrainer:
                 extra["deadline_fired"] = int((~live).any())
             if self._guard is not None:
                 args.append(jnp.float32(self._guard.threshold()))
-                self.params, self.server_state, losses, diag, gstats = \
-                    self._cohort_round(*args)
+            if self._codec_stochastic:
+                args.append(jax.random.fold_in(self._codec_key, t))
+            if self._codec_ef:
+                args.append(self._ef)
+            outs = list(self._cohort_round(*args))
+            if self._codec_ef:
+                self._ef = outs.pop()
+            if self._guard is not None:
+                gstats = outs.pop()
+            self.params, self.server_state, losses, diag = outs
+            if self._guard is not None:
                 q = np.asarray(gstats["quarantined"])[:n]
                 c = np.asarray(gstats["clipped"])[:n]
                 norms = np.asarray(gstats["norm"])[:n]
@@ -753,9 +928,9 @@ class FederatedTrainer:
                 self._guard.observe(norms[live & ~q],
                                     quarantined=extra["quarantined"],
                                     clipped=extra["clipped"])
-            else:
-                self.params, self.server_state, losses, diag = \
-                    self._cohort_round(*args)
+            # uplink accounting: only clients whose update actually
+            # shipped (live rows) pay wire bytes
+            extra["comm_bytes_up"] = self._client_bytes_up * int(live.sum())
             # train loss over clients whose update ARRIVED (live rows) —
             # identical to the historical mean when nothing timed out
             losses_h = np.asarray(losses[:n])
@@ -794,6 +969,23 @@ class FederatedTrainer:
             stacked = round_mod.apply_fault_codes(
                 stacked, jnp.asarray(codes),
                 self.fault_plan.explode_magnitude)
+        # codec stage (repro.codec, DESIGN.md §13), eager on the host-
+        # stacked deltas — the SAME encode -> decode -> guard -> EF order
+        # the fused round compiles, so codec regimes stay cross-checkable
+        # against this path
+        shipped = decoded = None
+        if self._codec_lossy:
+            shipped = stacked
+            if self._codec_ef:
+                shipped = jax.tree.map(
+                    lambda d, e: (d.astype(jnp.float32)
+                                  + e.astype(jnp.float32)[None]
+                                  ).astype(d.dtype), stacked, self._ef)
+            key = (jax.random.fold_in(self._codec_key, t)
+                   if self._codec_stochastic else None)
+            payload = self._codec.encode_cohort(shipped, key=key)
+            decoded = self._codec.decode_cohort(payload)
+            stacked = decoded
         if self._deadline_mask:
             lat, dropped = self._runtime_take(t)
             live = (~dropped) & (lat <= self.cfg.round_deadline)
@@ -814,8 +1006,16 @@ class FederatedTrainer:
             self._guard.observe(norms[live & ~q],
                                 quarantined=out["quarantined"],
                                 clipped=out["clipped"])
+        if self._codec_ef:
+            # pre-guard decode residual, nonfinite-sanitized, mean over
+            # the surviving clients (mirrors the fused round)
+            from repro.codec import base as codec_base
+            from repro.core import projection as proj
+            resid = codec_base.sanitized_residual(shipped, decoded)
+            self._ef = proj.masked_client_mean(resid, cm)
         self.params, self.server_state, diag = self._server_step(
             self.server_state, self.params, stacked, ids, cm)
+        out["comm_bytes_up"] = self._client_bytes_up * int(live.sum())
         losses_h = np.asarray(losses)
         train_loss = float(losses_h[live].mean()) if live.any() else 0.0
         return train_loss, diag, ingest, 0.0, out
@@ -828,7 +1028,10 @@ class FederatedTrainer:
         self.params, self.server_state, m = self._engine.run_server_round(
             t, self.params, self.server_state)
         extra = {"staleness_mean": m["staleness_mean"],
-                 "staleness_max": m["staleness_max"]}
+                 "staleness_max": m["staleness_max"],
+                 # uplink accounting: the arrivals this fold consumed
+                 "comm_bytes_up": (self._client_bytes_up
+                                   * int(m["n_arrivals"]))}
         if self.cfg.round_deadline is not None:
             extra["deadline_fired"] = int(m["deadline_fired"])
             extra["deadline_dropped"] = int(m["deadline_dropped"])
@@ -995,6 +1198,16 @@ class FederatedTrainer:
             schedule=schedule, history=list(self.history),
             runtime_state=cap.get("runtime"))
 
+    def _codec_echo(self) -> Optional[dict]:
+        """JSON echo of the LOSSY codec configuration (identity is
+        bitwise the no-codec path, so it normalizes to None): the codec
+        decides what the aggregated values ARE, and with EF it decides
+        the accumulator trajectory — a resume mismatch silently
+        diverges, so restore() compares this and fails loudly."""
+        if not self._codec_lossy:
+            return None
+        return {"config": self._codec.config_dict(), "ef": self._codec_ef}
+
     def _algo_echo(self) -> dict:
         """JSON echo of everything that parameterizes the compiled round
         — a resume with ANY of these changed cannot continue the run."""
@@ -1024,6 +1237,11 @@ class FederatedTrainer:
             "schedule": (np.stack(st.schedule).astype(np.int64)
                          if st.schedule else np.zeros((0, k), np.int64)),
         }
+        if self._codec_ef:
+            # error-feedback accumulator (repro.codec, DESIGN.md §13):
+            # params-shaped f32, saved leaf-exact so resume is bitwise
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(self._ef)):
+                aux_arrays[f"codec_ef_{i}"] = np.asarray(leaf, np.float32)
         if self._engine is not None:
             # buffered-async streaming state (DESIGN.md §11): virtual
             # clock + the in-flight entries (dispatched, not yet folded)
@@ -1050,7 +1268,9 @@ class FederatedTrainer:
                 "async_entry_loss": np.asarray(
                     [e.loss for e in entries], np.float32),
             })
-            for i in range(len(jax.tree_util.tree_leaves(self.params))):
+            n_entry_leaves = len(jax.tree_util.tree_leaves(
+                self._entry_delta_template()))
+            for i in range(n_entry_leaves):
                 if entries:
                     aux_arrays[f"async_delta_{i}"] = np.stack(
                         [np.asarray(jax.tree_util.tree_leaves(e.delta)[i])
@@ -1070,6 +1290,7 @@ class FederatedTrainer:
             "sampler": {"class": type(self.sampler).__name__,
                         "config": self.sampler.config_dict(),
                         "state": st.sampler_state},
+            "codec": self._codec_echo(),
             "history": [asdict(r) for r in st.history],
         }
         if self._engine is not None:
@@ -1248,8 +1469,26 @@ class FederatedTrainer:
                 "trainer was built with chaos hardening (guard/fault "
                 "plan/deadline) but the checkpoint has none — resume "
                 "with the original configuration")
+        if meta.get("codec") != self._codec_echo():
+            # the codec decides what the aggregated values ARE (and the
+            # EF accumulator trajectory): a mismatch cannot continue the
+            # run — fail here, not rounds later
+            raise ValueError(
+                f"checkpoint codec configuration {meta.get('codec')} "
+                f"does not match the trainer's {self._codec_echo()} — "
+                "resume with the original codec/codec_ef configuration")
         self.params = state["params"]
         self.server_state = state["server_state"]
+        if self._codec_ef:
+            if "codec_ef_0" not in arrays:
+                raise ValueError(
+                    "trainer expects an error-feedback accumulator but "
+                    "the checkpoint carries none — resume with the "
+                    "original codec configuration")
+            leaves, treedef = jax.tree_util.tree_flatten(self._ef)
+            self._ef = jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(arrays[f"codec_ef_{i}"], jnp.float32)
+                          for i in range(len(leaves))])
         if self.mesh is not None:
             # checkpoints hold full (host) arrays, so restoring onto a
             # DIFFERENT mesh shape than the one that saved them works:
@@ -1259,6 +1498,8 @@ class FederatedTrainer:
             p_sh, s_sh = self._placements()
             self.params = jax.device_put(self.params, p_sh)
             self.server_state = jax.device_put(self.server_state, s_sh)
+            if self._ef is not None:
+                self._ef = jax.device_put(self._ef, p_sh)
         self.rng.set_state(("MT19937",
                             np.asarray(arrays["rng_keys"], np.uint32),
                             int(arrays["rng_pos"]),
@@ -1292,7 +1533,11 @@ class FederatedTrainer:
             n = int(arrays["async_n_inflight"])
             entries = []
             if n:
-                _, treedef = jax.tree_util.tree_flatten(self.params)
+                # entry deltas are raw params trees, or the codec's
+                # single-client wire payloads (exact dtypes round-trip
+                # through the npz sidecar, so int8 codes reload as int8)
+                _, treedef = jax.tree_util.tree_flatten(
+                    self._entry_delta_template())
                 stacked = [jnp.asarray(arrays[f"async_delta_{i}"])
                            for i in range(treedef.num_leaves)]
                 for j in range(n):

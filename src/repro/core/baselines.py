@@ -338,12 +338,13 @@ def _build_fedvarp(h):
 def _build_feddpc(h):
     def step(state, params, deltas, client_ids, eta_g, t,
              client_mask=None, model_sharded=False,
-             staleness_weights=None, **_):
+             staleness_weights=None, encoded=None, **_):
         return feddpc_mod.server_step(state, params, deltas, eta_g, h.lam,
                                       use_kernel=h.use_kernel,
                                       client_mask=client_mask,
                                       model_sharded=model_sharded,
-                                      staleness_weights=staleness_weights)
+                                      staleness_weights=staleness_weights,
+                                      encoded=encoded)
     return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step,
                       staleness_aware=True)
 

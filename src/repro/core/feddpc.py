@@ -31,7 +31,7 @@ def init_state(params: PyTree) -> Dict[str, PyTree]:
 def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
                 eta_g: float, lam: float = 1.0, use_kernel: bool = False,
                 client_mask=None, model_sharded: bool = False,
-                staleness_weights=None
+                staleness_weights=None, encoded=None
                 ) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jnp.ndarray]]:
     """One FedDPC aggregation.
 
@@ -66,6 +66,15 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     the masked path uses, leaving the epilogue unchanged. At staleness
     0 every weight is exactly 1.0 and the step is the synchronous one.
 
+    ``encoded`` is the codec wire payload ({"q", "scale", "zero"} trees,
+    repro/codec) whose dequant — ``q * scale + zero`` — reproduces
+    ``deltas`` exactly. The reduction-pass scalars are still computed on
+    the decoded ``deltas`` (4 dots per client, cheap); with ``use_kernel``
+    the epilogue routes to the fused dequant→residual→scale→mean grid
+    (kernels/feddpc_project.dequant_*), which reads the int8/bf16 stack
+    straight from HBM — the full-precision decoded stack never makes a
+    second full-memory pass. Ignored on the model-sharded fallback.
+
     Returns (new_params, new_state, diagnostics).
     """
     if model_sharded:
@@ -93,7 +102,13 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
         # buffered-async fold routes to the scatter-accumulate variant,
         # which applies the staleness discount inside the grid.
         from repro.kernels.feddpc_project import ops as k_ops
-        if wgt is None:
+        if encoded is not None and wgt is None:
+            new_params, delta_t = k_ops.dequant_batched_server_epilogue(
+                encoded, delta_prev, params, coefs, scales, eta_g)
+        elif encoded is not None:
+            new_params, delta_t = k_ops.dequant_buffered_server_fold(
+                encoded, delta_prev, params, coefs, scales, wgt, eta_g)
+        elif wgt is None:
             new_params, delta_t = k_ops.batched_server_epilogue(
                 deltas, delta_prev, params, coefs, scales, eta_g)
         else:

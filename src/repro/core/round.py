@@ -31,6 +31,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.codec import base as codec_base
 from repro.core import client as client_mod
 from repro.core import faults as faults_mod
 from repro.core import projection as proj
@@ -122,7 +123,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       guard: bool = False, guard_cfg=None,
                       inject_faults: bool = False,
                       deadline_mask: bool = False,
-                      fault_magnitude: float = 1e12):
+                      fault_magnitude: float = 1e12,
+                      codec=None, codec_ef: bool = False):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids, *extras) -> (new_params, new_server_state, losses, diag
     [, guard_stats]).
@@ -136,6 +138,22 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     replaced by an out-of-range sentinel so FedVARP's scatter drops it),
     and ``guard`` appends a scalar f32 ``guard_thresh`` and a trailing
     ``guard_stats`` output.
+
+    The codec extras (repro/codec, DESIGN.md §13) extend that order: with
+    a LOSSY ``codec`` (identity never enters the program) the round
+    encodes each client's shipped delta, decodes it, and aggregates the
+    DECODED values — so the simulated uplink carries exactly the codec's
+    wire format. A stochastic codec appends a PRNG-key input after
+    ``guard_thresh``; ``codec_ef=True`` appends a params-shaped f32
+    error-feedback accumulator input after that, and a matching
+    ``new_ef`` output after ``guard_stats``. EF uses broadcast
+    compensation: every client ships ``Delta_j + ef`` and the new
+    accumulator is the guarded-client mean of the sanitized
+    (nonfinite-zeroed) quantization residuals. The guard, when enabled,
+    reads the decoded (quantized-domain) norms; the fused Pallas dequant
+    epilogue is only engaged when the guard is off, because quarantine/
+    clip rewrite decoded rows that the payload scalars no longer
+    describe.
 
     The guard validates every delta BEFORE the server rule sees it:
     per-client ||Δ||² + non-finite count (the reduction-pass sweep the
@@ -209,6 +227,14 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     model_sharded = bool(
         mesh is not None and model_axis in mesh.axis_names
         and dict(zip(mesh.axis_names, mesh.devices.shape))[model_axis] > 1)
+    # codec stage (repro/codec, DESIGN.md §13): only LOSSY codecs enter
+    # the program — identity is a literal pass-through and compiles to
+    # the no-codec round. Error feedback adds one params-shaped f32
+    # accumulator input + output; stochastic rounding adds a key input.
+    codec_lossy = bool(codec is not None and codec.lossy)
+    ef_active = bool(codec_lossy and codec_ef)
+    codec_stochastic = bool(codec_lossy
+                            and getattr(codec, "stochastic", False))
 
     def cohort_round(server_state, params, batches, masks, client_ids,
                      *extras):
@@ -216,6 +242,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         fault_codes = next(it) if inject_faults else None
         live_mask = next(it) if deadline_mask else None
         guard_thresh = next(it) if guard else None
+        codec_key = next(it) if codec_stochastic else None
+        ef = next(it) if ef_active else None
         extra = algo.client_extra(server_state)
         deltas, losses = local(params, batches, masks, extra)
         if inject_faults:
@@ -235,16 +263,48 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             client_ids = jnp.where(live_mask, client_ids.astype(jnp.int32),
                                    ID_SENTINEL)
             cm = live_mask if cm is None else cm & live_mask
+        payload = shipped = decoded = None
+        if codec_lossy:
+            # what each client SHIPS: its delta plus the server-held
+            # error-feedback residual (broadcast compensation — the same
+            # accumulator is folded into every row, so a mean-style rule
+            # recovers the compensation exactly in aggregate)
+            shipped = deltas
+            if ef_active:
+                shipped = jax.tree.map(
+                    lambda d, e: (d.astype(jnp.float32)
+                                  + e.astype(jnp.float32)[None]
+                                  ).astype(d.dtype), deltas, ef)
+            payload = codec.encode_cohort(shipped, key=codec_key)
+            decoded = codec.decode_cohort(payload)
+            deltas = decoded
         gstats = None
         if guard:
+            # quarantine/clip decisions read the DECODED (quantized-
+            # domain) deltas — the values the server would aggregate
             deltas, client_ids, cm, gstats = apply_guard(
                 deltas, client_ids, cm, guard_thresh, guard_cfg)
+        new_ef = None
+        if ef_active:
+            # residual of the PRE-guard decode (pure quantization error;
+            # a clipped row's shaved mass is a guard decision, not lost
+            # signal), nonfinite-sanitized so faulty rows cannot poison
+            # the accumulator, mean over the surviving clients only
+            resid = codec_base.sanitized_residual(shipped, decoded)
+            new_ef = proj.masked_client_mean(resid, cm)
+        # the fused dequant epilogue re-derives the decoded rows from the
+        # payload scalars, so it is only handed over when the guard has
+        # NOT rewritten rows between decode and aggregation
         new_params, new_state, diag = algo.step(
             server_state, params, deltas, client_ids, eta_g, 0,
-            client_mask=cm, model_sharded=model_sharded)
+            client_mask=cm, model_sharded=model_sharded,
+            encoded=(payload if codec_lossy and not guard else None))
+        outs = [new_params, new_state, losses, diag]
         if guard:
-            return new_params, new_state, losses, diag, gstats
-        return new_params, new_state, losses, diag
+            outs.append(gstats)
+        if ef_active:
+            outs.append(new_ef)
+        return tuple(outs)
 
     if not jit:
         return cohort_round

@@ -240,6 +240,149 @@ def buffer_fold(d3: jnp.ndarray, p2: jnp.ndarray, w2: jnp.ndarray,
     )(coefs, scales, wgts, eta, d3, p2, w2)
 
 
+def _dequant_batched_epilogue_kernel(coef_ref, scale_ref, qs_ref, qz_ref,
+                                     eta_ref, q_ref, p_ref, w_ref,
+                                     w_out_ref, dt_out_ref):
+    """``_batched_epilogue_kernel`` with the codec dequant fused in front
+    (DESIGN.md §13): the resident (K, rows, 128) block holds the
+    QUANTIZED cohort (int8 or bf16 — 4x / 2x less HBM traffic and VMEM
+    residency than the f32 stack), and the per-client dequant
+    ``d_j = q_j * qs_j + qz_j`` runs on the VPU right before the
+    residual+scale+mean, so the f32 deltas never materialize:
+
+        dt  = mean_j scale_j * ((q_j * qs_j + qz_j) - coef_j * prev)
+        w'  = w - eta_g * dt
+    """
+    q = q_ref[...].astype(jnp.float32)                    # (K, r, 128)
+    qs = qs_ref[...].astype(jnp.float32)[:, None, None]
+    qz = qz_ref[...].astype(jnp.float32)[:, None, None]
+    d = q * qs + qz
+    p = p_ref[...].astype(jnp.float32)                    # (r, 128)
+    coef = coef_ref[...].astype(jnp.float32)[:, None, None]
+    scale = scale_ref[...].astype(jnp.float32)[:, None, None]
+    dt = jnp.mean(scale * (d - coef * p[None]), axis=0)
+    dt_out_ref[...] = dt.astype(dt_out_ref.dtype)
+    w = w_ref[...].astype(jnp.float32)
+    w_out_ref[...] = (w - eta_ref[0] * dt).astype(w_out_ref.dtype)
+
+
+def dequant_batched_epilogue(q3: jnp.ndarray, p2: jnp.ndarray,
+                             w2: jnp.ndarray, coefs, scales, eta_g,
+                             qscales, qzeros, *, rows: int = None,
+                             interpret: bool = True):
+    """``batched_epilogue`` over a QUANTIZED cohort stack.
+
+    q3: (K, M, 128) int8/bf16 quantized deltas; qscales/qzeros: (K,)
+    per-client dequant scalars for this leaf (repro/codec wire format:
+    ``dequant(q) = q * qscale + qzero``); everything else as
+    ``batched_epilogue``. The grid/blocking is identical — only the
+    resident cohort block shrinks by the quantized dtype's itemsize.
+    NOTE: int8's real-TPU min sublane tile is (32, 128), so the rows
+    floor of 8 is an interpret-mode/bench layout; real-TPU autotuning
+    stays with the carried-over ROADMAP item. Zero-padded rows dequant
+    to qzero (not 0) — callers must trim outputs to the true length
+    (ops.py does), exactly as they already trim the f32 path.
+    """
+    k, m, lane = q3.shape
+    assert lane == LANE, q3.shape
+    rows = min(rows or max(8, DEFAULT_ROWS // max(1, k)), m)
+    while m % rows:                 # largest divisor <= target (trace-time)
+        rows -= 1
+    grid = (pl.cdiv(m, rows),)
+    coefs = jnp.asarray(coefs, jnp.float32).reshape(k)
+    scales = jnp.asarray(scales, jnp.float32).reshape(k)
+    qscales = jnp.asarray(qscales, jnp.float32).reshape(k)
+    qzeros = jnp.asarray(qzeros, jnp.float32).reshape(k)
+    eta = jnp.asarray(eta_g, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _dequant_batched_epilogue_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),       # coefs (broadcast)
+            pl.BlockSpec((k,), lambda i: (0,)),       # scales
+            pl.BlockSpec((k,), lambda i: (0,)),       # dequant scales
+            pl.BlockSpec((k,), lambda i: (0,)),       # dequant zero-points
+            pl.BlockSpec((1,), lambda i: (0,)),       # eta_g
+            pl.BlockSpec((k, rows, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, lane), w2.dtype),
+                   jax.ShapeDtypeStruct((m, lane), jnp.float32)],
+        interpret=interpret,
+    )(coefs, scales, qscales, qzeros, eta, q3, p2, w2)
+
+
+def _dequant_buffer_fold_kernel(inv_b, coef_ref, scale_ref, wgt_ref,
+                                qs_ref, qz_ref, eta_ref, q_ref, p_ref,
+                                w_ref, w_out_ref, dt_out_ref):
+    """``_buffer_fold_kernel`` with the per-arrival dequant fused in: the
+    staleness discount wgt_j and the dequant scale qs_j COMPOSE as plain
+    per-j scalar multipliers on the streamed block (DESIGN.md §11/§13):
+
+        dt = (1/B) sum_j wgt_j * scale_j * ((q_j * qs_j + qz_j) - coef_j * prev)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dt_out_ref[...] = jnp.zeros_like(dt_out_ref)
+
+    d = q_ref[0].astype(jnp.float32) * qs_ref[0] + qz_ref[0]   # (r, 128)
+    p = p_ref[...].astype(jnp.float32)                          # (r, 128)
+    dt_out_ref[...] += ((wgt_ref[0] * scale_ref[0])
+                        * (d - coef_ref[0] * p)) * inv_b
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        w = w_ref[...].astype(jnp.float32)
+        w_out_ref[...] = (w - eta_ref[0] * dt_out_ref[...]
+                          ).astype(w_out_ref.dtype)
+
+
+def dequant_buffer_fold(q3: jnp.ndarray, p2: jnp.ndarray, w2: jnp.ndarray,
+                        coefs, scales, wgts, eta_g, qscales, qzeros, *,
+                        rows: int = None, interpret: bool = True):
+    """``buffer_fold`` over a QUANTIZED arrival buffer: q3 (B, M, 128)
+    int8/bf16, qscales/qzeros (B,) per-arrival dequant scalars; the
+    scatter-accumulate grid is unchanged (B innermost, dt resident) and
+    each streamed block is dequantized on the fly."""
+    b, m, lane = q3.shape
+    assert lane == LANE, q3.shape
+    rows = min(rows or DEFAULT_ROWS, m)
+    while m % rows:                 # largest divisor <= target (trace-time)
+        rows -= 1
+    grid = (pl.cdiv(m, rows), b)    # j (arrivals) innermost: dt resident
+    coefs = jnp.asarray(coefs, jnp.float32).reshape(b)
+    scales = jnp.asarray(scales, jnp.float32).reshape(b)
+    wgts = jnp.asarray(wgts, jnp.float32).reshape(b)
+    qscales = jnp.asarray(qscales, jnp.float32).reshape(b)
+    qzeros = jnp.asarray(qzeros, jnp.float32).reshape(b)
+    eta = jnp.asarray(eta_g, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_dequant_buffer_fold_kernel, 1.0 / b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # coef_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # scale_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # staleness wgt_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # dequant scale_j
+            pl.BlockSpec((1,), lambda i, j: (j,)),    # dequant zero_j
+            pl.BlockSpec((1,), lambda i, j: (0,)),    # eta_g (broadcast)
+            pl.BlockSpec((1, rows, LANE), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+            pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((rows, LANE), lambda i, j: (i, 0)),
+                   pl.BlockSpec((rows, LANE), lambda i, j: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, lane), w2.dtype),
+                   jax.ShapeDtypeStruct((m, lane), jnp.float32)],
+        interpret=interpret,
+    )(coefs, scales, wgts, qscales, qzeros, eta, q3, p2, w2)
+
+
 def _epilogue_kernel(coef_ref, scale_ref, d_ref, p_ref, out_ref):
     coef = coef_ref[0]
     scale = scale_ref[0]

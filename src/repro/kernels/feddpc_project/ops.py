@@ -152,6 +152,72 @@ def buffered_server_fold(deltas, delta_prev, params, coefs, scales,
             jax.tree_util.tree_unflatten(treedef, new_dt))
 
 
+def dequant_batched_server_epilogue(payload, delta_prev, params, coefs,
+                                    scales, eta_g, interpret: bool = None):
+    """``batched_server_epilogue`` fed the codec's QUANTIZED cohort
+    payload (``{"q", "scale", "zero"}`` per-leaf trees, repro/codec wire
+    format) instead of the f32 delta stack: the per-leaf dequant fuses
+    into the epilogue grid (kernel.dequant_batched_epilogue), so the
+    cohort's HBM sweep reads int8/bf16 blocks. Padded tails dequant to
+    the zero-point, which is trimmed away exactly like the f32 path's
+    zero padding."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat_q, treedef = jax.tree_util.tree_flatten(payload["q"])
+    flat_qs = jax.tree.leaves(payload["scale"])
+    flat_qz = jax.tree.leaves(payload["zero"])
+    flat_p = jax.tree.leaves(delta_prev)
+    flat_w = jax.tree.leaves(params)
+    new_w, new_dt = [], []
+    for q, qs, qz, p, w in zip(flat_q, flat_qs, flat_qz, flat_p, flat_w):
+        k = q.shape[0]
+        rows = max(8, K.DEFAULT_ROWS // max(1, k))
+        q3, n = _to_2d_batched(q, rows)
+        rows = min(rows, q3.shape[1])
+        p2 = jnp.pad(p.reshape(-1), (0, q3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w2 = jnp.pad(w.reshape(-1), (0, q3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w_out2, dt2 = K.dequant_batched_epilogue(
+            q3, p2, w2, coefs, scales, eta_g, qs, qz,
+            rows=rows, interpret=interpret)
+        new_w.append(_from_2d(w_out2, n, w.shape, w.dtype))
+        new_dt.append(_from_2d(dt2, n, p.shape, jnp.float32))
+    return (jax.tree_util.tree_unflatten(treedef, new_w),
+            jax.tree_util.tree_unflatten(treedef, new_dt))
+
+
+def dequant_buffered_server_fold(payload, delta_prev, params, coefs,
+                                 scales, weights, eta_g,
+                                 interpret: bool = None):
+    """``buffered_server_fold`` fed the codec's quantized arrival-buffer
+    payload: the per-arrival dequant fuses into the scatter-accumulate
+    stream (kernel.dequant_buffer_fold), staleness discounts composing
+    with the dequant scales as per-arrival scalars."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat_q, treedef = jax.tree_util.tree_flatten(payload["q"])
+    flat_qs = jax.tree.leaves(payload["scale"])
+    flat_qz = jax.tree.leaves(payload["zero"])
+    flat_p = jax.tree.leaves(delta_prev)
+    flat_w = jax.tree.leaves(params)
+    new_w, new_dt = [], []
+    for q, qs, qz, p, w in zip(flat_q, flat_qs, flat_qz, flat_p, flat_w):
+        q3, n = _to_2d_batched(q, K.DEFAULT_ROWS)
+        rows = min(K.DEFAULT_ROWS, q3.shape[1])
+        p2 = jnp.pad(p.reshape(-1), (0, q3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w2 = jnp.pad(w.reshape(-1), (0, q3.shape[1] * K.LANE - n)
+                     ).reshape(-1, K.LANE)
+        w_out2, dt2 = K.dequant_buffer_fold(
+            q3, p2, w2, coefs, scales, weights, eta_g, qs, qz,
+            rows=rows, interpret=interpret)
+        new_w.append(_from_2d(w_out2, n, w.shape, w.dtype))
+        new_dt.append(_from_2d(dt2, n, p.shape, jnp.float32))
+    return (jax.tree_util.tree_unflatten(treedef, new_w),
+            jax.tree_util.tree_unflatten(treedef, new_dt))
+
+
 def residual_scale_tree(delta, delta_prev, coef, scale, interpret: bool = True):
     """Per-leaf fused epilogue with precomputed scalars (pytree entry used
     by core/projection.project_and_scale(use_kernel=True))."""

@@ -49,6 +49,31 @@ def buffer_fold_ref(d3, p2, w2, coefs, scales, wgts, eta_g):
     return batched_epilogue_ref(d3, p2, w2, coefs, s, eta_g)
 
 
+def dequant_ref(q3, qscales, qzeros):
+    """repro/codec wire-format dequant on a (K, M, 128) quantized stack:
+    ``q * qscale + qzero`` with per-client (K,) scalars, in f32."""
+    qs = jnp.asarray(qscales, jnp.float32)[:, None, None]
+    qz = jnp.asarray(qzeros, jnp.float32)[:, None, None]
+    return q3.astype(jnp.float32) * qs + qz
+
+
+def dequant_batched_epilogue_ref(q3, p2, w2, coefs, scales, eta_g,
+                                 qscales, qzeros):
+    """Oracle for kernel.dequant_batched_epilogue: dequantize the stack,
+    then the math IS the batched epilogue."""
+    return batched_epilogue_ref(dequant_ref(q3, qscales, qzeros),
+                                p2, w2, coefs, scales, eta_g)
+
+
+def dequant_buffer_fold_ref(q3, p2, w2, coefs, scales, wgts, eta_g,
+                            qscales, qzeros):
+    """Oracle for kernel.dequant_buffer_fold: dequant then the
+    staleness-weighted fold (discount composes with the dequant scale as
+    plain per-arrival multipliers)."""
+    return buffer_fold_ref(dequant_ref(q3, qscales, qzeros),
+                           p2, w2, coefs, scales, wgts, eta_g)
+
+
 def project_and_scale_flat_ref(d: jnp.ndarray, p: jnp.ndarray, lam: float,
                                eps: float = 1e-12):
     """Whole FedDPC per-client modification on a FLAT vector (oracle for

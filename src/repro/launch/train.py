@@ -73,10 +73,13 @@ def build_vision_task(args):
                              "(the standard download directory)")
         src_cls = {"cifar10": CIFAR10Source, "cifar100": CIFAR100Source,
                    "tiny-imagenet": TinyImageNetSource}[args.dataset]
+        src_kw = {}
+        if args.dataset == "tiny-imagenet":
+            src_kw["decode_workers"] = args.decode_workers
         source = src_cls(args.data_root, num_clients=args.clients,
                          alpha=args.alpha, batch_size=args.batch_size,
                          local_epochs=args.local_epochs,
-                         augment=args.augment, seed=args.seed)
+                         augment=args.augment, seed=args.seed, **src_kw)
         nclass = source.num_classes
         te_x, te_y = source.test_arrays()
         image_size = 64 if args.dataset == "tiny-imagenet" else 32
@@ -229,6 +232,23 @@ def main(argv=None):
                     help="chaos harness: JSON FaultPlan config (inline "
                          "string or @/path/to/plan.json) — the seeded "
                          "injector schedule of core/faults.py")
+    ap.add_argument("--codec", default=None,
+                    help="delta codec for the client->server uplink "
+                         "(DESIGN.md §13): identity | bf16 | int8 | "
+                         "int8_sym | int8_sr — quantized wire payloads "
+                         "with per-leaf scales; identity is bitwise "
+                         "equal to no codec")
+    ap.add_argument("--codec-ef", action="store_true",
+                    help="server-side error feedback for a lossy "
+                         "--codec: clients ship delta + the running "
+                         "mean quantization residual, so compression "
+                         "error cancels across rounds instead of "
+                         "accumulating (needs a lossy codec)")
+    ap.add_argument("--decode-workers", type=int, default=0,
+                    help="bounded thread pool for the per-image file "
+                         "decode of path-indexed datasets "
+                         "(tiny-imagenet); 0 = serial decode, output "
+                         "order is identical either way")
     ap.add_argument("--ingest-max-restarts", type=int, default=0,
                     help="supervised staging-producer restarts: retry a "
                          "crashed produce up to N times (bounded "
@@ -264,6 +284,8 @@ def main(argv=None):
         ingest_stall_s=args.ingest_stall_s,
         guard=args.guard, round_deadline=args.round_deadline,
         ingest_max_restarts=args.ingest_max_restarts,
+        codec=args.codec, codec_ef=(True if args.codec_ef else None),
+        decode_workers=args.decode_workers,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
     runtime = None

@@ -362,10 +362,33 @@ def cohort_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
     return (s_sh, p_sh, cli, cli, cli), (p_sh, s_sh, cli, rep)
 
 
+def codec_payload_specs(param_specs: PyTree, lead, *,
+                        is_leaf=None) -> PyTree:
+    """Payload-structured specs for a codec wire dict (repro/codec):
+    ``{"q": <param-shaped tree with a leading client/buffer axis>,
+    "scale"/"zero": <per-leaf (K,) vectors>}``. ``param_specs`` is the
+    per-leaf model-layout spec tree for the UNDERLYING deltas; ``lead``
+    names the leading-axis sharding (``client_axis`` for cohort stacks,
+    ``None`` for the arrival buffer). The quantized codes keep the model
+    layout of the leaf they encode; the per-leaf scale/zero vectors only
+    carry the leading axis.
+    """
+    is_leaf = is_leaf or (lambda x: isinstance(x, P))
+    return {
+        "q": jax.tree.map(lambda s: P(lead, *s), param_specs,
+                          is_leaf=is_leaf),
+        "scale": jax.tree.map(lambda s: P(lead), param_specs,
+                              is_leaf=is_leaf),
+        "zero": jax.tree.map(lambda s: P(lead), param_specs,
+                             is_leaf=is_leaf),
+    }
+
+
 def async_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
                           model_axis: str = "model",
                           params: Optional[PyTree] = None,
-                          server_state: Optional[PyTree] = None):
+                          server_state: Optional[PyTree] = None,
+                          codec_payload: bool = False):
     """Sharding trees for the TWO jits of the buffered-async engine
     (core/async_engine.py, DESIGN.md §11), which splits the fused round
     at the arrival buffer:
@@ -382,6 +405,15 @@ def async_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
     replicate their leading dim — only the trailing model dims stay
     partitioned on a two-axis mesh. ids/weights are tiny (B,) vectors
     and replicate.
+
+    ``codec_payload=True`` declares that the delta slots carry a codec
+    wire dict (``{"q","scale","zero"}`` trees, repro/codec) instead of a
+    raw params tree. On a 1-D client mesh nothing changes — prefix
+    shardings already cover any pytree — but the two-axis branch builds
+    per-leaf specs from the params template, so the delta slots get
+    payload-STRUCTURED spec trees (``codec_payload_specs``): q leaves
+    keep the model layout, scale/zero vectors carry only the leading
+    axis.
 
     Returns (wave_in, wave_out, fold_in, fold_out), each ready for
     jax.jit's in_shardings/out_shardings.
@@ -405,12 +437,17 @@ def async_round_shardings(mesh: Mesh, client_axis: str = "clients", *,
     p_sh = to_named(pspecs, mesh)
     s_sh = to_named(cohort_state_specs(server_state, params, mesh,
                                        client_axis, model_axis), mesh)
-    # wave deltas: client axis leading, param layout trailing
-    d_sh = to_named(jax.tree.map(lambda s: P(client_axis, *s), pspecs,
-                                 is_leaf=is_spec), mesh)
-    # buffered deltas: leading B (arrival buffer) replicated
-    buf_sh = to_named(jax.tree.map(lambda s: P(None, *s), pspecs,
-                                   is_leaf=is_spec), mesh)
+    if codec_payload:
+        # wave output / fold input carry the codec wire dict
+        d_sh = to_named(codec_payload_specs(pspecs, client_axis), mesh)
+        buf_sh = to_named(codec_payload_specs(pspecs, None), mesh)
+    else:
+        # wave deltas: client axis leading, param layout trailing
+        d_sh = to_named(jax.tree.map(lambda s: P(client_axis, *s), pspecs,
+                                     is_leaf=is_spec), mesh)
+        # buffered deltas: leading B (arrival buffer) replicated
+        buf_sh = to_named(jax.tree.map(lambda s: P(None, *s), pspecs,
+                                       is_leaf=is_spec), mesh)
     return ((p_sh, s_sh, cli, cli), (d_sh, cli),
             (s_sh, p_sh, buf_sh, rep, rep), (p_sh, s_sh, rep))
 

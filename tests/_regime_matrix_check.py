@@ -70,10 +70,12 @@ def batch_fn(c, t):
 
 
 def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,
-             use_kernel: bool = False) -> FederatedTrainer:
+             use_kernel: bool = False, codec=None) -> FederatedTrainer:
+    kw = dict(EXEC_REGIMES[regime])
+    if codec is not None:
+        kw["codec"] = codec
     cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
-                     eval_every=10 ** 9, prefetch=prefetch,
-                     **EXEC_REGIMES[regime])
+                     eval_every=10 ** 9, prefetch=prefetch, **kw)
     with FederatedTrainer(
             loss_fn, make_params(), NUM_CLIENTS, batch_fn, cfg,
             algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1,
@@ -87,11 +89,27 @@ def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,
 _ref_cache = {}
 
 
-def reference(algo: str, sampler_name: str) -> FederatedTrainer:
-    key = (algo, sampler_name)
+def reference(algo: str, sampler_name: str,
+              codec=None) -> FederatedTrainer:
+    key = (algo, sampler_name, codec)
     if key not in _ref_cache:
-        _ref_cache[key] = run_cell(algo, sampler_name, "serial", False)
+        _ref_cache[key] = run_cell(algo, sampler_name, "serial", False,
+                                   codec=codec)
     return _ref_cache[key]
+
+
+# Documented quantization-drift bounds for the LOSSY codec regimes vs
+# the NO-codec serial reference (DESIGN.md §13). Strict regime
+# equivalence (vectorized / async / 2-axis mesh vs serial) is still
+# checked at the default tolerances — against a serial reference run
+# with the SAME codec, so the only slack granted here is the codec's
+# own quantization error, never an execution-regime divergence.
+CODEC_TOL = {
+    "bf16": dict(rtol=5e-2, atol=5e-3),
+    "int8": dict(rtol=1e-1, atol=2e-2),
+    "int8_sym": dict(rtol=1e-1, atol=2e-2),
+    "int8_sr": dict(rtol=2e-1, atol=5e-2),
+}
 
 
 def check_cell(cell: str):
@@ -103,7 +121,18 @@ def check_cell(cell: str):
         print(f"[matrix] {cell} is the reference OK")
         return
     tr = run_cell(algo, sampler_name, regime, prefetch)
-    ref = reference(algo, sampler_name)
+    codec = EXEC_REGIMES[regime].get("codec")
+    lossy = codec is not None and codec != "identity"
+    plain = reference(algo, sampler_name)
+    if lossy:
+        # the documented drift bound vs the uncompressed run
+        tol = CODEC_TOL[codec]
+        assert_trees_close(tr.params, plain.params, **tol)
+        for rv, rs in zip(tr.history, plain.history):
+            assert np.isclose(rv.train_loss, rs.train_loss,
+                              rtol=tol["rtol"], atol=tol["atol"]), cell
+    # strict regime equivalence: same-codec serial reference
+    ref = plain if not lossy else reference(algo, sampler_name, codec)
     for a, b in zip(ref.schedule[:ROUNDS], tr.schedule[:ROUNDS]):
         assert (np.asarray(a) == np.asarray(b)).all(), (cell, a, b)
     assert_trees_close(tr.params, ref.params)
@@ -157,6 +186,25 @@ def check_cross_mesh_resume():
     print("[matrix] cross-mesh (2x4 -> 8) resume OK")
 
 
+def check_codec_identity_bitwise():
+    """codec=identity must be BITWISE identical to no-codec — the
+    encode/decode hooks return the SAME arrays, so every regime's round
+    math is untouched down to the last ulp (acceptance criterion)."""
+    for regime in ("serial", "vectorized", "sharded2d", "async_buffer"):
+        base = run_cell("feddpc", "uniform", regime, True)
+        idt = run_cell("feddpc", "uniform", regime, True, codec="identity")
+        for which, a, b in (("params", base.params, idt.params),
+                            ("state", base.server_state, idt.server_state)):
+            la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+            assert len(la) == len(lb)
+            for x, y in zip(la, lb):
+                assert np.array_equal(np.asarray(x), np.asarray(y),
+                                      equal_nan=True), (regime, which)
+        for rb, ri in zip(base.history, idt.history):
+            assert rb.train_loss == ri.train_loss, regime
+        print(f"[matrix] identity bitwise == no-codec under {regime} OK")
+
+
 def check_kernel_fallback():
     """FedDPCHyper(use_kernel=True) under the two-axis mesh must fall
     back to the reference epilogue (model-sharded leaves) and still
@@ -174,6 +222,7 @@ def main():
     ap.add_argument("--cells", default="")
     ap.add_argument("--cross-mesh-resume", action="store_true")
     ap.add_argument("--kernel-fallback", action="store_true")
+    ap.add_argument("--codec-identity-bitwise", action="store_true")
     args = ap.parse_args()
     for cell in [c for c in args.cells.split(",") if c]:
         check_cell(cell)
@@ -181,6 +230,8 @@ def main():
         check_cross_mesh_resume()
     if args.kernel_fallback:
         check_kernel_fallback()
+    if args.codec_identity_bitwise:
+        check_codec_identity_bitwise()
     print("ALL OK")
 
 

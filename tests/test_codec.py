@@ -1,0 +1,467 @@
+"""Delta-codec subsystem (repro/codec; DESIGN.md §13): wire-format
+round-trip error bounds (property tests), error-feedback residual decay,
+uplink byte accounting, the trainer-level identity/lossy contracts, and
+bitwise checkpointing of the EF accumulator — including the mid-buffer
+async cut where quantized in-flight payloads live in the checkpoint.
+
+The cross-regime allclose cells (codec_* regimes vs serial on the forced
+8-device mesh, and the identity-bitwise sweep) live in
+tests/test_regime_matrix.py; these are the fast single-process
+contracts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.codec import (CODEC_NAMES, EncodedCohort, make_codec,
+                         tree_nbytes)
+from repro.codec.base import sanitized_residual
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.runtime import MarkovRuntime
+
+settings.register_profile("codec", max_examples=10, deadline=None)
+settings.load_profile("codec")
+
+NUM_CLIENTS = 8
+K = 3
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def ragged_batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 3) + 1)]
+
+
+def make_trainer(rounds=4, algo="feddpc", **exec_kw):
+    kw = dict(clients_per_round=K, seed=7, eval_every=10 ** 9)
+    kw.update(exec_kw)
+    return FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                            ragged_batch_fn, ExecConfig(rounds=rounds, **kw),
+                            algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1))
+
+
+def tree_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------- registry / wire format ----------------
+
+def test_registry_names_and_unknown_codec():
+    assert {"identity", "bf16", "int8", "int8_sym", "int8_sr"} \
+        <= set(CODEC_NAMES)
+    assert make_codec(None) is None
+    assert make_codec("") is None
+    with pytest.raises(ValueError, match="int8"):
+        make_codec("no-such-codec")
+
+
+def test_identity_is_the_same_object():
+    """IdentityCodec encode/decode return the SAME pytree object — the
+    structural guarantee behind the bitwise acceptance criterion."""
+    c = make_codec("identity")
+    t = make_params()
+    assert c.encode(t) is t
+    assert c.decode(t) is t
+    assert not c.lossy
+
+
+def test_payload_layout_and_cohort_roundtrip():
+    """Cohort encode carries the leading client axis on q and (K,)
+    per-leaf scale/zero vectors; decode is q * scale + zero."""
+    c = make_codec("int8")
+    r = np.random.RandomState(0)
+    stacked = {"w": jnp.asarray(r.randn(K, 4, 3), jnp.float32),
+               "b": jnp.asarray(r.randn(K, 3), jnp.float32)}
+    p = c.encode_cohort(stacked)
+    assert set(p) == {"q", "scale", "zero"}
+    assert p["q"]["w"].shape == (K, 4, 3) and p["q"]["w"].dtype == jnp.int8
+    assert p["scale"]["w"].shape == (K,)
+    dec = c.decode_cohort(p)
+    want = jax.tree.map(
+        lambda q, s, z: q.astype(jnp.float32)
+        * s.reshape((-1,) + (1,) * (q.ndim - 1))
+        + z.reshape((-1,) + (1,) * (q.ndim - 1)),
+        p["q"], p["scale"], p["zero"])
+    assert tree_maxdiff(dec, want) == 0.0
+
+
+def test_zero_range_leaf_roundtrips_exactly():
+    """A constant leaf has range 0: the scale guard kicks in and the
+    decode reproduces the constant exactly (no 0/0)."""
+    for name in ("bf16", "int8", "int8_sym"):
+        c = make_codec(name)
+        t = {"a": jnp.full((5,), 3.25, jnp.float32),
+             "z": jnp.zeros((4, 2), jnp.float32)}
+        assert tree_maxdiff(c.decode(c.encode(t)), t) == 0.0, name
+
+
+def test_nonfinite_rows_stay_nonfinite_after_decode():
+    """Quantizers must PROPAGATE NaN/Inf (scales stay nonfinite), so the
+    chaos UpdateGuard still sees a nonfinite row in the quantized
+    domain and quarantines it."""
+    for name in ("bf16", "int8", "int8_sym"):
+        c = make_codec(name)
+        bad = {"a": jnp.asarray([1.0, jnp.nan, 2.0], jnp.float32)}
+        dec = c.decode(c.encode(bad))
+        assert not bool(jnp.isfinite(dec["a"]).all()), name
+        inf = {"a": jnp.asarray([1.0, jnp.inf, 2.0], jnp.float32)}
+        dec = c.decode(c.encode(inf))
+        assert not bool(jnp.isfinite(dec["a"]).all()), name
+
+
+def test_sanitized_residual_zeroes_nonfinite():
+    raw = {"a": jnp.asarray([1.0, jnp.nan, 2.0], jnp.float32)}
+    dec = {"a": jnp.asarray([1.0, jnp.nan, jnp.inf], jnp.float32)}
+    r = sanitized_residual(raw, dec)
+    np.testing.assert_array_equal(np.asarray(r["a"]), [0.0, 0.0, 0.0])
+
+
+def test_stochastic_codec_requires_key():
+    c = make_codec("int8_sr")
+    assert c.stochastic
+    with pytest.raises(ValueError, match="key"):
+        c.encode(make_params())
+    p = c.encode(make_params(), key=jax.random.PRNGKey(0))
+    assert p["q"]["w"].dtype == jnp.int8
+
+
+# ---------------- property tests: round-trip error bounds ------------
+
+@given(st.integers(0, 10 ** 6), st.floats(1e-3, 1e3))
+def test_int8_roundtrip_error_bound(seed, mag):
+    """Affine int8 with round-to-nearest: per-element error <= scale/2,
+    scale = range/254 (the documented wire-format bound)."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(64) * mag, jnp.float32)
+    c = make_codec("int8")
+    p = c.encode({"x": x})
+    dec = c.decode(p)["x"]
+    scale = float(p["scale"]["x"])
+    rng = float(x.max() - x.min())
+    assert scale <= rng / 254 * 1.001 + 1e-12
+    assert float(jnp.max(jnp.abs(dec - x))) <= scale * 0.5 * 1.001 + 1e-12
+
+
+@given(st.integers(0, 10 ** 6), st.floats(1e-3, 1e3))
+def test_int8_sym_roundtrip_error_bound(seed, mag):
+    """Symmetric int8: zero point is exactly 0 and error <= amax/254."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(64) * mag, jnp.float32)
+    c = make_codec("int8_sym")
+    p = c.encode({"x": x})
+    assert float(jnp.abs(p["zero"]["x"])) == 0.0
+    amax = float(jnp.max(jnp.abs(x)))
+    err = float(jnp.max(jnp.abs(c.decode(p)["x"] - x)))
+    assert err <= amax / 254 * 1.001 + 1e-12
+
+
+@given(st.integers(0, 10 ** 6), st.floats(1e-3, 1e3))
+def test_bf16_roundtrip_relative_error_bound(seed, mag):
+    """bf16 keeps 8 significand bits: relative error <= 2^-8 per
+    element (round-to-nearest is 2^-9; the bound documented for the
+    wire format is the conservative one)."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(64) * mag, jnp.float32)
+    dec = make_codec("bf16").decode(make_codec("bf16").encode({"x": x}))
+    rel = jnp.abs(dec["x"] - x) / jnp.maximum(jnp.abs(x), 1e-30)
+    assert float(jnp.max(rel)) <= 2.0 ** -8 + 1e-12
+
+
+@given(st.integers(0, 10 ** 6))
+def test_int8_sr_unbiased_and_bounded(seed):
+    """Stochastic rounding: error < 1 scale per element, and averaging
+    over many independent keys recovers the input (unbiasedness — the
+    property that makes SR compose with EF)."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(16), jnp.float32)
+    c = make_codec("int8_sr")
+    p0 = c.encode({"x": x}, key=jax.random.PRNGKey(seed))
+    scale = float(p0["scale"]["x"])
+    assert float(jnp.max(jnp.abs(c.decode(p0)["x"] - x))) \
+        <= scale * 1.001 + 1e-12
+    acc = np.zeros(16, np.float64)
+    n = 64
+    for i in range(n):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        acc += np.asarray(c.decode(c.encode({"x": x}, key=key))["x"])
+    # mean error of n unbiased draws ~ scale / sqrt(n); allow 4 sigma
+    assert float(np.max(np.abs(acc / n - np.asarray(x)))) \
+        <= 4.0 * scale / np.sqrt(n) + 1e-12
+
+
+@given(st.sampled_from(["int8", "int8_sym"]), st.integers(0, 10 ** 6))
+def test_error_feedback_residual_decay(name, seed):
+    """Server-side EF on a CONSTANT delta: shipping delta + residual
+    each round makes the running mean of the decoded updates converge
+    to the true delta at O(scale/T) — strictly better than the one-shot
+    quantization floor. This is the round-over-round decay property the
+    trainer's accumulator relies on."""
+    c = make_codec(name)
+    r = np.random.RandomState(seed)
+    d = jnp.asarray(r.randn(32), jnp.float32)
+    ef = jnp.zeros_like(d)
+    total = np.zeros(32, np.float64)
+    errs = []
+    for t in range(1, 9):
+        ship = d + ef
+        dec = c.decode(c.encode({"x": ship}))["x"]
+        ef = ship - dec
+        total += np.asarray(dec)
+        errs.append(float(np.max(np.abs(total / t - np.asarray(d)))))
+    scale = float(c.encode({"x": d})["scale"]["x"])
+    # after T rounds the accumulated error is one residual, so the mean
+    # error shrinks ~1/T; one-shot error can be as large as scale/2
+    assert errs[-1] <= scale / 2.0 / 4.0 + 1e-12   # >=4x below one-shot cap
+    assert errs[-1] <= errs[0] + 1e-12
+
+
+# ---------------- byte accounting ----------------
+
+def test_client_bytes_accounting():
+    t = make_params()
+    f32 = tree_nbytes(t)
+    assert f32 == sum(np.asarray(x).nbytes for x in jax.tree.leaves(t))
+    assert make_codec("identity").client_bytes(t) == f32
+    # at model scale (elements >> leaves) the per-leaf scale/zero
+    # overhead vanishes: bf16 halves, int8 quarters the uplink
+    big = {"w": jnp.zeros((64, 32), jnp.float32),
+           "b": jnp.zeros((512,), jnp.float32)}
+    f32 = tree_nbytes(big)
+    assert make_codec("bf16").client_bytes(big) * 2 <= f32 + 16 * 2
+    assert make_codec("int8").client_bytes(big) * 2 < f32
+
+
+def _big_loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2) + 0.0 * jnp.sum(p["pad"])
+
+
+def _big_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32),
+            "pad": jnp.zeros((1024,), jnp.float32)}
+
+
+def test_comm_bytes_up_reduction_on_round_records():
+    """RoundRecord.comm_bytes_up: int8 uplink is >= 2x smaller than the
+    identity/no-codec uplink, every round (the acceptance ratio; the
+    params carry a model-scale leaf so the byte count is not dominated
+    by the per-leaf scale/zero overhead)."""
+    def mk(**kw):
+        return FederatedTrainer(
+            _big_loss_fn, _big_params(), NUM_CLIENTS, ragged_batch_fn,
+            ExecConfig(rounds=3, clients_per_round=K, seed=7,
+                       eval_every=10 ** 9, **kw),
+            algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1))
+
+    with mk() as plain:
+        plain.run()
+    with mk(codec="int8") as q:
+        q.run()
+    for rp, rq in zip(plain.history, q.history):
+        assert rp.comm_bytes_up > 0 and rq.comm_bytes_up > 0
+        assert rp.comm_bytes_up >= 2 * rq.comm_bytes_up
+
+
+def test_place_encoded_preserves_values_and_shrinks_bytes():
+    from repro.ingest.placement import CohortPlacer
+    c = make_codec("int8")
+    r = np.random.RandomState(3)
+    stacked = {"w": jnp.asarray(r.randn(K, 4, 3), jnp.float32)}
+    enc = EncodedCohort(codec=c.name, payload=c.encode_cohort(stacked),
+                        clients=K)
+    assert 2 * enc.nbytes < tree_nbytes(stacked)
+    placed = CohortPlacer().place_encoded(enc)
+    assert placed.codec == c.name and placed.clients == K
+    assert tree_maxdiff(placed.payload, enc.payload) == 0.0
+    assert tree_maxdiff(c.decode_cohort(placed.payload),
+                        c.decode_cohort(enc.payload)) == 0.0
+
+
+# ---------------- trainer-level contracts ----------------
+
+def test_ef_requires_lossy_codec():
+    with pytest.raises(ValueError, match="(?i)lossy"):
+        make_trainer(codec="identity", codec_ef=True)
+    with pytest.raises(ValueError, match="(?i)lossy"):
+        make_trainer(codec_ef=True)
+
+
+def test_exec_codec_overrides_algo_codec():
+    """ExecConfig.codec is the execution override of AlgoConfig.codec
+    (EXEC_REGIMES entries are ExecConfig kwargs)."""
+    cfg = ExecConfig(rounds=1, clients_per_round=K, seed=7,
+                     eval_every=10 ** 9, codec="int8")
+    tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, cfg,
+                          algo=AlgoConfig(name="feddpc", eta_l=0.05,
+                                          eta_g=0.1, codec="identity"))
+    assert tr._codec.name == "int8"
+    tr2 = make_trainer(rounds=1)
+    assert tr2._codec is None
+
+
+def test_ef_accumulator_active_and_bounded():
+    """The trainer's EF accumulator does real work: nonzero after the
+    first round (quantization error exists), yet bounded by the
+    per-round quantization scale across a long run — the residual is
+    re-shipped and cancels instead of accumulating (the decay property
+    itself is pinned by test_error_feedback_residual_decay)."""
+    rounds = 12
+    with make_trainer(rounds=rounds, codec="int8", codec_ef=True) as qe:
+        qe.run_round(0)
+        ef1 = jax.tree.map(lambda x: np.asarray(x), qe._ef)
+        for t in range(1, rounds):
+            qe.run_round(t)
+    assert max(float(np.max(np.abs(x)))
+               for x in jax.tree.leaves(ef1)) > 0.0
+    # the deltas on this toy task are O(1); an EF blow-up would be
+    # orders of magnitude above this bound
+    assert max(float(jnp.max(jnp.abs(x)))
+               for x in jax.tree.leaves(qe._ef)) < 0.1
+
+
+def test_ef_state_survives_save_resume_bitwise(tmp_path):
+    """Sync rounds: cut an int8+EF run, save, resume in a fresh trainer
+    — params, server state, EF accumulator and losses reproduce the
+    uninterrupted run bitwise (the EF tree rides the npz sidecar)."""
+    kw = dict(codec="int8", codec_ef=True, rounds=6)
+    with make_trainer(**kw) as full:
+        full.run()
+    with make_trainer(**kw) as part:
+        for t in range(3):
+            part.run_round(t)
+        assert part._ef is not None
+        part.save(str(tmp_path))
+    res = FederatedTrainer.resume(
+        str(tmp_path), loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+        ExecConfig(clients_per_round=K, seed=7, eval_every=10 ** 9, **kw),
+        algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1))
+    with res:
+        assert res.start_round == 3
+        res.run()
+    for a, b in zip(jax.tree.leaves(full.params), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(full._ef), jax.tree.leaves(res._ef)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [r.train_loss for r in full.history] == \
+        [r.train_loss for r in res.history]
+
+
+def _markov_rt():
+    return MarkovRuntime(NUM_CLIENTS, fast=0.5, slow=3.0,
+                         p_slow=0.4, p_fast=0.5, dropout=0.1)
+
+
+def test_ef_mid_buffer_async_save_resume_bitwise(tmp_path):
+    """The async acceptance cut: int8+EF through the buffered-async
+    engine, saved with IN-FLIGHT quantized payload entries on the heap
+    (concurrency 3 > buffer 2), resumed fresh — bitwise equal to the
+    uninterrupted run, EF accumulator included. Exercises the encoded
+    BufferEntry npz round-trip (int8 codes reload as int8)."""
+    kw = dict(codec="int8", codec_ef=True, async_buffer=True,
+              buffer_size=2, async_concurrency=3, rounds=6)
+
+    def mk():
+        return FederatedTrainer(
+            loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+            ExecConfig(clients_per_round=K, seed=7, eval_every=10 ** 9,
+                       **kw),
+            algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1),
+            runtime=_markov_rt())
+
+    with mk() as full:
+        full.run()
+    with mk() as part:
+        for t in range(3):
+            part.run_round(t)
+        assert len(part._engine.inflight()) > 0      # mid-buffer cut
+        part.save(str(tmp_path))
+    res = FederatedTrainer.resume(
+        str(tmp_path), loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+        ExecConfig(clients_per_round=K, seed=7, eval_every=10 ** 9, **kw),
+        algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1),
+        runtime=_markov_rt())
+    with res:
+        assert res.start_round == 3
+        res.run()
+    for a, b in zip(jax.tree.leaves(full.params), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(full._ef), jax.tree.leaves(res._ef)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert [r.train_loss for r in full.history] == \
+        [r.train_loss for r in res.history]
+
+
+def test_resume_rejects_mismatched_codec(tmp_path):
+    """The checkpoint echoes the codec config; resuming under a
+    different codec (or dropping EF) fails loudly instead of silently
+    decoding the EF tree into the wrong pipeline."""
+    with make_trainer(codec="int8", codec_ef=True, rounds=2) as tr:
+        tr.run_round(0)
+        tr.save(str(tmp_path))
+    algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+
+    def cfg(**kw):
+        return ExecConfig(rounds=2, clients_per_round=K, seed=7,
+                          eval_every=10 ** 9, **kw)
+
+    with pytest.raises(ValueError, match="codec"):
+        FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                NUM_CLIENTS, ragged_batch_fn,
+                                cfg(codec="bf16"), algo=algo)
+    with pytest.raises(ValueError, match="codec"):
+        FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                NUM_CLIENTS, ragged_batch_fn,
+                                cfg(codec="int8"), algo=algo)
+    with pytest.raises(ValueError, match="codec"):
+        FederatedTrainer.resume(str(tmp_path), loss_fn, make_params(),
+                                NUM_CLIENTS, ragged_batch_fn, cfg(),
+                                algo=algo)
+
+
+# ---------------- parallel decode workers (ingest satellite) ---------
+
+def test_parallel_decode_order_is_deterministic(tmp_path):
+    """ImageDecodePool output order is the input order regardless of
+    worker count — the batch stacks (and thus every downstream round)
+    are bit-identical between serial and parallel decode."""
+    from repro.ingest import TinyImageNetSource
+    from repro.ingest.readers import write_tiny_imagenet_fixture
+    write_tiny_imagenet_fixture(str(tmp_path), num_wnids=3, per_wnid=5,
+                                val_per_wnid=2, image_size=8)
+    serial = TinyImageNetSource(str(tmp_path), num_clients=4, alpha=0.5,
+                                batch_size=4, seed=0, image_size=8,
+                                decode_workers=0)
+    par = TinyImageNetSource(str(tmp_path), num_clients=4, alpha=0.5,
+                             batch_size=4, seed=0, image_size=8,
+                             decode_workers=4)
+    assert par.decoder.workers == 4
+    for c in range(4):
+        for bs, bp in zip(serial.client_batches(c, 0),
+                          par.client_batches(c, 0)):
+            np.testing.assert_array_equal(bs["images"], bp["images"])
+            np.testing.assert_array_equal(bs["labels"], bp["labels"])
+    xs, ys = serial.test_arrays()
+    xp, yp = par.test_arrays()
+    np.testing.assert_array_equal(xs, xp)
+    np.testing.assert_array_equal(ys, yp)
+    par.decoder.close()
+    par.decoder.close()     # idempotent

@@ -134,3 +134,95 @@ def test_unit_model_axis_degenerates_to_prefix_layout():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-7)
     assert d0.keys() == d1.keys()
+
+
+@given(st.integers(1, 9), st.sampled_from(M_CASES),
+       st.sampled_from([False, True]),
+       st.sampled_from(["int8", "bf16"]))
+def test_dequant_batched_epilogue_raw_fuzz(k, m, zero_prev, qdtype):
+    """kernel.dequant_batched_epilogue (the fused dequant->residual->
+    scale->mean grid, DESIGN.md §13) == dequant-then-epilogue oracle,
+    for ragged K x non-block-multiple M x zero delta_prev x both wire
+    dtypes."""
+    r = np.random.RandomState(k * 1000 + m + int(zero_prev))
+    if qdtype == "int8":
+        q3 = jnp.asarray(r.randint(-127, 128, (k, m, 128)), jnp.int8)
+        qscales = jnp.asarray(0.01 + np.abs(r.randn(k)) * 0.1, jnp.float32)
+        qzeros = jnp.asarray(r.randn(k) * 0.01, jnp.float32)
+    else:
+        q3 = jnp.asarray(r.randn(k, m, 128), jnp.bfloat16)
+        qscales = jnp.ones((k,), jnp.float32)
+        qzeros = jnp.zeros((k,), jnp.float32)
+    p2 = (jnp.zeros((m, 128), jnp.float32) if zero_prev
+          else jnp.asarray(r.randn(m, 128), jnp.float32))
+    w2 = jnp.asarray(r.randn(m, 128), jnp.float32)
+    coefs = jnp.asarray(r.randn(k), jnp.float32)
+    scales = jnp.asarray(1.0 + np.abs(r.randn(k)), jnp.float32)
+    got_w, got_dt = fp_kernel.dequant_batched_epilogue(
+        q3, p2, w2, coefs, scales, 0.3, qscales, qzeros, interpret=True)
+    want_w, want_dt = fp_ref.dequant_batched_epilogue_ref(
+        q3, p2, w2, coefs, scales, 0.3, qscales, qzeros)
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_dt, want_dt, rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 6), st.sampled_from(M_CASES),
+       st.sampled_from([False, True]))
+def test_dequant_buffer_fold_raw_fuzz(b, m, zero_prev):
+    """kernel.dequant_buffer_fold (scatter-accumulate fold with fused
+    dequant; staleness weights compose with the dequant scales as plain
+    per-arrival multipliers) == the dequant-then-fold oracle."""
+    r = np.random.RandomState(b * 31 + m)
+    q3 = jnp.asarray(r.randint(-127, 128, (b, m, 128)), jnp.int8)
+    qscales = jnp.asarray(0.01 + np.abs(r.randn(b)) * 0.1, jnp.float32)
+    qzeros = jnp.asarray(r.randn(b) * 0.01, jnp.float32)
+    p2 = (jnp.zeros((m, 128), jnp.float32) if zero_prev
+          else jnp.asarray(r.randn(m, 128), jnp.float32))
+    w2 = jnp.asarray(r.randn(m, 128), jnp.float32)
+    coefs = jnp.asarray(r.randn(b), jnp.float32)
+    scales = jnp.asarray(1.0 + np.abs(r.randn(b)), jnp.float32)
+    wgts = jnp.asarray(r.uniform(0.2, 1.0, b), jnp.float32)
+    got_w, got_dt = fp_kernel.dequant_buffer_fold(
+        q3, p2, w2, coefs, scales, wgts, 0.25, qscales, qzeros,
+        interpret=True)
+    want_w, want_dt = fp_ref.dequant_buffer_fold_ref(
+        q3, p2, w2, coefs, scales, wgts, 0.25, qscales, qzeros)
+    np.testing.assert_allclose(got_w, want_w, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got_dt, want_dt, rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 5), st.sampled_from([3, 37, 127, 130]),
+       st.sampled_from([False, True]))
+def test_dequant_server_epilogue_matches_decode_then_epilogue(k, n, wgt):
+    """ops.dequant_*_server_* over a real codec payload (non-lane-
+    multiple leaf shapes) == decode the payload with the codec, then the
+    plain f32 epilogue/fold — the fused route must be a pure layout
+    optimization."""
+    from repro.codec import make_codec
+    codec = make_codec("int8")
+    r = np.random.RandomState(k * 13 + n + int(wgt))
+    params = {"a": jnp.asarray(r.randn(n), jnp.float32),
+              "b": jnp.asarray(r.randn(4, 11), jnp.float32)}
+    deltas = jax.tree.map(
+        lambda x: jnp.asarray(r.randn(k, *np.shape(x)), jnp.float32), params)
+    payload = codec.encode_cohort(deltas)
+    decoded = codec.decode_cohort(payload)
+    prev = jax.tree.map(lambda x: x * 0.3, params)
+    coefs = jnp.asarray(r.randn(k), jnp.float32)
+    scales = jnp.asarray(1.0 + np.abs(r.randn(k)), jnp.float32)
+    wgts = (jnp.asarray(r.uniform(0.2, 1.0, k), jnp.float32)
+            if wgt else None)
+    if wgts is None:
+        got = fp_ops.dequant_batched_server_epilogue(
+            payload, prev, params, coefs, scales, 0.2, interpret=True)
+        want = fp_ops.batched_server_epilogue(
+            decoded, prev, params, coefs, scales, 0.2, interpret=True)
+    else:
+        got = fp_ops.dequant_buffered_server_fold(
+            payload, prev, params, coefs, scales, wgts, 0.2,
+            interpret=True)
+        want = fp_ops.buffered_server_fold(
+            decoded, prev, params, coefs, scales, wgts, 0.2,
+            interpret=True)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

@@ -78,6 +78,14 @@ FAST_SLICE = [
     ("feddpc", "uniform", "async_buffer", True),
     ("feddpc", "uniform", "async_buffer", False),
     ("fedvarp", "markov", "async_buffer", True),
+    # delta codecs (DESIGN.md §13): the identity anchor plus the lossy
+    # acceptance cells — int8 under the (2x4) mesh and the async engine
+    ("feddpc", "uniform", "codec_identity", True),
+    ("feddpc", "uniform", "codec_bf16", True),
+    ("feddpc", "uniform", "codec_int8", True),
+    ("fedavg", "weighted", "codec_int8", False),
+    ("feddpc", "uniform", "codec_int8_2d", True),
+    ("feddpc", "uniform", "codec_int8_async", True),
 ]
 
 
@@ -87,7 +95,9 @@ def test_matrix_axes_come_from_the_registries():
     touching the tests — and the slices stay valid sub-sets."""
     assert {"serial", "vectorized", "sharded1d", "sharded2d",
             "staged", "staged1d", "staged2d",
-            "hoststaged", "async_buffer"} <= set(REGIMES)
+            "hoststaged", "async_buffer",
+            "codec_identity", "codec_bf16", "codec_int8",
+            "codec_int8_2d", "codec_int8_async"} <= set(REGIMES)
     assert {"uniform", "weighted", "cyclic", "markov"} <= set(SAMPLERS)
     assert {"feddpc", "fedavg", "fedvarp", "fedexp"} <= set(ALGOS)
     cells = set(full_matrix())
@@ -104,6 +114,13 @@ def test_matrix_axes_come_from_the_registries():
     # buffered-async streaming aggregation enrolled (DESIGN.md §11);
     # its registry defaults ARE the sync-equivalence anchor cell
     assert EXEC_REGIMES["async_buffer"]["async_buffer"] is True
+    # delta codecs enrolled (DESIGN.md §13) at the acceptance shapes:
+    # int8 on the 2-axis mesh and through the buffered-async engine
+    assert EXEC_REGIMES["codec_identity"]["codec"] == "identity"
+    assert EXEC_REGIMES["codec_bf16"]["codec"] == "bf16"
+    assert EXEC_REGIMES["codec_int8"]["codec"] == "int8"
+    assert EXEC_REGIMES["codec_int8_2d"]["shard_model"] > 1
+    assert EXEC_REGIMES["codec_int8_async"]["async_buffer"] is True
 
 
 def test_regime_matrix_fast_slice():
@@ -116,6 +133,13 @@ def test_cross_mesh_resume():
 
 def test_kernel_fallback_model_sharded():
     _run_check(["--kernel-fallback"])
+
+
+def test_codec_identity_bitwise():
+    """codec=identity is a pass-through: bitwise-identical params/state/
+    losses to the no-codec run under every regime shape (serial,
+    vectorized, 2-axis mesh, buffered-async)."""
+    _run_check(["--codec-identity-bitwise"])
 
 
 @pytest.mark.slow
