@@ -175,7 +175,11 @@ def bench(overrides: dict, *, params, loss_fn, batch_fn, k: int,
                 [r.ingest_host_seconds for r in recs])),
             "ingest_device_mean_s": float(np.mean(
                 [r.ingest_device_seconds for r in recs])),
-            "rounds": int(rounds)}
+            "rounds": int(rounds),
+            # per-round training curve: a CURVE-class gate key
+            # (bench_gate.py) — a regressing loss trajectory fails the
+            # lane pointwise, not just at the final round
+            "train_loss_curve": [float(r.train_loss) for r in recs]}
 
 
 def run_ingest_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
@@ -319,6 +323,8 @@ def run_async_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
                         r.staleness_max for r in recs)),
                     "waves_dispatched": int(waves),
                     "final_train_loss": float(recs[-1].train_loss),
+                    "train_loss_curve": [float(r.train_loss)
+                                         for r in recs],
                 }
                 r = results[mode]
                 print(f"{mode:24s} mean {r['mean_s']*1e3:9.3f} ms"
@@ -429,6 +435,7 @@ def run_codec_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
                     codec_obj.encoded_template(params, clients))),
                 "error_feedback": bool(overrides.get("codec_ef", False)),
                 "final_train_loss": float(recs[-1].train_loss),
+                "train_loss_curve": [float(r.train_loss) for r in recs],
             }
             results[mode] = stats
             print(f"{mode:10s} mean {stats['mean_s']*1e3:9.3f} ms"

@@ -3,7 +3,7 @@ its committed baseline (benchmarks/baselines/) with per-key tolerance
 classes, so CI catches structural and simulation regressions without
 flaking on shared-runner wall-clock noise.
 
-Three key classes, decided by key NAME (the receipts already separate
+Four key classes, decided by key NAME (the receipts already separate
 them by naming convention):
 
   perf      wall-clock stats (``*_s`` suffixes) and derived ratios
@@ -17,6 +17,14 @@ them by naming convention):
             deterministic functions of the seed and the virtual-time
             engine — gated tightly (``--sim-rtol``, default 1e-3, which
             absorbs BLAS-order float differences across hosts)
+  curve     per-round training curves (``*_curve`` suffix, lists of
+            floats): length must match exactly, any NaN fails, and every
+            round's loss must lie within the pointwise band
+            |fresh - base| <= curve_rtol * |base| + curve_atol
+            (``--curve-rtol``, default 5e-2) — a loss trajectory that
+            regresses mid-run fails the lane even when the final loss
+            happens to land close
+
   exact     everything else (config echoes, shapes, mode sets, flags):
             must match exactly — a missing mode or an ``error`` entry in
             any mode fails the gate outright
@@ -66,16 +74,46 @@ def classify(key: str) -> str:
         return "exact"
     if key in SIM_KEYS:
         return "sim"
+    if key.endswith("_curve"):
+        return "curve"
     if (key.endswith(PERF_SUFFIXES) or key.startswith(PERF_PREFIXES)
             or any(s in key for s in PERF_SUBSTR)):
         return "perf"
     return "exact"
 
 
-def check(base, fresh, path, problems, *, perf_factor, sim_rtol):
+def check_curve(base, fresh, path, problems, *, curve_rtol,
+                curve_atol=1e-6):
+    if not (isinstance(base, list) and isinstance(fresh, list)):
+        problems.append(f"{path}: curve must be a list (baseline "
+                        f"{type(base).__name__}, fresh "
+                        f"{type(fresh).__name__})")
+        return
+    if len(base) != len(fresh):
+        problems.append(f"{path}: curve length {len(fresh)} != baseline "
+                        f"{len(base)} (the run ended early or late)")
+        return
+    for i, (b, f) in enumerate(zip(base, fresh)):
+        b, f = float(b), float(f)
+        if not math.isfinite(f):
+            problems.append(f"{path}[{i}]: non-finite loss {f!r}")
+        elif not math.isfinite(b):
+            problems.append(f"{path}[{i}]: non-finite BASELINE {b!r} "
+                            "(regenerate from a healthy run)")
+        elif abs(f - b) > curve_rtol * abs(b) + curve_atol:
+            problems.append(
+                f"{path}[{i}]: {f:.6g} outside curve band of baseline "
+                f"{b:.6g} (rtol {curve_rtol})")
+
+
+def check(base, fresh, path, problems, *, perf_factor, sim_rtol,
+          curve_rtol=5e-2):
     key = path.rsplit(".", 1)[-1]
     cls = classify(key)
     if cls == "context":
+        return
+    if cls == "curve":
+        check_curve(base, fresh, path, problems, curve_rtol=curve_rtol)
         return
     if isinstance(base, dict):
         if not isinstance(fresh, dict):
@@ -88,7 +126,8 @@ def check(base, fresh, path, problems, *, perf_factor, sim_rtol):
                                 "(coverage regression)")
                 continue
             check(base[k], fresh[k], f"{path}.{k}", problems,
-                  perf_factor=perf_factor, sim_rtol=sim_rtol)
+                  perf_factor=perf_factor, sim_rtol=sim_rtol,
+                  curve_rtol=curve_rtol)
         for k in fresh:
             if k not in base:
                 # loud by design: a fresh-only key is UNGATED — fail and
@@ -129,7 +168,7 @@ def check(base, fresh, path, problems, *, perf_factor, sim_rtol):
 
 
 def gate(baseline_path: str, fresh_path: str, *, perf_factor: float = 10.0,
-         sim_rtol: float = 1e-3) -> int:
+         sim_rtol: float = 1e-3, curve_rtol: float = 5e-2) -> int:
     with open(baseline_path) as fh:
         base = json.load(fh)
     with open(fresh_path) as fh:
@@ -141,7 +180,8 @@ def gate(baseline_path: str, fresh_path: str, *, perf_factor: float = 10.0,
         if isinstance(stats, dict) and "error" in stats:
             problems.append(f"modes.{mode}: {stats['error']}")
     check(base, fresh, "$", problems,
-          perf_factor=perf_factor, sim_rtol=sim_rtol)
+          perf_factor=perf_factor, sim_rtol=sim_rtol,
+          curve_rtol=curve_rtol)
     if problems:
         print(f"BENCH GATE FAILED ({len(problems)} problem(s)) "
               f"[{fresh_path} vs {baseline_path}]:")
@@ -167,9 +207,14 @@ def main(argv=None):
     ap.add_argument("--sim-rtol", type=float, default=1e-3,
                     help="relative tolerance for deterministic "
                          "simulation metrics (default 1e-3)")
+    ap.add_argument("--curve-rtol", type=float, default=5e-2,
+                    help="pointwise relative band for per-round "
+                         "training curves (default 5e-2: loose enough "
+                         "for cross-host BLAS drift, tight enough that "
+                         "a spiked or diverging trajectory fails)")
     a = ap.parse_args(argv)
     return gate(a.baseline, a.fresh, perf_factor=a.perf_factor,
-                sim_rtol=a.sim_rtol)
+                sim_rtol=a.sim_rtol, curve_rtol=a.curve_rtol)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,160 @@
+"""Run-health receipt — the health monitor + curve gate driven end to
+end (DESIGN.md §14): a short deterministic training run with the monitor
+on, per server optimizer (sgd / fedadam / fedyogi), recording the
+per-round ``train_loss_curve`` and the monitor's verdict counters.
+
+The receipt is the CI ``health-smoke`` lane's subject, in both
+directions:
+
+  clean run      must gate PASS against the committed baseline
+                 (benchmarks/baselines/bench_health_smoke.json) — the
+                 curves are seed-deterministic simulation output, held
+                 pointwise by bench_gate's curve class
+  --inject-spike the same run with a seeded mid-run delta explosion
+                 (guard OFF, so the spike reaches the aggregate) must
+                 make the SAME gate command exit nonzero: the spiked
+                 curve leaves the baseline band and the monitor's alarm
+                 counters leave their exact-match zeros — proof the
+                 curve gate actually fails on a regressing trajectory,
+                 not just on structural drift
+
+``alarmed_rounds`` / ``spike_rounds`` / ``stopped_early`` are
+seed-deterministic integers gated exactly; ``*_s`` keys get the perf
+band like every other receipt.
+
+  PYTHONPATH=src python -m benchmarks.bench_health --out /tmp/health.json
+  PYTHONPATH=src python -m benchmarks.bench_health --inject-spike \
+      --out /tmp/health_spiked.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.faults import FaultPlan
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(_ROOT, "BENCH_health.json")
+
+NUM_CLIENTS = 10
+K = 4
+ROUNDS = 12
+SPIKE_ROUND = 8          # past health_min_history, so the detector is armed
+SERVER_OPTS = ("sgd", "fedadam", "fedyogi")
+
+
+def build_task(seed: int = 0):
+    r = np.random.RandomState(seed)
+    params = {"w1": jnp.asarray(r.randn(8, 16) * 0.3, jnp.float32),
+              "b1": jnp.zeros((16,), jnp.float32),
+              "w2": jnp.asarray(r.randn(16, 4) * 0.3, jnp.float32),
+              "b2": jnp.zeros((4,), jnp.float32)}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["w1"] + p["b1"])
+        pred = h @ p["w2"] + p["b2"]
+        return jnp.mean((pred - b["y"]) ** 2)
+
+    def batch_fn(c, t):
+        rc = np.random.RandomState(1000 * c + t)
+        return [{"x": rc.randn(8, 8).astype(np.float32),
+                 "y": rc.randn(8, 4).astype(np.float32)}
+                for _ in range((c % 2) + 1)]
+
+    return params, loss_fn, batch_fn
+
+
+def run_mode(server_opt: str, plan) -> Dict:
+    params, loss_fn, batch_fn = build_task()
+    cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                     eval_every=10 ** 9, server_opt=server_opt,
+                     health=True, health_min_history=4,
+                     health_spike_mult=3.0)
+    algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+    tic = time.perf_counter()
+    with FederatedTrainer(loss_fn, params, NUM_CLIENTS, batch_fn, cfg,
+                          algo=algo, fault_plan=plan) as tr:
+        recs = tr.run()
+        rep = tr.health_report
+    return {
+        "mean_s": (time.perf_counter() - tic) / max(1, len(recs)),
+        "rounds_completed": len(recs),
+        "stopped_early": bool(len(recs) < ROUNDS),
+        "final_train_loss": float(recs[-1].train_loss),
+        "train_loss_curve": [float(r.train_loss) for r in recs],
+        # monitor verdict: seed-deterministic integers, gated exactly
+        "alarmed_rounds": int(rep.alarmed_rounds),
+        "spike_rounds": int(rep.spike_rounds),
+        "nonfinite_rounds": int(rep.nonfinite_rounds),
+        "healthy_at_end": bool(rep.healthy),
+    }
+
+
+def run(out: str = None, inject_spike: bool = False) -> Dict:
+    # guard OFF: the injected explosion must REACH the aggregate — this
+    # lane proves the detector and the curve gate catch what the guard
+    # would normally absorb
+    plan = (FaultPlan.seeded(7, explode_rate=1.0,
+                             explode_rounds=(SPIKE_ROUND,),
+                             explode_magnitude=200.0)
+            if inject_spike else None)
+    modes = {}
+    for server_opt in SERVER_OPTS:
+        print(f"[health] {server_opt} ...")
+        modes[server_opt] = run_mode(server_opt, plan)
+        m = modes[server_opt]
+        print(f"  rounds {m['rounds_completed']:3d}  final loss "
+              f"{m['final_train_loss']:.5f}  alarmed {m['alarmed_rounds']}")
+    payload = {
+        "bench": "health_monitor",
+        "num_clients": NUM_CLIENTS, "clients_per_round": K,
+        "rounds": ROUNDS,
+        "spike_injected": bool(inject_spike),
+        "modes": modes,
+        "backend": jax.default_backend(),
+        "note": ("train_loss_curve is seed-deterministic simulation "
+                 "output held pointwise by bench_gate's curve class; "
+                 "the alarm counters are exact-match integers "
+                 "(DESIGN.md §14)"),
+    }
+    out = out or DEFAULT_OUT
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"[health] wrote {out}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help=f"receipt path (default {DEFAULT_OUT})")
+    ap.add_argument("--inject-spike", action="store_true",
+                    help="seeded delta explosion (guard off) at round "
+                         f"{SPIKE_ROUND}: the receipt must then FAIL the "
+                         "gate vs the clean baseline")
+    a = ap.parse_args(argv)
+    payload = run(out=a.out, inject_spike=a.inject_spike)
+    if a.inject_spike:
+        # the spike must actually register, otherwise the inverted CI
+        # check would "pass" vacuously on a dead injector
+        ok = any(m["alarmed_rounds"] > 0 or m["stopped_early"]
+                 for m in payload["modes"].values())
+        print("health spike registered" if ok
+              else "health spike FAILED to register")
+        return 0 if ok else 1
+    ok = all(m["healthy_at_end"] and m["rounds_completed"] == ROUNDS
+             for m in payload["modes"].values())
+    print("health smoke OK" if ok else "health smoke FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

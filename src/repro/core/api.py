@@ -111,6 +111,12 @@ class AlgoConfig:
     # server-side error feedback: clients ship Delta_j + ef, the server
     # keeps the mean sanitized quantization residual as the next ef
     codec_ef: bool = False
+    # ---- server-side optimizer (repro.optim.server, DESIGN.md §14) ----
+    # registry name: "sgd" (the default — accepts every rule's proposed
+    # step verbatim, bitwise the pre-layer round), "fedadam", "fedyogi".
+    # Lives on AlgoConfig because the optimizer changes WHAT the server
+    # step computes; ExecConfig.server_opt can override it per regime.
+    server_opt: str = "sgd"
 
 
 @dataclass
@@ -189,6 +195,20 @@ class ExecConfig:
     # set it so the cross-regime matrix auto-enrolls codec cells
     codec: Optional[str] = None
     codec_ef: Optional[bool] = None
+    # execution-level server-optimizer override (repro.optim.server,
+    # DESIGN.md §14): None defers to AlgoConfig.server_opt (the knob's
+    # primary home); regime entries set it for matrix auto-enrollment
+    server_opt: Optional[str] = None
+    # ---- run-health monitor (repro.health, DESIGN.md §14) ----
+    # consume every RoundRecord through a HealthMonitor: rolling-median
+    # loss spike / non-finite detection, staleness + quarantine-rate
+    # trend alarms, and (patience set) an early-stop hook run() honors;
+    # detector state checkpoints through the aux sidecar
+    health: bool = False
+    health_window: int = 32
+    health_min_history: int = 8
+    health_spike_mult: float = 3.0
+    health_patience: Optional[int] = None
     # bounded thread pool for the per-image file decode of disk-backed
     # sources (ingest/readers.py) — a driver hint like batch_size: the
     # trainer never reads it, source constructors do. 0 = serial decode.
@@ -286,6 +306,20 @@ EXEC_REGIMES = {
     "codec_int8_2d": {"codec": "int8", "shard_clients": True,
                       "shard_model": 4},
     "codec_int8_async": {"codec": "int8", "async_buffer": True},
+    # server-side optimizers (repro.optim.server, DESIGN.md §14): the
+    # adaptive cells must track a serial reference run with the SAME
+    # server_opt (the optimizer consumes the post-projection aggregate,
+    # so it is regime-independent by construction), including the
+    # two-axis mesh — where the moment state shards with the params —
+    # and the buffered-async anchor
+    "server_fedadam": {"server_opt": "fedadam"},
+    "server_fedyogi": {"server_opt": "fedyogi"},
+    "server_fedadam_2d": {"server_opt": "fedadam", "shard_clients": True,
+                          "shard_model": 4},
+    "server_fedyogi_2d": {"server_opt": "fedyogi", "shard_clients": True,
+                          "shard_model": 4},
+    "server_fedadam_async": {"server_opt": "fedadam", "async_buffer": True},
+    "server_fedyogi_async": {"server_opt": "fedyogi", "async_buffer": True},
 }
 
 
@@ -346,6 +380,10 @@ class TrainerState:
     # buffered-async regime: runtime-model state (e.g. the Markov
     # fast/slow chain) as of the next wave to dispatch; None elsewhere
     runtime_state: Optional[Dict] = None
+    # server-optimizer preconditioner state (repro.optim.server,
+    # DESIGN.md §14): {"m","v"} params mirrors for fedadam/fedyogi,
+    # None for the stateless sgd anchor
+    opt_state: Optional[PyTree] = None
 
 
 def _coerce_cfg(cfg, algo) -> Tuple[AlgoConfig, ExecConfig]:
@@ -455,12 +493,32 @@ class FederatedTrainer:
         self._client_bytes_up = (
             self._codec.client_bytes(self.params)
             if self._codec is not None else tree_nbytes(self.params))
+        # ---- server-side optimizer (repro.optim.server, DESIGN.md §14)
+        # resolved like the codec: ExecConfig override defers to
+        # AlgoConfig; sgd/None resolve to NO optimizer object, keeping
+        # the jit signature byte-identical to the pre-layer round
+        from repro.optim.server import make_server_optimizer
+        self._server_opt = make_server_optimizer(
+            exec_cfg.server_opt if exec_cfg.server_opt is not None
+            else algo_cfg.server_opt)
+        self._opt_state = (self._server_opt.init(self.params)
+                           if self._server_opt is not None else None)
+        self._opt_shardings = None
+        # ---- run-health monitor (repro.health, DESIGN.md §14) ----
+        self._health = None
+        if exec_cfg.health:
+            from repro.health.monitor import HealthConfig, HealthMonitor
+            self._health = HealthMonitor(HealthConfig(
+                window=exec_cfg.health_window,
+                min_history=exec_cfg.health_min_history,
+                spike_mult=exec_cfg.health_spike_mult,
+                patience=exec_cfg.health_patience,
+                clients_per_round=exec_cfg.clients_per_round))
         # sync engines mask timed-out clients out of the round; the async
         # engine instead stops collecting arrivals at the deadline (the
         # partial-buffer fold), so only the sync paths take the mask input
         self._deadline_mask = (exec_cfg.round_deadline is not None
                                and not exec_cfg.async_buffer)
-        self._ingest_restarts_seen = 0
         self.mesh = (self._build_mesh()
                      if exec_cfg.shard_clients or exec_cfg.shard_model > 1
                      else None)
@@ -489,7 +547,8 @@ class FederatedTrainer:
         round_shardings = self._round_shardings
         if round_shardings is not None and (
                 self._inject_deltas or self._deadline_mask or self._guard
-                or self._codec_stochastic or self._codec_ef):
+                or self._codec_stochastic or self._codec_ef
+                or self._server_opt is not None):
             from jax.sharding import NamedSharding, PartitionSpec as P
             rep = NamedSharding(self.mesh, P())
             cli = NamedSharding(self.mesh, P("clients"))
@@ -510,6 +569,24 @@ class FederatedTrainer:
                 # mesh) on the way in AND out
                 ins.append(ins[1])
                 outs.append(ins[1])
+            if self._server_opt is not None:
+                # moment state is {"m","v"} params mirrors: on a two-axis
+                # mesh the §8 path rules ("m/w1" matches "w1") give every
+                # moment leaf the spec of its param leaf (co-location,
+                # DESIGN.md §14); on a 1-D client mesh the params prefix
+                # sharding (replicated) covers the whole dict
+                axis_sizes = dict(zip(self.mesh.axis_names,
+                                      self.mesh.devices.shape))
+                if axis_sizes.get("model", 1) > 1:
+                    from repro.sharding.rules import (cohort_state_specs,
+                                                      to_named)
+                    o_sh = to_named(cohort_state_specs(
+                        self._opt_state, self.params, self.mesh), self.mesh)
+                else:
+                    o_sh = {"m": ins[1], "v": ins[1]}
+                self._opt_shardings = o_sh
+                ins.append(o_sh)             # opt state LAST in and out
+                outs.append(o_sh)
             round_shardings = (tuple(ins), tuple(outs))
         self._cohort_round = round_mod.make_cohort_round(
             loss_fn, self.algo, algo_cfg.eta_l, algo_cfg.eta_g,
@@ -523,7 +600,8 @@ class FederatedTrainer:
             deadline_mask=self._deadline_mask,
             fault_magnitude=(fault_plan.explode_magnitude
                              if fault_plan is not None else 1e12),
-            codec=self._codec, codec_ef=self._codec_ef)
+            codec=self._codec, codec_ef=self._codec_ef,
+            server_opt=self._server_opt)
         if self.mesh is not None:
             # pre-place so the first round's donation matches: replicated
             # on the 1-D client mesh, per-leaf model-sharded on a
@@ -533,6 +611,9 @@ class FederatedTrainer:
             self.server_state = jax.device_put(self.server_state, s_sh)
             if self._ef is not None:
                 self._ef = jax.device_put(self._ef, p_sh)
+            if self._opt_state is not None:
+                self._opt_state = jax.device_put(self._opt_state,
+                                                 self._opt_shardings)
         # serial reference path (exec.vectorize=False): per-client dispatch
         from repro.core.baselines import client_kwargs
         self.local_update = client_mod.make_local_update(
@@ -543,6 +624,20 @@ class FederatedTrainer:
         self._server_step = jax.jit(
             lambda st, p, d, ids, cm: self.algo.step(
                 st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm))
+        # serial variant with the server optimizer fused in: same step,
+        # then the optimizer re-steps from the round's incoming params
+        # with moment-preconditioned magnitudes (DESIGN.md §14)
+        self._server_step_opt = None
+        if self._server_opt is not None:
+            sopt = self._server_opt
+
+            def _step_opt(st, p, d, ids, cm, opt):
+                new_p, new_st, diag = self.algo.step(
+                    st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm)
+                new_p, new_opt = sopt.apply(p, new_p, opt)
+                return new_p, new_st, diag, new_opt
+
+            self._server_step_opt = jax.jit(_step_opt)
         self.rng = np.random.RandomState(exec_cfg.seed)
         self.history: List[RoundRecord] = []
         self.schedule: List[np.ndarray] = []     # sampled cohort per round
@@ -674,6 +769,7 @@ class FederatedTrainer:
         guard_cfg = None if self._guard is None else self._guard.config
         magnitude = (self.fault_plan.explode_magnitude
                      if self.fault_plan is not None else 1e12)
+        sopt = self._server_opt
 
         def fold(server_state, params, deltas, ids, weights, *chaos):
             # the buffered arrivals carry the codec wire payload: decode
@@ -683,6 +779,10 @@ class FederatedTrainer:
             # and resume bitwise), then the guard threshold — both
             # operate on the decoded (quantized-domain) values, exactly
             # like the sync round's guard
+            chaos = list(chaos)
+            # server-optimizer state rides LAST (the same fixed-order
+            # convention as the fused sync round, DESIGN.md §14)
+            opt_state = chaos.pop() if sopt is not None else None
             encoded = None
             if codec_obj is not None:
                 encoded = deltas
@@ -709,7 +809,16 @@ class FederatedTrainer:
                     * x.astype(jnp.float32), deltas)
                 out = algo.step(server_state, params, pre, ids, eta_g, 0,
                                 client_mask=cm, model_sharded=model_sharded)
-            return out + (gstats,) if guard else out
+            new_opt = None
+            if sopt is not None:
+                # precondition the POST-projection aggregate: re-step
+                # from this fold's incoming params (DESIGN.md §14)
+                new_p, new_opt = sopt.apply(params, out[0], opt_state)
+                out = (new_p,) + tuple(out[1:])
+            res = out + (gstats,) if guard else out
+            if sopt is not None:
+                res = tuple(res) + (new_opt,)
+            return res
 
         fold_extras = None
         if inject or guard:
@@ -751,6 +860,12 @@ class FederatedTrainer:
             f_in = f_in + (rep,) * (int(inject) + int(guard))
             if guard:
                 f_out = f_out + (rep,)
+            if sopt is not None:
+                # moment state co-locates with the params on the fold
+                # side too (same shardings the fused round was built
+                # with — full param-mirror shapes on every mesh)
+                f_in = f_in + (self._opt_shardings,)
+                f_out = f_out + (self._opt_shardings,)
             wave_kw.update(in_shardings=w_in, out_shardings=w_out)
             fold_kw.update(in_shardings=f_in, out_shardings=f_out)
         jit_wave = jax.jit(wave_update, **wave_kw)
@@ -773,10 +888,23 @@ class FederatedTrainer:
                     payload, losses, self._ef = out
                     return payload, losses
                 return out
+        jit_fold = jax.jit(fold, **fold_kw)
+        fold_call = jit_fold
+        if sopt is not None:
+            # python wrapper: feeds the CURRENT moment state and commits
+            # the new one — the optimizer only advances at folds (server
+            # rounds), so a mid-buffer checkpoint carries exactly the
+            # round-boundary state and resumes bitwise
+            def fold_call(server_state, params, deltas, ids, weights,
+                          *extras):
+                out = list(jit_fold(server_state, params, deltas, ids,
+                                    weights, *extras, self._opt_state))
+                self._opt_state = out.pop()
+                return tuple(out)
         return BufferedAsyncEngine(
             pipeline=self._pipeline,
             wave_update=wave_call,
-            fold=jax.jit(fold, **fold_kw),
+            fold=fold_call,
             runtime_take=self._runtime_take,
             buffer_size=(exec_cfg.buffer_size
                          or exec_cfg.clients_per_round),
@@ -869,7 +997,7 @@ class FederatedTrainer:
                   else self._pipeline.stage_blocking(t))
         chaos = (self._inject_deltas or self._deadline_mask
                  or self._guard is not None or self._codec_stochastic
-                 or self._codec_ef)
+                 or self._codec_ef or self._server_opt is not None)
         try:
             if not chaos:
                 self.params, self.server_state, losses, diag = \
@@ -893,6 +1021,7 @@ class FederatedTrainer:
                     staged.masks, staged.ids]
             extra: Dict[str, Any] = {}
             live = np.ones(n, bool)
+            shipped = np.ones(n, bool)
             if self._inject_deltas:
                 codes = np.zeros(kp, np.int32)
                 codes[:n] = self.fault_plan.delta_codes(t, staged.clients)
@@ -900,6 +1029,10 @@ class FederatedTrainer:
             if self._deadline_mask:
                 lat, dropped = self._runtime_take(t)
                 live = (~dropped) & (lat <= self.cfg.round_deadline)
+                # runtime dropouts never produced an update; deadline-
+                # late clients DID ship one — it just arrived too late
+                # for the fold (uplink accounting below)
+                shipped = ~dropped
                 lv = np.zeros(kp, bool)
                 lv[:n] = live
                 args.append(jnp.asarray(lv))
@@ -911,7 +1044,11 @@ class FederatedTrainer:
                 args.append(jax.random.fold_in(self._codec_key, t))
             if self._codec_ef:
                 args.append(self._ef)
+            if self._server_opt is not None:
+                args.append(self._opt_state)
             outs = list(self._cohort_round(*args))
+            if self._server_opt is not None:
+                self._opt_state = outs.pop()
             if self._codec_ef:
                 self._ef = outs.pop()
             if self._guard is not None:
@@ -928,9 +1065,12 @@ class FederatedTrainer:
                 self._guard.observe(norms[live & ~q],
                                     quarantined=extra["quarantined"],
                                     clipped=extra["clipped"])
-            # uplink accounting: only clients whose update actually
-            # shipped (live rows) pay wire bytes
-            extra["comm_bytes_up"] = self._client_bytes_up * int(live.sum())
+            # uplink accounting: bytes are counted when a delta is
+            # SHIPPED, regardless of whether the fold uses it — a
+            # deadline-dropped client still paid its uplink; a runtime
+            # dropout never sent anything
+            extra["comm_bytes_up"] = (self._client_bytes_up
+                                      * int(shipped.sum()))
             # train loss over clients whose update ARRIVED (live rows) —
             # identical to the historical mean when nothing timed out
             losses_h = np.asarray(losses[:n])
@@ -964,6 +1104,7 @@ class FederatedTrainer:
         cm = None
         n = len(clients)
         live = np.ones(n, bool)
+        shipped_mask = np.ones(n, bool)
         if self._inject_deltas:
             codes = self.fault_plan.delta_codes(t, clients)
             stacked = round_mod.apply_fault_codes(
@@ -989,6 +1130,9 @@ class FederatedTrainer:
         if self._deadline_mask:
             lat, dropped = self._runtime_take(t)
             live = (~dropped) & (lat <= self.cfg.round_deadline)
+            # see _run_round_vectorized: late clients shipped, dropouts
+            # never did
+            shipped_mask = ~dropped
             lv = jnp.asarray(live)
             ids = jnp.where(lv, ids, round_mod.ID_SENTINEL)
             cm = lv
@@ -1013,9 +1157,18 @@ class FederatedTrainer:
             from repro.core import projection as proj
             resid = codec_base.sanitized_residual(shipped, decoded)
             self._ef = proj.masked_client_mean(resid, cm)
-        self.params, self.server_state, diag = self._server_step(
-            self.server_state, self.params, stacked, ids, cm)
-        out["comm_bytes_up"] = self._client_bytes_up * int(live.sum())
+        if self._server_opt is not None:
+            (self.params, self.server_state, diag,
+             self._opt_state) = self._server_step_opt(
+                self.server_state, self.params, stacked, ids, cm,
+                self._opt_state)
+        else:
+            self.params, self.server_state, diag = self._server_step(
+                self.server_state, self.params, stacked, ids, cm)
+        # bytes are counted when a delta is shipped, regardless of
+        # whether the fold uses it (matches the fused path)
+        out["comm_bytes_up"] = (self._client_bytes_up
+                                * int(shipped_mask.sum()))
         losses_h = np.asarray(losses)
         train_loss = float(losses_h[live].mean()) if live.any() else 0.0
         return train_loss, diag, ingest, 0.0, out
@@ -1029,9 +1182,20 @@ class FederatedTrainer:
             t, self.params, self.server_state)
         extra = {"staleness_mean": m["staleness_mean"],
                  "staleness_max": m["staleness_max"],
-                 # uplink accounting: the arrivals this fold consumed
+                 # uplink accounting: updates SHIPPED during this round's
+                 # collection — bytes are paid at ship time whether or
+                 # not this fold consumed the update (a straggler folds
+                 # in a later round without paying again; a runtime
+                 # dropout never shipped and never pays)
                  "comm_bytes_up": (self._client_bytes_up
-                                   * int(m["n_arrivals"]))}
+                                   * int(m["n_shipped"]))}
+        # ingest-restart attribution: charge the waves whose staging ran
+        # during this round's collection (restarts key on the staged
+        # wave index, final once the wave was handed out)
+        restarts = sum(self._pipeline.restarts_for(w)
+                       for w in range(m["wave_start"], m["wave_end"]))
+        if restarts:
+            extra["ingest_restarts"] = restarts
         if self.cfg.round_deadline is not None:
             extra["deadline_fired"] = int(m["deadline_fired"])
             extra["deadline_dropped"] = int(m["deadline_dropped"])
@@ -1067,12 +1231,16 @@ class FederatedTrainer:
                else self._run_round_vectorized if self.cfg.vectorize
                else self._run_round_serial)
         train_loss, diag, ingest_host, ingest_dev, extra = run(t)
-        # supervised-restart accounting (DESIGN.md §12): the staging
-        # ring's cumulative restart counter, differenced per round
-        restarts = self._pipeline.restart_count
-        if restarts != self._ingest_restarts_seen:
-            extra["ingest_restarts"] = restarts - self._ingest_restarts_seen
-            self._ingest_restarts_seen = restarts
+        # supervised-restart accounting (DESIGN.md §12), attributed to
+        # the round whose STAGING crashed — the producer stages ahead,
+        # so the old cumulative-counter diff charged a crash during
+        # round t+1's staging to round t (whichever round observed it);
+        # restarts_for keys on the staged round index instead. The async
+        # engine attributes per wave inside _run_round_async.
+        if self._engine is None:
+            restarts = self._pipeline.restarts_for(t)
+            if restarts:
+                extra["ingest_restarts"] = restarts
         rec = RoundRecord(
             round=t, train_loss=train_loss,
             seconds=time.perf_counter() - tic,
@@ -1109,6 +1277,11 @@ class FederatedTrainer:
             else:
                 rec.test_accuracy = float(self.eval_fn(self.params))
         self.history.append(rec)
+        if self._health is not None:
+            # run-health monitor (repro.health, DESIGN.md §14): consumes
+            # the record in round order; read the verdict from
+            # trainer.health_report (run() honors should_stop)
+            self._health.observe(rec)
         return rec
 
     def finalize(self):
@@ -1133,6 +1306,16 @@ class FederatedTrainer:
     def run(self, verbose: bool = False) -> List[RoundRecord]:
         for t in range(self._start_round, self.cfg.rounds):
             rec = self.run_round(t)
+            if (self._health is not None
+                    and self._health.last_report is not None
+                    and self._health.last_report.should_stop):
+                # health early stop (DESIGN.md §14): the detector asked
+                # for it — land the pending eval and stop cleanly; the
+                # report (trainer.health_report) says why
+                if verbose:
+                    print(f"[{self.algo.name}] round {t:4d} health stop: "
+                          f"{self._health.last_report.alarms}")
+                break
             if verbose:
                 # a human is watching: land this round's async eval now so
                 # the accuracy prints with its round (trades the overlap)
@@ -1149,6 +1332,13 @@ class FederatedTrainer:
         """First round ``run()`` will execute — 0 for a fresh trainer,
         the checkpointed next round after ``restore()``/``resume()``."""
         return self._start_round
+
+    @property
+    def health_report(self):
+        """Latest HealthReport from the run-health monitor (repro.health,
+        DESIGN.md §14) — None before the first round or when
+        ExecConfig.health is off."""
+        return None if self._health is None else self._health.last_report
 
     @property
     def best_accuracy(self):
@@ -1196,7 +1386,8 @@ class FederatedTrainer:
             round=next_round, max_batches=cap["max_batches"],
             rng_state=cap["rng"], sampler_state=cap["sampler"],
             schedule=schedule, history=list(self.history),
-            runtime_state=cap.get("runtime"))
+            runtime_state=cap.get("runtime"),
+            opt_state=self._opt_state)
 
     def _codec_echo(self) -> Optional[dict]:
         """JSON echo of the LOSSY codec configuration (identity is
@@ -1242,6 +1433,14 @@ class FederatedTrainer:
             # params-shaped f32, saved leaf-exact so resume is bitwise
             for i, leaf in enumerate(jax.tree_util.tree_leaves(self._ef)):
                 aux_arrays[f"codec_ef_{i}"] = np.asarray(leaf, np.float32)
+        if st.opt_state is not None:
+            # server-optimizer moments (repro.optim.server, DESIGN.md
+            # §14): {"m","v"} params mirrors in f32, leaf-exact — the
+            # optimizer only advances at folds, so a mid-buffer async
+            # save carries exactly the round-boundary state
+            for i, leaf in enumerate(
+                    jax.tree_util.tree_leaves(st.opt_state)):
+                aux_arrays[f"server_opt_{i}"] = np.asarray(leaf, np.float32)
         if self._engine is not None:
             # buffered-async streaming state (DESIGN.md §11): virtual
             # clock + the in-flight entries (dispatched, not yet folded)
@@ -1291,8 +1490,21 @@ class FederatedTrainer:
                         "config": self.sampler.config_dict(),
                         "state": st.sampler_state},
             "codec": self._codec_echo(),
+            # server optimizer echo (None for the stateless sgd anchor):
+            # the moments' trajectory is part of the run, so restore()
+            # compares this and fails loudly on a mismatch
+            "server_opt": (None if self._server_opt is None
+                           else self._server_opt.config_dict()),
             "history": [asdict(r) for r in st.history],
         }
+        if self._health is not None:
+            # run-health detector state (repro.health, DESIGN.md §14):
+            # observe() runs at consumption, never ahead of it, so the
+            # window checkpoints verbatim — a resumed detector picks up
+            # mid-window instead of re-warming blind
+            aux_json["health"] = {
+                "config": self._health.config.config_dict(),
+                "state": self._health.state_dict()}
         if self._engine is not None:
             aux_json["async"] = {
                 "buffer_size": self._engine.buffer_size,
@@ -1477,6 +1689,31 @@ class FederatedTrainer:
                 f"checkpoint codec configuration {meta.get('codec')} "
                 f"does not match the trainer's {self._codec_echo()} — "
                 "resume with the original codec/codec_ef configuration")
+        mine_sopt = (None if self._server_opt is None
+                     else self._server_opt.config_dict())
+        if meta.get("server_opt") != mine_sopt:
+            # the moment trajectory is part of the run: switching the
+            # server optimizer (or its parameterization) mid-stream
+            # silently diverges — fail at restore
+            raise ValueError(
+                f"checkpoint server optimizer {meta.get('server_opt')} "
+                f"does not match the trainer's {mine_sopt} — resume "
+                "with the original server_opt configuration")
+        meta_health = meta.get("health")
+        if (meta_health is not None) != (self._health is not None):
+            raise ValueError(
+                "checkpoint and trainer disagree on the run-health "
+                f"monitor (checkpoint health={meta_health is not None}, "
+                f"trainer health={self._health is not None}) — resume "
+                "with the original ExecConfig.health configuration")
+        if (meta_health is not None
+                and meta_health["config"] != self._health.config
+                .config_dict()):
+            raise ValueError(
+                f"checkpoint health configuration {meta_health['config']} "
+                f"does not match the trainer's "
+                f"{self._health.config.config_dict()} — resume with the "
+                "original health detector parameters")
         self.params = state["params"]
         self.server_state = state["server_state"]
         if self._codec_ef:
@@ -1489,6 +1726,17 @@ class FederatedTrainer:
             self._ef = jax.tree_util.tree_unflatten(
                 treedef, [jnp.asarray(arrays[f"codec_ef_{i}"], jnp.float32)
                           for i in range(len(leaves))])
+        if self._opt_state is not None:
+            if "server_opt_0" not in arrays:
+                raise ValueError(
+                    "trainer expects server-optimizer moment state but "
+                    "the checkpoint carries none — resume with the "
+                    "original server_opt configuration")
+            leaves, treedef = jax.tree_util.tree_flatten(self._opt_state)
+            self._opt_state = jax.tree_util.tree_unflatten(
+                treedef,
+                [jnp.asarray(arrays[f"server_opt_{i}"], jnp.float32)
+                 for i in range(len(leaves))])
         if self.mesh is not None:
             # checkpoints hold full (host) arrays, so restoring onto a
             # DIFFERENT mesh shape than the one that saved them works:
@@ -1500,6 +1748,9 @@ class FederatedTrainer:
             self.server_state = jax.device_put(self.server_state, s_sh)
             if self._ef is not None:
                 self._ef = jax.device_put(self._ef, p_sh)
+            if self._opt_state is not None:
+                self._opt_state = jax.device_put(self._opt_state,
+                                                 self._opt_shardings)
         self.rng.set_state(("MT19937",
                             np.asarray(arrays["rng_keys"], np.uint32),
                             int(arrays["rng_pos"]),
@@ -1519,6 +1770,8 @@ class FederatedTrainer:
             gst = meta["chaos"]["guard"].get("state")
             if gst:
                 self._guard.load_state_dict(gst)
+        if meta_health is not None and self._health is not None:
+            self._health.load_state_dict(meta_health["state"])
         if self._engine is not None:
             from repro.core.async_engine import BufferEntry
             eng = self._engine

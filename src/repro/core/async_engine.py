@@ -175,6 +175,8 @@ class BufferedAsyncEngine:
         empty_streak = 0
         start_clock = self.clock
         deadline_fired = 0
+        wave_start = self.wave_frontier
+        shipped = 0                    # updates pushed in flight this round
         while len(arrivals) < self.buffer_size:
             # top up in-flight waves: always at least one pending
             # arrival, and up to `concurrency` waves in flight
@@ -182,6 +184,7 @@ class BufferedAsyncEngine:
                 if self._heap and self._live_waves() >= self.concurrency:
                     break
                 n, h, d = self._dispatch_wave(params, server_state)
+                shipped += n
                 host_s += h
                 dev_s += d
                 empty_streak = 0 if n else empty_streak + 1
@@ -229,6 +232,16 @@ class BufferedAsyncEngine:
             "host_seconds": host_s,
             "device_seconds": dev_s,
             "n_arrivals": len(arrivals),
+            # uplink accounting (DESIGN.md §13): updates SHIPPED (pushed
+            # in flight) while this round collected — bytes are paid at
+            # ship time whether or not this fold consumed the update
+            # (stragglers fold later; runtime dropouts never shipped)
+            "n_shipped": shipped,
+            # waves dispatched during this round's collection
+            # [wave_start, wave_end): the staging rounds whose ingest
+            # restarts this server round should be charged with
+            "wave_start": wave_start,
+            "wave_end": self.wave_frontier,
             "deadline_fired": deadline_fired,
             "deadline_dropped": (self.buffer_size - len(arrivals)
                                  if deadline_fired else 0),

@@ -124,7 +124,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       inject_faults: bool = False,
                       deadline_mask: bool = False,
                       fault_magnitude: float = 1e12,
-                      codec=None, codec_ef: bool = False):
+                      codec=None, codec_ef: bool = False,
+                      server_opt=None):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids, *extras) -> (new_params, new_server_state, losses, diag
     [, guard_stats]).
@@ -154,6 +155,15 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     epilogue is only engaged when the guard is off, because quarantine/
     clip rewrite decoded rows that the payload scalars no longer
     describe.
+
+    A STATEFUL ``server_opt`` (repro.optim.server, DESIGN.md §14)
+    extends the order one last time: the optimizer's moment state is the
+    LAST extra input and the updated state the LAST output. It consumes
+    the POST-projection aggregate — ``algo.step``'s proposed params —
+    and re-steps from the round's incoming params, so it composes with
+    every registered rule without touching the rule's own math.
+    ``server_opt=None`` (the sgd pass-through) leaves the program
+    byte-identical to the pre-layer round.
 
     The guard validates every delta BEFORE the server rule sees it:
     per-client ||Δ||² + non-finite count (the reduction-pass sweep the
@@ -244,6 +254,7 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         guard_thresh = next(it) if guard else None
         codec_key = next(it) if codec_stochastic else None
         ef = next(it) if ef_active else None
+        opt_state = next(it) if server_opt is not None else None
         extra = algo.client_extra(server_state)
         deltas, losses = local(params, batches, masks, extra)
         if inject_faults:
@@ -299,11 +310,20 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
             server_state, params, deltas, client_ids, eta_g, 0,
             client_mask=cm, model_sharded=model_sharded,
             encoded=(payload if codec_lossy and not guard else None))
+        new_opt = None
+        if server_opt is not None:
+            # adaptive server step (DESIGN.md §14): precondition the
+            # POST-projection aggregate — re-step from the round's
+            # incoming params with moment-scaled magnitudes
+            new_params, new_opt = server_opt.apply(params, new_params,
+                                                   opt_state)
         outs = [new_params, new_state, losses, diag]
         if guard:
             outs.append(gstats)
         if ef_active:
             outs.append(new_ef)
+        if server_opt is not None:
+            outs.append(new_opt)
         return tuple(outs)
 
     if not jit:

@@ -112,6 +112,7 @@ class CohortIngestPipeline:
         self._attempts: dict = {}       # round -> produce attempts so far
         self._sampled: dict = {}        # round -> drawn cohort (retry cache)
         self._blocking_restarts = 0     # stage_blocking's share of the tally
+        self._blocking_rounds: dict = {}  # round -> stage_blocking restarts
         self._max_batches: Optional[int] = None
         self._ring: Optional[CohortPrefetcher] = None
         self._blocking_slot: dict = {}   # stage_blocking's private buffer
@@ -235,6 +236,7 @@ class CohortIngestPipeline:
                 if self._blocking_restarts >= self.max_restarts:
                     raise
                 self._blocking_restarts += 1
+                self._blocking_rounds[t] = self._blocking_rounds.get(t, 0) + 1
                 if self.restart_backoff > 0:
                     time.sleep(self.restart_backoff * (2 ** attempt))
         self._sampled.pop(t, None)
@@ -259,6 +261,17 @@ class CohortIngestPipeline:
         ``ingest_restarts`` source."""
         ring = self._ring.restart_count if self._ring is not None else 0
         return ring + self._blocking_restarts
+
+    def restarts_for(self, t: int) -> int:
+        """Supervised recoveries attributed to round ``t``'s STAGING —
+        keyed by the round index carried into produce_fn, not by
+        whichever round was computing when the crash fired. Final once
+        round t has been staged (the retry loop resolved before the
+        staged item was handed out), which is exactly when the trainer
+        reads it to fill RoundRecord.ingest_restarts."""
+        ring = (self._ring.restart_rounds.get(t, 0)
+                if self._ring is not None else 0)
+        return ring + self._blocking_rounds.get(t, 0)
 
     def close(self):
         """Stop the staging ring. The source is CALLER-owned (sweeps

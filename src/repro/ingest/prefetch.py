@@ -63,6 +63,12 @@ class CohortPrefetcher:
         self._max_restarts = max(0, int(max_restarts))
         self._restart_backoff = float(restart_backoff)
         self.restart_count = 0
+        # restarts keyed by the STAGED round whose produce_fn crashed —
+        # the producer runs ahead of consumption, so a cumulative count
+        # alone would let the consumer charge a crash during round t+1's
+        # staging to whatever round happened to be observing (the round-
+        # attribution bug of DESIGN.md §12's accounting)
+        self.restart_rounds: dict = {}
         self._ready = queue.Queue()
         self._free = queue.Queue()
         self.slots = max(1, slots)
@@ -103,6 +109,7 @@ class CohortPrefetcher:
                 if self.restart_count >= self._max_restarts:
                     raise
                 self.restart_count += 1
+                self.restart_rounds[t] = self.restart_rounds.get(t, 0) + 1
                 if self._restart_backoff > 0:
                     time.sleep(self._restart_backoff * (2 ** attempt))
                 attempt += 1

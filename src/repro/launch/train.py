@@ -238,6 +238,20 @@ def main(argv=None):
                          "int8_sym | int8_sr — quantized wire payloads "
                          "with per-leaf scales; identity is bitwise "
                          "equal to no codec")
+    ap.add_argument("--server-opt", default="sgd",
+                    choices=["sgd", "fedadam", "fedyogi"],
+                    help="server-side optimizer (DESIGN.md §14): "
+                         "precondition every rule's post-projection "
+                         "aggregate with fedadam/fedyogi moments; sgd "
+                         "(default) is today's step, bitwise")
+    ap.add_argument("--health", action="store_true",
+                    help="run-health monitor (DESIGN.md §14): rolling-"
+                         "median loss spike / NaN detection, staleness "
+                         "and quarantine-rate trend alarms over the "
+                         "RoundRecord stream")
+    ap.add_argument("--health-patience", type=int, default=None,
+                    help="early-stop after N consecutive alarmed rounds "
+                         "(needs --health; default: alarms only)")
     ap.add_argument("--codec-ef", action="store_true",
                     help="server-side error feedback for a lossy "
                          "--codec: clients ship delta + the running "
@@ -271,7 +285,8 @@ def main(argv=None):
     cohort = max(1, int(round(k * args.participation)))
     algo = AlgoConfig(name=args.algorithm, eta_l=args.eta_l,
                       eta_g=args.eta_g,
-                      hyper=default_hyper(args.algorithm, lam=args.lam))
+                      hyper=default_hyper(args.algorithm, lam=args.lam),
+                      server_opt=args.server_opt)
     cfg = ExecConfig(
         rounds=args.rounds, clients_per_round=cohort, seed=args.seed,
         eval_every=args.eval_every, vectorize=not args.serial,
@@ -285,6 +300,7 @@ def main(argv=None):
         guard=args.guard, round_deadline=args.round_deadline,
         ingest_max_restarts=args.ingest_max_restarts,
         codec=args.codec, codec_ef=(True if args.codec_ef else None),
+        health=args.health, health_patience=args.health_patience,
         decode_workers=args.decode_workers,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)
@@ -331,6 +347,12 @@ def main(argv=None):
             path = trainer.save(args.ckpt_dir)
             print("checkpoint written to", path)
         best, at = trainer.best_accuracy
+        if args.health and trainer.health_report is not None:
+            hr = trainer.health_report
+            print(f"health: {hr.alarmed_rounds} alarmed rounds "
+                  f"(spikes {hr.spike_rounds}, "
+                  f"nonfinite {hr.nonfinite_rounds})"
+                  + (" — EARLY STOP" if hr.should_stop else ""))
     print(f"best eval {best} @ round {at}")
     if args.out:
         with open(args.out, "w") as f:

@@ -1,0 +1,119 @@
+"""Server-side optimizers as first-class registry citizens (DESIGN.md
+§14): a ``ServerOptimizer`` consumes the POST-projection aggregate —
+the new params every server rule proposes — so one implementation works
+identically across the serial / vectorized / sharded / buffered-async
+execution paths, and composes with ANY registered algorithm (FedDPC's
+reduction-pass scalars are still computed from the raw deltas before
+the optimizer ever sees the result).
+
+The optimizer's view of a round is the pseudo-gradient
+
+    g_t = params_t - proposed_{t+1}        (f32, per leaf)
+
+i.e. the effective descent direction the algorithm's step applied
+(its eta_g included). ``sgd`` accepts the proposal verbatim — it is
+STATELESS and never enters the compiled round, which is what makes it
+the bitwise anchor: with ``server_opt in (None, "sgd")`` the jit
+signature and the traced program are byte-identical to the pre-layer
+round. ``fedadam`` / ``fedyogi`` re-step from params_t with
+moment-preconditioned magnitudes (Reddi et al. [9], the same
+second-moment rules as the whole-algorithm fedadam/fedyogi entries in
+core/baselines.py, here composable with every rule):
+
+    m = b1 m + (1-b1) g
+    v = b2 v + (1-b2) g^2                      (adam)
+    v = v - (1-b2) g^2 sign(v - g^2)           (yogi)
+    params_{t+1} = params_t - lr * m / (sqrt(v) + eps)
+
+State is ``{"m": <params mirror>, "v": <params mirror>}`` in f32, so
+``sharding/rules.cohort_state_specs`` path rules place the moments
+exactly like the matching param leaf on the two-axis mesh, and the
+trainer checkpoints the leaves bitwise through the aux sidecar
+(``server_opt_{i}`` arrays — see core/api.save/restore).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ServerOptimizer:
+    """``init(params) -> state``; ``apply(params, proposed, state) ->
+    (new_params, new_state)`` — pure functions, traced inside the round's
+    jit. ``stateful=False`` marks a literal pass-through the trainer
+    keeps OUT of the compiled program entirely (the bitwise anchor)."""
+    name: str
+    init: Callable[[PyTree], PyTree]
+    apply: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    stateful: bool = True
+
+    def config_dict(self) -> Dict[str, Any]:
+        return {"name": self.name}
+
+
+def _sgd() -> ServerOptimizer:
+    def init(params):
+        return None
+
+    def apply(params, proposed, state):
+        return proposed, state
+
+    return ServerOptimizer("sgd", init, apply, stateful=False)
+
+
+def _moment_init(params):
+    z = lambda p: jnp.zeros(jnp.shape(p), jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def _make_adaptive(kind: str, lr: float = 0.1, b1: float = 0.9,
+                   b2: float = 0.99, eps: float = 1e-3) -> ServerOptimizer:
+    def apply(params, proposed, state):
+        g = jax.tree.map(
+            lambda p, q: p.astype(jnp.float32) - q.astype(jnp.float32),
+            params, proposed)
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg,
+                         state["m"], g)
+        if kind == "adam":
+            v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg,
+                             state["v"], g)
+        else:   # yogi
+            v = jax.tree.map(
+                lambda vv, gg: vv - (1 - b2) * gg * gg
+                * jnp.sign(vv - gg * gg), state["v"], g)
+        new = jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32)
+                               - lr * mm / (jnp.sqrt(vv) + eps)
+                               ).astype(p.dtype), params, m, v)
+        return new, {"m": m, "v": v}
+
+    return ServerOptimizer(f"fed{kind}", _moment_init, apply)
+
+
+_REGISTRY: Dict[str, Callable[[], ServerOptimizer]] = {
+    "sgd": _sgd,
+    "fedadam": lambda: _make_adaptive("adam"),
+    "fedyogi": lambda: _make_adaptive("yogi"),
+}
+
+SERVER_OPTIMIZER_NAMES = tuple(_REGISTRY)
+
+
+def make_server_optimizer(name: Optional[str]) -> Optional[ServerOptimizer]:
+    """Resolve a registry name; ``None`` and ``"sgd"`` both yield None —
+    the trainer treats "no optimizer object" as the pass-through anchor,
+    adding NOTHING to the jit signature (bitwise with the pre-layer
+    round by construction)."""
+    if name is None:
+        return None
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown server optimizer {name!r} "
+                         f"(registered: {sorted(_REGISTRY)})")
+    opt = _REGISTRY[name]()
+    return opt if opt.stateful else None

@@ -70,10 +70,13 @@ def batch_fn(c, t):
 
 
 def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,
-             use_kernel: bool = False, codec=None) -> FederatedTrainer:
+             use_kernel: bool = False, codec=None,
+             server_opt=None) -> FederatedTrainer:
     kw = dict(EXEC_REGIMES[regime])
     if codec is not None:
         kw["codec"] = codec
+    if server_opt is not None:
+        kw["server_opt"] = server_opt
     cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
                      eval_every=10 ** 9, prefetch=prefetch, **kw)
     with FederatedTrainer(
@@ -89,12 +92,12 @@ def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,
 _ref_cache = {}
 
 
-def reference(algo: str, sampler_name: str,
-              codec=None) -> FederatedTrainer:
-    key = (algo, sampler_name, codec)
+def reference(algo: str, sampler_name: str, codec=None,
+              server_opt=None) -> FederatedTrainer:
+    key = (algo, sampler_name, codec, server_opt)
     if key not in _ref_cache:
         _ref_cache[key] = run_cell(algo, sampler_name, "serial", False,
-                                   codec=codec)
+                                   codec=codec, server_opt=server_opt)
     return _ref_cache[key]
 
 
@@ -122,8 +125,9 @@ def check_cell(cell: str):
         return
     tr = run_cell(algo, sampler_name, regime, prefetch)
     codec = EXEC_REGIMES[regime].get("codec")
+    sopt = EXEC_REGIMES[regime].get("server_opt")
     lossy = codec is not None and codec != "identity"
-    plain = reference(algo, sampler_name)
+    plain = reference(algo, sampler_name, server_opt=sopt)
     if lossy:
         # the documented drift bound vs the uncompressed run
         tol = CODEC_TOL[codec]
@@ -131,8 +135,10 @@ def check_cell(cell: str):
         for rv, rs in zip(tr.history, plain.history):
             assert np.isclose(rv.train_loss, rs.train_loss,
                               rtol=tol["rtol"], atol=tol["atol"]), cell
-    # strict regime equivalence: same-codec serial reference
-    ref = plain if not lossy else reference(algo, sampler_name, codec)
+    # strict regime equivalence: same-codec (and same-server-opt)
+    # serial reference
+    ref = plain if not lossy else reference(algo, sampler_name, codec,
+                                            server_opt=sopt)
     for a, b in zip(ref.schedule[:ROUNDS], tr.schedule[:ROUNDS]):
         assert (np.asarray(a) == np.asarray(b)).all(), (cell, a, b)
     assert_trees_close(tr.params, ref.params)
@@ -150,6 +156,17 @@ def check_cell(cell: str):
         from jax.sharding import PartitionSpec as P
         assert tr.params["w1"].sharding.spec == P(None, "model"), \
             tr.params["w1"].sharding
+    if sopt is not None:
+        # optimizer state must exist and (on the two-axis mesh) the
+        # moments must CO-LOCATE with their param leaves (DESIGN.md §14)
+        assert tr._opt_state is not None, cell
+        if regime.endswith("_2d"):
+            for mom in ("m", "v"):
+                for leaf, pleaf in zip(
+                        jax.tree_util.tree_leaves(tr._opt_state[mom]),
+                        jax.tree_util.tree_leaves(tr.params)):
+                    assert leaf.sharding == pleaf.sharding, \
+                        (cell, mom, leaf.sharding, pleaf.sharding)
     print(f"[matrix] {cell} == serial reference OK")
 
 

@@ -18,6 +18,13 @@ sampled every round to the horizon and the checkpoint must roll the
 RNG/sampler/schedule back past ALL staged-but-unconsumed rounds —
 DESIGN.md §10) and a Markov sampler whose availability chain is itself
 checkpointed state.
+
+Beyond the three server rules, two stateful-layer configs ride the same
+phases: ``feddpc_guarded`` (update guard ON with a NaN fault plan firing
+on BOTH sides of the cut — the guard's rolling norm window must resume
+warm or round 4's quarantine decision drifts, DESIGN.md §12) and
+``feddpc_fedadam`` (adaptive server optimizer + run-health monitor —
+moment state and detector windows must resume bitwise, DESIGN.md §14).
 """
 import os
 import sys
@@ -27,13 +34,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.faults import FaultPlan
 from repro.core.samplers import MarkovSampler
 
 NUM_CLIENTS = 8
 K = 3
 ROUNDS = 6
 SPLIT = 3
-ALGOS = ("feddpc", "fedvarp", "fedexp")
+# name -> (algo, extra ExecConfig kwargs, FaultPlan kwargs or None)
+CONFIGS = {
+    "feddpc": ("feddpc", {}, None),
+    "fedvarp": ("fedvarp", {}, None),
+    "fedexp": ("fedexp", {}, None),
+    "feddpc_guarded": ("feddpc",
+                       dict(guard=True, guard_min_history=1),
+                       dict(nan_rate=0.5, nan_rounds=(1, 4))),
+    "feddpc_fedadam": ("feddpc",
+                       dict(server_opt="fedadam", health=True,
+                            health_window=4, health_min_history=2), None),
+}
 
 
 def loss_fn(p, batch):
@@ -54,56 +73,73 @@ def ragged_batch_fn(c, t):
             for _ in range((c % 3) + 1)]
 
 
-def build(algo):
-    cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
-                     eval_every=10 ** 9, prefetch=True, prefetch_depth=8,
-                     device_stage=True)
+def _cfg(exec_kw):
+    return ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                      eval_every=10 ** 9, prefetch=True, prefetch_depth=8,
+                      device_stage=True, **exec_kw)
+
+
+def _plan(plan_kw):
+    return None if plan_kw is None else FaultPlan.seeded(7, **plan_kw)
+
+
+def build(name):
+    algo, exec_kw, plan_kw = CONFIGS[name]
     return FederatedTrainer(
-        loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn, cfg,
+        loss_fn, make_params(), NUM_CLIENTS, ragged_batch_fn,
+        _cfg(exec_kw),
         algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
-        sampler=MarkovSampler(NUM_CLIENTS, K, p_on=0.6, p_off=0.4))
+        sampler=MarkovSampler(NUM_CLIENTS, K, p_on=0.6, p_off=0.4),
+        fault_plan=_plan(plan_kw))
 
 
 def dump(out_path, trainers):
     arrays = {}
-    for algo, tr in trainers.items():
+    for name, tr in trainers.items():
         for i, leaf in enumerate(jax.tree.leaves(tr.params)):
-            arrays[f"{algo}/params/{i}"] = np.asarray(leaf)
+            arrays[f"{name}/params/{i}"] = np.asarray(leaf)
         for i, leaf in enumerate(jax.tree.leaves(tr.server_state)):
-            arrays[f"{algo}/state/{i}"] = np.asarray(leaf)
-        arrays[f"{algo}/schedule"] = np.stack(tr.schedule[:ROUNDS])
-        arrays[f"{algo}/losses"] = np.asarray(
+            arrays[f"{name}/state/{i}"] = np.asarray(leaf)
+        arrays[f"{name}/schedule"] = np.stack(tr.schedule[:ROUNDS])
+        arrays[f"{name}/losses"] = np.asarray(
             [r.train_loss for r in tr.history], np.float64)
+        arrays[f"{name}/quarantined"] = np.asarray(
+            [r.quarantined for r in tr.history], np.int64)
+        if tr._opt_state is not None:
+            for i, leaf in enumerate(jax.tree.leaves(tr._opt_state)):
+                arrays[f"{name}/opt/{i}"] = np.asarray(leaf)
+        if tr._health is not None:
+            arrays[f"{name}/health_loss_window"] = np.asarray(
+                tr._health.state_dict()["loss"], np.float64)
     np.savez(out_path, **arrays)
 
 
 def main(phase, workdir):
     trainers = {}
-    for algo in ALGOS:
-        ckpt_dir = os.path.join(workdir, f"ckpt_{algo}")
+    for name in CONFIGS:
+        algo, exec_kw, plan_kw = CONFIGS[name]
+        ckpt_dir = os.path.join(workdir, f"ckpt_{name}")
         if phase == "full":
-            with build(algo) as tr:
+            with build(name) as tr:
                 tr.run()
         elif phase == "part":
-            with build(algo) as tr:
+            with build(name) as tr:
                 for t in range(SPLIT):
                     tr.run_round(t)
                 tr.save(ckpt_dir)
         elif phase == "resume":
-            cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
-                             eval_every=10 ** 9, prefetch=True,
-                             prefetch_depth=8, device_stage=True)
             with FederatedTrainer.resume(
                     ckpt_dir, loss_fn, make_params(), NUM_CLIENTS,
-                    ragged_batch_fn, cfg,
+                    ragged_batch_fn, _cfg(exec_kw),
                     algo=AlgoConfig(name=algo, eta_l=0.05, eta_g=0.1),
                     sampler=MarkovSampler(NUM_CLIENTS, K, p_on=0.6,
-                                          p_off=0.4)) as tr:
+                                          p_off=0.4),
+                    fault_plan=_plan(plan_kw)) as tr:
                 assert tr._start_round == SPLIT, tr._start_round
                 tr.run()
         else:
             raise SystemExit(f"unknown phase {phase!r}")
-        trainers[algo] = tr
+        trainers[name] = tr
     if phase in ("full", "resume"):
         dump(os.path.join(workdir, f"{phase}.npz"), trainers)
     print(f"PHASE {phase} OK")

@@ -251,6 +251,35 @@ def test_async_eval_matches_sync():
                               rtol=1e-6, atol=1e-8)
 
 
+def test_async_eval_tail_drains_before_close():
+    """The final round's async eval launches with no later boundary to
+    fold it in: close()/finalize() must DRAIN it into the last
+    RoundRecord (and best_accuracy must resolve it too) — a slow eval_fn
+    would otherwise leave test_accuracy None and silently drop the last
+    round from the best-accuracy scan."""
+    import time as _time
+
+    def slow_eval(p):
+        _time.sleep(0.3)
+        return float(jnp.mean(jnp.tanh(p["w"])))
+
+    cfg = FLConfig(algorithm="feddpc", rounds=4, clients_per_round=K,
+                   eta_l=0.05, eta_g=0.1, seed=7, eval_every=2,
+                   async_eval=True)
+    tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS,
+                          ragged_batch_fn, cfg, slow_eval)
+    for t in range(4):
+        tr.run_round(t)
+    tr.close()     # eval of round 3 is still in flight here
+    assert tr.history[-1].test_accuracy is not None
+    evaled = [r.round for r in tr.history if r.test_accuracy is not None]
+    assert 3 in evaled
+    best, best_round = tr.best_accuracy
+    assert best is not None
+    assert best == max(r.test_accuracy for r in tr.history
+                       if r.test_accuracy is not None)
+
+
 def test_sharded_round_matches_single_device():
     """Client-axis sharded round == single-device round on a FORCED
     8-host-device mesh for feddpc/fedavg/fedexp. The device count locks at

@@ -209,6 +209,51 @@ def test_async_deadline_folds_partial_buffer():
     assert all(np.isfinite(r.train_loss) for r in recs)
 
 
+# ---------------- uplink accounting (shipped semantics) ----------------
+
+def test_deadline_dropped_clients_still_pay_uplink():
+    """Bytes are counted when a delta is SHIPPED, regardless of whether
+    the fold uses it: the rate-1.0 hang round deadline-drops all K
+    clients, but each of them computed and shipped its (codec-encoded)
+    update — so the deadline round's comm_bytes_up equals every other
+    round's, on both the fused and the serial path, with the int8 codec
+    shrinking (never re-weighting) the wire size."""
+    for vec in (True, False):
+        byt = {}
+        for codec in (None, "int8"):
+            plan = FaultPlan.seeded(5, hang_rate=1.0, hang_rounds=(1,))
+            kw = {} if codec is None else {"codec": codec}
+            with make_trainer(plan, vectorize=vec, guard=True,
+                              round_deadline=10.0,
+                              runtime=make_runtime("deterministic",
+                                                   NUM_CLIENTS),
+                              **kw) as tr:
+                recs = tr.run()
+            assert [r.deadline_dropped for r in recs] == [0, K, 0, 0]
+            per_round = [r.comm_bytes_up for r in recs]
+            assert per_round[1] == per_round[0] > 0, (vec, codec, per_round)
+            assert len(set(per_round)) == 1, (vec, codec, per_round)
+            byt[codec] = per_round[0]
+        assert byt["int8"] < byt[None]
+
+
+def test_runtime_dropouts_never_pay_uplink():
+    """The other half of the shipped semantics: a runtime DROPOUT never
+    produced an update, so it pays nothing — per round, comm_bytes_up
+    counts exactly the K - dropped clients that shipped (with a huge
+    deadline, deadline_dropped IS the dropout count)."""
+    for vec in (True, False):
+        with make_trainer(None, vectorize=vec, round_deadline=1e9,
+                          runtime=make_runtime("exponential", NUM_CLIENTS,
+                                               mean=0.5, dropout=0.5)) as tr:
+            recs = tr.run()
+            per_client = tr._client_bytes_up
+        assert sum(r.deadline_dropped for r in recs) > 0, vec
+        for r in recs:
+            assert r.comm_bytes_up == per_client * (K - r.deadline_dropped), \
+                (vec, r.round, r.comm_bytes_up, r.deadline_dropped)
+
+
 # ---------------- self-healing ingest ----------------
 
 def test_ingest_crash_restart_preserves_the_run_bitwise():
@@ -221,7 +266,10 @@ def test_ingest_crash_restart_preserves_the_run_bitwise():
         recs = tr.run()
         faulted = (tr.params, [r.train_loss for r in recs],
                    [np.asarray(s) for s in tr.schedule])
-        assert sum(r.ingest_restarts for r in recs) == 1
+        # attribution invariant: the restart is charged to the round
+        # whose STAGING crashed (round 1) — even though the prefetch ring
+        # stages round 1 while round 0's program is still on device
+        assert [r.ingest_restarts for r in recs] == [0, 1, 0, 0]
     with make_trainer(None) as tr:
         recs = tr.run()
         clean = (tr.params, [r.train_loss for r in recs],

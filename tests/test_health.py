@@ -1,0 +1,239 @@
+"""Run-health monitor contracts (repro.health, DESIGN.md §14): the
+windowed detectors (loss spike / non-finite / staleness trend /
+quarantine rate), the patience-gated early stop, bitwise detector-state
+round-trips through save/resume, and the trainer integration that turns
+``should_stop`` into an actual early exit of ``run()``.
+"""
+import tempfile
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
+from repro.core.faults import FaultPlan
+from repro.health.monitor import HealthConfig, HealthMonitor
+
+import jax.numpy as jnp
+
+
+def rec(t, loss, stale=0.0, quar=0):
+    return SimpleNamespace(round=t, train_loss=loss, staleness_mean=stale,
+                           quarantined=quar)
+
+
+def feed(mon, losses, **kw):
+    return [mon.observe(rec(t, lo, **kw)) for t, lo in enumerate(losses)]
+
+
+# ---------------- detectors ----------------
+
+def test_spike_arms_after_min_history():
+    mon = HealthMonitor(HealthConfig(min_history=4, spike_mult=3.0))
+    # a 100x spike BEFORE min_history rounds must not alarm (unarmed)
+    reports = feed(mon, [1.0, 1.0, 100.0])
+    assert all(r.healthy for r in reports)
+    mon = HealthMonitor(HealthConfig(min_history=4, spike_mult=3.0))
+    reports = feed(mon, [1.0, 1.1, 0.9, 1.0, 100.0])
+    assert all(r.healthy for r in reports[:4])
+    assert reports[4].alarms == ["loss_spike"]
+    assert reports[4].spike_rounds == 1
+    assert not reports[4].should_stop          # no patience configured
+
+
+def test_spike_uses_median_not_mean_and_plateau_recovers():
+    """The rolling median ignores the spike itself (a mean would chase
+    it), and a sustained plateau at the new level stops alarming once
+    the median catches up — a spike is not a regime change."""
+    mon = HealthMonitor(HealthConfig(window=4, min_history=4,
+                                     spike_mult=3.0))
+    losses = [1.0] * 4 + [10.0] * 6
+    reports = feed(mon, losses)
+    alarmed = [bool(r.alarms) for r in reports]
+    assert alarmed[4]                  # the jump alarms
+    assert not alarmed[-1]             # the plateau does not, forever
+    assert reports[-1].loss_median == pytest.approx(10.0)
+
+
+def test_nonfinite_always_alarms_and_never_enters_window():
+    mon = HealthMonitor(HealthConfig(min_history=4, stop_on_nonfinite=False))
+    reports = feed(mon, [1.0, float("nan"), 1.0, float("inf"), 1.0])
+    assert reports[1].alarms == ["nonfinite_loss"]
+    assert reports[3].alarms == ["nonfinite_loss"]
+    assert reports[4].nonfinite_rounds == 2
+    # the window holds only the finite losses: the median stays finite
+    assert np.isfinite(reports[4].loss_median)
+    assert not any(r.should_stop for r in reports)
+
+
+def test_nonfinite_stops_immediately_when_configured():
+    mon = HealthMonitor(HealthConfig(stop_on_nonfinite=True))
+    reports = feed(mon, [1.0, float("nan")])
+    assert not reports[0].should_stop
+    assert reports[1].should_stop
+
+
+def test_staleness_trend_alarm():
+    mon = HealthMonitor(HealthConfig(min_history=4, staleness_mult=3.0))
+    reports = [mon.observe(rec(t, 1.0, stale=1.0)) for t in range(6)]
+    assert all(r.healthy for r in reports)
+    assert mon.observe(rec(6, 1.0, stale=10.0)).alarms == [
+        "staleness_trend"]
+
+
+def test_quarantine_rate_alarm():
+    mon = HealthMonitor(HealthConfig(min_history=4, quarantine_rate=0.25,
+                                     clients_per_round=4))
+    # sustained 2-of-4 quarantined: rate 0.5 > 0.25 once armed
+    reports = [mon.observe(rec(t, 1.0, quar=2)) for t in range(5)]
+    assert all(r.healthy for r in reports[:3])
+    assert "quarantine_rate" in reports[4].alarms
+
+
+def test_patience_counts_consecutive_alarms_only():
+    mon = HealthMonitor(HealthConfig(min_history=2, spike_mult=2.0,
+                                     patience=2, stop_on_nonfinite=False))
+    # spike, recover, spike, spike -> the streak resets in between and
+    # only the second consecutive pair trips the stop
+    reports = feed(mon, [1.0, 1.0, 5.0, 1.0, 5.0, 5.0])
+    stops = [r.should_stop for r in reports]
+    assert stops == [False, False, False, False, False, True]
+    assert reports[-1].consecutive_alarmed == 2
+    assert reports[-1].alarmed_rounds == 3
+
+
+def test_state_dict_roundtrip_resumes_mid_window():
+    """Split a record stream at an arbitrary cut: a fresh monitor loaded
+    from state_dict() must produce the exact same reports on the tail as
+    the uninterrupted monitor (no blind re-warm-up)."""
+    losses = [1.0, 1.1, 0.9, float("nan"), 1.0, 5.0, 1.0, 1.2, 6.0, 1.1]
+    cfg = HealthConfig(window=4, min_history=3, spike_mult=3.0,
+                       patience=3, stop_on_nonfinite=False)
+    full = HealthMonitor(cfg)
+    full_reports = feed(full, losses)
+    for cut in (1, 4, 7):
+        a = HealthMonitor(cfg)
+        feed(a, losses[:cut])
+        b = HealthMonitor(cfg)
+        b.load_state_dict(a.state_dict())
+        tail = [b.observe(rec(cut + i, lo))
+                for i, lo in enumerate(losses[cut:])]
+        for r_full, r_res in zip(full_reports[cut:], tail):
+            assert r_full == r_res, cut
+    assert full.state_dict() == b.state_dict()
+
+
+# ---------------- trainer integration ----------------
+
+NUM_CLIENTS, K = 8, 3
+
+
+def loss_fn(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(4, 3), jnp.float32),
+            "b": jnp.asarray(r.randn(3), jnp.float32)}
+
+
+def batch_fn(c, t):
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 4).astype(np.float32),
+             "y": r.randn(8, 3).astype(np.float32)}
+            for _ in range((c % 2) + 1)]
+
+
+def make_trainer(plan=None, *, rounds=6, **exec_kw):
+    kw = dict(clients_per_round=K, seed=7, eval_every=10 ** 9)
+    kw.update(exec_kw)
+    return FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                            ExecConfig(rounds=rounds, **kw),
+                            algo=AlgoConfig(name="feddpc", eta_l=0.05,
+                                            eta_g=0.1),
+                            fault_plan=plan)
+
+
+def test_trainer_stops_on_injected_nan():
+    """An unguarded NaN plan + ExecConfig(health=True): the run stops
+    the round the loss goes non-finite instead of training on poison."""
+    plan = FaultPlan.seeded(7, nan_rate=1.0, nan_rounds=(2,))
+    with make_trainer(plan, health=True) as tr:
+        recs = tr.run()
+    assert len(recs) < 6
+    rep = tr.health_report
+    assert rep is not None and rep.should_stop
+    assert "nonfinite_loss" in rep.alarms
+    assert not np.isfinite(recs[-1].train_loss)
+
+
+def test_trainer_stops_on_loss_spike_with_patience():
+    """A finite 50x delta explosion (guard off) must trip the spike
+    detector — and with patience=1 the run early-stops on it."""
+    plan = FaultPlan.seeded(3, explode_rate=1.0, explode_rounds=(4,),
+                            explode_magnitude=200.0)
+    with make_trainer(plan, rounds=8, health=True, health_min_history=3,
+                      health_spike_mult=3.0, health_patience=1) as tr:
+        recs = tr.run()
+    rep = tr.health_report
+    assert rep is not None and rep.should_stop, rep
+    assert "loss_spike" in rep.alarms or "nonfinite_loss" in rep.alarms
+    assert len(recs) < 8
+    assert rep.round == recs[-1].round
+
+
+def test_healthy_run_is_untouched_and_reports_healthy():
+    with make_trainer(None) as tr:
+        base = tr.run()
+        assert tr.health_report is None         # monitor off by default
+    with make_trainer(None, health=True) as tr:
+        recs = tr.run()
+        rep = tr.health_report
+    assert len(recs) == len(base) == 6
+    assert rep is not None and rep.healthy and not rep.should_stop
+    assert rep.alarmed_rounds == 0
+    # the monitor is a pure observer: losses are bitwise the plain run's
+    np.testing.assert_array_equal([r.train_loss for r in base],
+                                  [r.train_loss for r in recs])
+
+
+def test_health_state_resumes_bitwise():
+    """Detector state rides the checkpoint: the resumed run's monitor
+    ends bitwise-identical to the uninterrupted one's (same windows,
+    same counters), so a spike straddling the cut is still caught."""
+    kw = dict(health=True, health_window=4, health_min_history=2,
+              health_spike_mult=3.0, health_patience=2)
+    with make_trainer(None, **kw) as tr:
+        tr.run()
+        full_state = tr._health.state_dict()
+    with tempfile.TemporaryDirectory() as d:
+        with make_trainer(None, **kw) as tr:
+            for t in range(3):
+                tr.run_round(t)
+            tr.save(d)
+        tr2 = FederatedTrainer.resume(
+            d, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+            ExecConfig(rounds=6, clients_per_round=K, seed=7,
+                       eval_every=10 ** 9, **kw),
+            algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1))
+        assert tr2._health is not None
+        # the restored windows hold the pre-save rounds, not a blank
+        assert len(tr2._health.state_dict()["loss"]) > 0
+        with tr2:
+            tr2.run()
+    assert tr2._health.state_dict() == full_state
+
+
+def test_health_resume_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with make_trainer(None, health=True) as tr:
+            tr.run_round(0)
+            tr.save(d)
+        with pytest.raises(ValueError, match="health"):
+            FederatedTrainer.resume(
+                d, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                ExecConfig(rounds=6, clients_per_round=K, seed=7,
+                           eval_every=10 ** 9),
+                algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1))

@@ -1,10 +1,19 @@
-"""Local optimizers + schedules."""
+"""Local optimizers + schedules, and the server-optimizer layer
+(DESIGN.md §14): registry semantics, the fedadam/fedyogi moment math,
+cross-regime equivalence at the anchor cells, and bitwise moment-state
+checkpoint round-trips."""
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core.api import AlgoConfig, ExecConfig, FederatedTrainer
 from repro.optim.optimizers import (adamw, constant_schedule, cosine_schedule,
                                     get_optimizer, momentum, sgd)
+from repro.optim.server import (SERVER_OPTIMIZER_NAMES,
+                                make_server_optimizer)
 
 
 def _quad(params):
@@ -59,3 +68,201 @@ def test_cosine_schedule_shape():
     assert float(lr(5)) < float(lr(10))
     assert float(lr(100)) < 0.01
     assert float(constant_schedule(0.3)(50)) == np.float32(0.3)
+
+
+# ---- server-optimizer layer (DESIGN.md §14) ----
+
+NUM_CLIENTS, K, ROUNDS = 6, 2, 4
+
+
+def _sloss(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def _sparams(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(5, 3) * 0.4, jnp.float32),
+            "b": jnp.zeros((3,), jnp.float32)}
+
+
+def _sbatches(c, t):
+    r = np.random.RandomState(97 * c + t)
+    return [{"x": r.randn(4, 5).astype(np.float32),
+             "y": r.randn(4, 3).astype(np.float32)}
+            for _ in range((c % 2) + 1)]
+
+
+def _strain(rounds=ROUNDS, algo="feddpc", **exec_kw):
+    cfg = ExecConfig(rounds=rounds, clients_per_round=K, seed=11,
+                     eval_every=10 ** 9, prefetch=False, **exec_kw)
+    with FederatedTrainer(_sloss, _sparams(), NUM_CLIENTS, _sbatches, cfg,
+                          algo=AlgoConfig(name=algo, eta_l=0.05,
+                                          eta_g=0.1)) as tr:
+        tr.run()
+    return tr
+
+
+def _assert_trees_equal(a, b, ctx=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), ctx
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y),
+                              equal_nan=True), ctx
+
+
+def test_make_server_optimizer_registry():
+    assert set(SERVER_OPTIMIZER_NAMES) == {"sgd", "fedadam", "fedyogi"}
+    # the anchor: no optimizer object at all — nothing enters the jit
+    assert make_server_optimizer(None) is None
+    assert make_server_optimizer("sgd") is None
+    for name in ("fedadam", "fedyogi"):
+        opt = make_server_optimizer(name)
+        assert opt is not None and opt.name == name and opt.stateful
+        assert opt.config_dict() == {"name": name}
+    with pytest.raises(ValueError, match="unknown server optimizer"):
+        make_server_optimizer("nadam")
+
+
+def test_server_adaptive_math_matches_numpy():
+    """fedadam/fedyogi apply == the hand-rolled Reddi et al. update."""
+    params = {"w": jnp.asarray([1.0, -2.0, 0.5], jnp.float32)}
+    proposed = {"w": jnp.asarray([0.6, -1.7, 0.9], jnp.float32)}
+    lr, b1, b2, eps = 0.1, 0.9, 0.99, 1e-3
+    for name in ("fedadam", "fedyogi"):
+        opt = make_server_optimizer(name)
+        state = opt.init(params)
+        assert (np.asarray(state["m"]["w"]) == 0).all()
+        assert state["v"]["w"].dtype == jnp.float32
+        p = np.asarray(params["w"], np.float64).astype(np.float32)
+        m = v = np.zeros(3, np.float32)
+        new, state2 = params, state
+        for _ in range(3):
+            new, state2 = opt.apply(new, proposed, state2)
+            g = p - np.asarray(proposed["w"], np.float32)
+            m = b1 * m + (1 - b1) * g
+            if name == "fedadam":
+                v = b2 * v + (1 - b2) * g * g
+            else:
+                v = v - (1 - b2) * g * g * np.sign(v - g * g)
+            p = p - lr * m / (np.sqrt(v) + eps)
+            np.testing.assert_allclose(np.asarray(new["w"]), p,
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(state2["m"]["w"]), m,
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(state2["v"]["w"]), v,
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_server_sgd_explicit_is_bitwise_default():
+    """ExecConfig(server_opt="sgd") resolves to NO optimizer object, so
+    the run is bitwise-identical to the pre-layer default."""
+    base = _strain()
+    explicit = _strain(server_opt="sgd")
+    _assert_trees_equal(base.params, explicit.params, "params")
+    _assert_trees_equal(base.server_state, explicit.server_state, "state")
+    for rb, re_ in zip(base.history, explicit.history):
+        assert rb.train_loss == re_.train_loss
+    assert explicit._opt_state is None
+
+
+def test_server_opt_changes_trajectory():
+    base = _strain()
+    for name in ("fedadam", "fedyogi"):
+        tr = _strain(server_opt=name)
+        assert not np.allclose(np.asarray(tr.params["w"]),
+                               np.asarray(base.params["w"])), name
+
+
+def test_server_opt_serial_vectorized_async_anchor_allclose():
+    """The adaptive optimizers consume the POST-projection aggregate, so
+    every execution path applies the identical preconditioned step: the
+    vectorized round and the buffered-async anchor cell (B=K,
+    concurrency 1, DeterministicRuntime) match the serial reference."""
+    for name in ("fedadam", "fedyogi"):
+        serial = _strain(server_opt=name, vectorize=False)
+        vec = _strain(server_opt=name)
+        anchor = _strain(server_opt=name, async_buffer=True)
+        for other in (vec, anchor):
+            np.testing.assert_allclose(
+                np.asarray(other.params["w"]),
+                np.asarray(serial.params["w"]), rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(
+                np.asarray(other._opt_state["m"]["w"]),
+                np.asarray(serial._opt_state["m"]["w"]),
+                rtol=1e-5, atol=1e-6)
+            for rs, ro in zip(serial.history, other.history):
+                assert np.isclose(rs.train_loss, ro.train_loss,
+                                  rtol=1e-4, atol=1e-6), name
+
+
+def test_server_opt_state_bitwise_resume():
+    """Moment state round-trips bitwise through save/resume: the resumed
+    run is indistinguishable from the uninterrupted one."""
+    full = _strain(rounds=ROUNDS, server_opt="fedadam")
+    with tempfile.TemporaryDirectory() as d:
+        cfg = ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=11,
+                         eval_every=10 ** 9, prefetch=False,
+                         server_opt="fedadam")
+        algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+        with FederatedTrainer(_sloss, _sparams(), NUM_CLIENTS, _sbatches,
+                              cfg, algo=algo) as tr:
+            tr.run_round(0)
+            tr.run_round(1)
+            tr.save(d)
+        tr2 = FederatedTrainer.resume(d, _sloss, _sparams(), NUM_CLIENTS,
+                                      _sbatches, cfg, algo=algo)
+        assert tr2.start_round == 2
+        with tr2:
+            tr2.run()
+    _assert_trees_equal(full.params, tr2.params, "params")
+    _assert_trees_equal(full._opt_state, tr2._opt_state, "opt_state")
+
+
+def test_server_opt_async_midbuffer_resume_bitwise():
+    """Saving with waves in flight (concurrency 2) must carry the
+    moment state of the last FOLD: the resumed trajectory replays the
+    uninterrupted one bitwise, in-flight entries included."""
+    kw = dict(server_opt="fedyogi", async_buffer=True,
+              async_concurrency=2, buffer_size=2)
+    full = _strain(rounds=6, **kw)
+    with tempfile.TemporaryDirectory() as d:
+        cfg = ExecConfig(rounds=6, clients_per_round=K, seed=11,
+                         eval_every=10 ** 9, prefetch=False, **kw)
+        algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+        with FederatedTrainer(_sloss, _sparams(), NUM_CLIENTS, _sbatches,
+                              cfg, algo=algo) as tr:
+            for t in range(3):
+                tr.run_round(t)
+            tr.save(d)
+        tr2 = FederatedTrainer.resume(d, _sloss, _sparams(), NUM_CLIENTS,
+                                      _sbatches, cfg, algo=algo)
+        with tr2:
+            tr2.run()
+    _assert_trees_equal(full.params, tr2.params, "params")
+    _assert_trees_equal(full._opt_state, tr2._opt_state, "opt_state")
+    # resume restores the pre-save history, so the full trajectories align
+    assert len(full.history) == len(tr2.history)
+    for rf, rr in zip(full.history, tr2.history):
+        assert rf.train_loss == rr.train_loss, (rf.round, rr.round)
+
+
+def test_server_opt_resume_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        algo = AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1)
+
+        def cfg(**kw):
+            return ExecConfig(rounds=2, clients_per_round=K, seed=11,
+                              eval_every=10 ** 9, prefetch=False, **kw)
+
+        with FederatedTrainer(_sloss, _sparams(), NUM_CLIENTS, _sbatches,
+                              cfg(server_opt="fedadam"), algo=algo) as tr:
+            tr.run_round(0)
+            tr.save(d)
+        with pytest.raises(ValueError, match="server optimizer"):
+            FederatedTrainer.resume(d, _sloss, _sparams(), NUM_CLIENTS,
+                                    _sbatches, cfg(server_opt="fedyogi"),
+                                    algo=algo)
+        with pytest.raises(ValueError, match="server optimizer"):
+            FederatedTrainer.resume(d, _sloss, _sparams(), NUM_CLIENTS,
+                                    _sbatches, cfg(), algo=algo)

@@ -86,6 +86,15 @@ FAST_SLICE = [
     ("fedavg", "weighted", "codec_int8", False),
     ("feddpc", "uniform", "codec_int8_2d", True),
     ("feddpc", "uniform", "codec_int8_async", True),
+    # adaptive server optimizers (DESIGN.md §14): every optimizer under
+    # every execution shape — serial anchors live in the reference cache,
+    # so each of these checks vectorized/2-axis/async == same-opt serial
+    ("feddpc", "uniform", "server_fedadam", True),
+    ("feddpc", "uniform", "server_fedadam_2d", True),
+    ("feddpc", "uniform", "server_fedadam_async", True),
+    ("fedavg", "uniform", "server_fedyogi", True),
+    ("feddpc", "markov", "server_fedyogi_2d", True),
+    ("feddpc", "uniform", "server_fedyogi_async", False),
 ]
 
 
@@ -121,6 +130,20 @@ def test_matrix_axes_come_from_the_registries():
     assert EXEC_REGIMES["codec_int8"]["codec"] == "int8"
     assert EXEC_REGIMES["codec_int8_2d"]["shard_model"] > 1
     assert EXEC_REGIMES["codec_int8_async"]["async_buffer"] is True
+    # adaptive server optimizers enrolled (DESIGN.md §14) at the
+    # acceptance shapes: each optimizer serial, on the 2-axis mesh, and
+    # through the buffered-async engine
+    assert {"server_fedadam", "server_fedadam_2d", "server_fedadam_async",
+            "server_fedyogi", "server_fedyogi_2d",
+            "server_fedyogi_async"} <= set(REGIMES)
+    assert EXEC_REGIMES["server_fedadam"]["server_opt"] == "fedadam"
+    assert EXEC_REGIMES["server_fedyogi"]["server_opt"] == "fedyogi"
+    assert EXEC_REGIMES["server_fedadam_2d"]["shard_model"] > 1
+    assert EXEC_REGIMES["server_fedyogi_2d"]["shard_model"] > 1
+    assert EXEC_REGIMES["server_fedadam_async"]["async_buffer"] is True
+    assert EXEC_REGIMES["server_fedyogi_async"]["async_buffer"] is True
+    from repro.optim.server import SERVER_OPTIMIZER_NAMES
+    assert set(SERVER_OPTIMIZER_NAMES) == {"sgd", "fedadam", "fedyogi"}
 
 
 def test_regime_matrix_fast_slice():
