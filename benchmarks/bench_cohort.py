@@ -41,8 +41,32 @@ vs identity; the acceptance bools (``int8_halves_uplink``,
 ``int8_shrinks_stage_bytes``) assert the §13 criteria on the receipt
 itself so the bench gate holds them exactly.
 
+``--multihost`` runs the HIERARCHICAL-AGGREGATION receipt (DESIGN.md
+§15): the same sharded round flat (server folds K raw deltas) vs
+hierarchical (E edge aggregators fold their cohort slices into partial
+summaries; the server consumes E), including the Pallas-epilogue and
+int8-dequant edge folds -> BENCH_multihost.json. Per mode it records
+wall-clock AND the split uplink (``comm_bytes_edge_up`` /
+``comm_bytes_server_up``) plus ``server_fanin`` — the headline is the
+K -> E server fan-in reduction. With ``--processes N`` the whole bench
+re-executes as an N-process jax.distributed job through
+launch/distributed.spawn_local (single machine, 127.0.0.1 coordinator —
+the offline-CI stand-in for a real multi-host launch); each process
+stages only its local client shard and acts as one edge, and process 0
+writes the receipt.
+
+``--block-sweep`` runs the batched-epilogue BLOCK receipt instead: the
+(rows, 128)-tile row-block size x cohort size K grid of
+kernel.batched_epilogue (K·rows·128 f32 must stay VMEM-resident, so
+the viable row block shrinks as K grows — the crossover this receipt
+documents) -> BENCH_blocks.json. ``vmem_block_bytes`` per cell is the
+exact-gated shape arithmetic; ``*_ms`` keys are wall-clock (interpret
+mode off-TPU: a correctness/shape artifact, not kernel perf).
+
 ``--devices N`` must be handled BEFORE jax initializes (the device count
-locks at first init), hence the argv scan at the top of this module.
+locks at first init), hence the argv scan at the top of this module
+(and the ``--processes`` spawn, which must fork before this process
+touches a backend).
 """
 from __future__ import annotations
 
@@ -67,7 +91,53 @@ def _maybe_force_devices(argv):
     return int(n) if n else None
 
 
+def _maybe_spawn_processes(argv):
+    """--processes N: re-exec this bench as an N-process jax.distributed
+    job (launch/distributed.spawn_local — 127.0.0.1 coordinator, no
+    external network). Returns the child results in the PARENT (which
+    must exit without touching jax); returns None in the children
+    (REPRO_DIST_PID set — they fall through, join the job in main())
+    and in single-process runs. ``--devices`` means the TOTAL device
+    count: it is stripped from the child argv and split evenly into
+    per-process XLA host-device forces by spawn_local."""
+    n = None
+    for i, a in enumerate(argv):
+        if a == "--processes" and i + 1 < len(argv):
+            n = argv[i + 1]
+        elif a.startswith("--processes="):
+            n = a.split("=", 1)[1]
+    n = int(n) if n else 0
+    if n <= 1 or os.environ.get("REPRO_DIST_PID"):
+        return None
+    total = None
+    child, skip = [], False
+    for a in argv[1:]:
+        if skip:
+            total = int(a)
+            skip = False
+            continue
+        if a == "--devices":
+            skip = True
+            continue
+        if a.startswith("--devices="):
+            total = int(a.split("=", 1)[1])
+            continue
+        child.append(a)
+    from repro.launch.distributed import spawn_local
+    return spawn_local(
+        [sys.executable, os.path.abspath(argv[0]), *child], n,
+        devices_per_process=max(1, (total or n) // n),
+        timeout_s=1800.0)
+
+
 _maybe_force_devices(sys.argv)
+_spawned = _maybe_spawn_processes(sys.argv)
+if _spawned is not None:
+    # parent of a --processes job: the children did the work (process 0
+    # wrote the receipt); surface their stdout and stop here
+    for _i, (_rc, _out, _err) in enumerate(_spawned):
+        sys.stdout.write(f"--- process {_i} ---\n{_out or ''}")
+    sys.exit(0)
 
 import jax                                              # noqa: E402
 import jax.numpy as jnp                                 # noqa: E402
@@ -87,6 +157,10 @@ DEFAULT_OUT_INGEST = os.path.join(_ROOT, "BENCH_ingest.json")
 DEFAULT_OUT_ASYNC = os.path.join(_ROOT, "BENCH_async.json")
 # --codec-sweep (delta codec x error feedback) receipt
 DEFAULT_OUT_CODEC = os.path.join(_ROOT, "BENCH_codec.json")
+# --multihost (flat vs hierarchical edge aggregation) receipt
+DEFAULT_OUT_MULTIHOST = os.path.join(_ROOT, "BENCH_multihost.json")
+# --block-sweep (batched-epilogue row block x K) receipt
+DEFAULT_OUT_BLOCKS = os.path.join(_ROOT, "BENCH_blocks.json")
 
 # mode name -> config overrides (use_kernel routes into the feddpc hyper,
 # the rest are ExecConfig fields); the sweep skips nothing silently — a
@@ -490,6 +564,207 @@ def run_codec_sweep(clients: int = 16, rounds: int = 10, warmup: int = 2,
     return payload
 
 
+def run_multihost(clients: int = 16, rounds: int = 10, warmup: int = 2,
+                  batches_per_client: int = 4, batch: int = None,
+                  dim: int = None, hidden: int = None, classes: int = 10,
+                  algorithm: str = "feddpc", out: str = None) -> Dict:
+    """Hierarchical edge-aggregation receipt (DESIGN.md §15): the same
+    client-sharded round flat (the server's fold consumes all K client
+    deltas) vs hierarchical (E edge aggregators — one per host in a
+    --processes job — each fold their local cohort slice into one
+    partial summary; the server consumes E), plus the hierarchical fold
+    through the Pallas epilogue and the int8 dequant path.
+
+    Wall-clock keys gate loosely as always; the comm split is exact
+    shape arithmetic, gated exactly: every mode's clients ship
+    ``comm_bytes_up``; flat rounds report edge_up=0 / server_up=up,
+    hierarchical rounds pay ``comm_bytes_up`` on the client->edge hop
+    and E raw-f32 summaries on the edge->server hop. ``server_fanin``
+    (K flat, E hierarchical) is the headline reduction."""
+    batch = 8 if batch is None else batch
+    dim = 256 if dim is None else dim
+    hidden = 512 if hidden is None else hidden
+    out = out or DEFAULT_OUT_MULTIHOST
+    nproc = jax.process_count()
+    edges = nproc if nproc > 1 else 2
+    params, loss_fn, batch_fn = build_task(
+        clients, batches_per_client, batch, dim, hidden, classes)
+    n_params = sum(int(np.prod(np.shape(x))) for x in jax.tree.leaves(params))
+    modes = [
+        ("flat", dict(shard_clients=True, prefetch=True)),
+        ("hier", dict(shard_clients=True, prefetch=True, edges=edges)),
+        ("hier+kernel", dict(shard_clients=True, prefetch=True,
+                             edges=edges, use_kernel=True)),
+        ("hier+int8", dict(shard_clients=True, prefetch=True,
+                           edges=edges, codec="int8")),
+    ]
+    results = {}
+    for mode, overrides in modes:
+        try:
+            exec_kw = dict(overrides)
+            hyper = default_hyper(algorithm,
+                                  use_kernel=exec_kw.pop("use_kernel",
+                                                         False))
+            cfg = ExecConfig(rounds=warmup + rounds,
+                             clients_per_round=clients, seed=0,
+                             eval_every=10 ** 9, **exec_kw)
+            algo = AlgoConfig(name=algorithm, eta_l=0.05, eta_g=0.1,
+                              hyper=hyper)
+            with FederatedTrainer(loss_fn, params, clients, batch_fn,
+                                  cfg, None, algo=algo) as tr:
+                for t in range(warmup):               # compile warm
+                    tr.run_round(t)
+                recs = [tr.run_round(t)
+                        for t in range(warmup, warmup + rounds)]
+            times = np.asarray([r.seconds for r in recs])
+            results[mode] = {
+                "mean_s": float(times.mean()),
+                "p50_s": float(np.median(times)),
+                "min_s": float(times.min()),
+                "ingest_mean_s": float(np.mean(
+                    [r.ingest_seconds for r in recs])),
+                "rounds": int(rounds),
+                "server_fanin": int(edges if "edges" in overrides
+                                    else clients),
+                "comm_bytes_up": int(recs[-1].comm_bytes_up),
+                "comm_bytes_edge_up": int(recs[-1].comm_bytes_edge_up),
+                "comm_bytes_server_up": int(recs[-1].comm_bytes_server_up),
+                "train_loss_curve": [float(r.train_loss) for r in recs],
+            }
+            r = results[mode]
+            print(f"{mode:12s} mean {r['mean_s']*1e3:9.3f} ms"
+                  f"  fan-in {r['server_fanin']:3d}"
+                  f"  server uplink {r['comm_bytes_server_up']:>12d} B",
+                  flush=True)
+        except Exception as e:                # record, never skip silently
+            results[mode] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"{mode:12s} FAILED: {results[mode]['error']}",
+                  flush=True)
+    payload = {
+        "bench": "cohort_multihost_hier",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "processes": int(nproc),
+        "edges": int(edges),
+        "algorithm": algorithm,
+        "clients_per_round": clients,
+        "batches_per_client": batches_per_client,
+        "batch": batch, "dim": dim, "hidden": hidden,
+        "model_params": n_params,
+        "modes": results,
+        "note": ("comm_bytes_edge_up/server_up split the uplink across "
+                 "the two hierarchy hops (exact shape arithmetic); "
+                 "server_fanin is what the server's fold consumes per "
+                 "round — K raw deltas flat, E partial summaries "
+                 "hierarchical (DESIGN.md §15)"),
+    }
+    flat, hier = results.get("flat", {}), results.get("hier", {})
+    if flat.get("server_fanin") and hier.get("server_fanin"):
+        payload["server_fanin_flat"] = flat["server_fanin"]
+        payload["server_fanin_hier"] = hier["server_fanin"]
+        payload["server_fanin_reduced"] = \
+            hier["server_fanin"] < flat["server_fanin"]
+    if flat.get("comm_bytes_server_up") and \
+            hier.get("comm_bytes_server_up"):
+        payload["server_uplink_reduction_hier_vs_flat"] = \
+            flat["comm_bytes_server_up"] / hier["comm_bytes_server_up"]
+    if jax.process_index() == 0:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        for key in ("server_fanin_flat", "server_fanin_hier",
+                    "server_fanin_reduced",
+                    "server_uplink_reduction_hier_vs_flat"):
+            if key in payload:
+                print(f"{key}: {payload[key]}")
+        print(f"-> {out}")
+    return payload
+
+
+def run_block_sweep(rounds: int = 10, warmup: int = 2, out: str = None,
+                    classes: int = 10) -> Dict:
+    """Batched-epilogue block receipt: kernel.batched_epilogue keeps all
+    K clients' (rows, 128) tiles VMEM-resident at once, so the viable
+    row block shrinks as K grows (default DEFAULT_ROWS/K, floor 8).
+    This sweep times the row-block x K grid directly on one synthetic
+    1M-element leaf — the crossover artifact behind that default.
+    Off-TPU the kernel runs in interpret mode: the *_ms keys are then a
+    correctness/shape artifact (gated loosely), while vmem_block_bytes
+    is the exact VMEM footprint arithmetic."""
+    import time as _time
+
+    from repro.kernels.feddpc_project import kernel as KR
+
+    out = out or DEFAULT_OUT_BLOCKS
+    interpret = jax.default_backend() != "tpu"
+    m_rows = 2048                       # 2048 x 128 f32 leaf = 1 MiB
+    cells = {}
+    for k in (4, 16, 64):
+        r = np.random.RandomState(k)
+        d3 = jnp.asarray(r.randn(k, m_rows, KR.LANE) * 1e-2, jnp.float32)
+        p2 = jnp.asarray(r.randn(m_rows, KR.LANE) * 1e-2, jnp.float32)
+        w2 = jnp.asarray(r.randn(m_rows, KR.LANE), jnp.float32)
+        coefs = jnp.asarray(r.rand(k), jnp.float32)
+        scales = jnp.asarray(1.0 + r.rand(k), jnp.float32)
+        ref = None
+        for rows in (8, 64, 512):
+            label = f"k{k}_rows{rows}"
+            try:
+                def step():
+                    return KR.batched_epilogue(d3, p2, w2, coefs, scales,
+                                               0.1, rows=rows,
+                                               interpret=interpret)
+                w_out, dt = step()                       # compile + warm
+                jax.block_until_ready((w_out, dt))
+                if ref is None:
+                    ref = (np.asarray(w_out), np.asarray(dt))
+                else:                 # block size must not change math
+                    np.testing.assert_allclose(np.asarray(w_out), ref[0],
+                                               rtol=1e-5, atol=1e-6)
+                    np.testing.assert_allclose(np.asarray(dt), ref[1],
+                                               rtol=1e-5, atol=1e-6)
+                times = []
+                for _ in range(max(1, warmup - 1)):
+                    jax.block_until_ready(step())
+                for _ in range(rounds):
+                    t0 = _time.perf_counter()
+                    jax.block_until_ready(step())
+                    times.append(_time.perf_counter() - t0)
+                times = np.asarray(times)
+                cells[label] = {
+                    "mean_ms": float(times.mean() * 1e3),
+                    "min_ms": float(times.min() * 1e3),
+                    "rounds": int(rounds),
+                    # K tiles of (rows, 128) f32 resident at once
+                    "vmem_block_bytes": int(k * rows * KR.LANE * 4),
+                    "block_consistent": True,
+                }
+                c = cells[label]
+                print(f"{label:14s} mean {c['mean_ms']:9.3f} ms"
+                      f"  VMEM block {c['vmem_block_bytes']:>9d} B")
+            except Exception as e:            # record, never skip silently
+                cells[label] = {"error": f"{type(e).__name__}: {e}"}
+                print(f"{label:14s} FAILED: {cells[label]['error']}")
+    payload = {
+        "bench": "epilogue_block_sweep",
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "interpret": bool(interpret),
+        "lane": int(KR.LANE),
+        "leaf_elems": int(m_rows * KR.LANE),
+        "default_rows": int(KR.DEFAULT_ROWS),
+        "modes": cells,
+        "note": ("K (rows, 128) f32 tiles stay VMEM-resident per grid "
+                 "step, so vmem_block_bytes = K*rows*128*4 is the "
+                 "footprint the DEFAULT_ROWS/K row-block default keeps "
+                 "bounded; block_consistent asserts the row block never "
+                 "changes the math (allclose across the sweep)"),
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"-> {out}")
+    return payload
+
+
 def run(clients: int = 16, rounds: int = 10, warmup: int = 2,
         batches_per_client: int = 4, batch: int = 8, dim: int = 512,
         hidden: int = 2048, classes: int = 10, algorithm: str = "feddpc",
@@ -589,6 +864,21 @@ def main(argv=None):
                          "{identity, bf16, int8, int8+ef} uplink/stage "
                          "byte accounting -> BENCH_codec.json "
                          "(DESIGN.md §13)")
+    ap.add_argument("--multihost", action="store_true",
+                    help="run the hierarchical edge-aggregation receipt "
+                         "instead: flat vs E-edge two-level fold with "
+                         "the split uplink accounting -> "
+                         "BENCH_multihost.json (DESIGN.md §15)")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="re-exec as an N-process jax.distributed job "
+                         "via launch/distributed.spawn_local (handled "
+                         "at module import, like --devices, which then "
+                         "means the TOTAL device count split across "
+                         "processes); process 0 writes the receipt")
+    ap.add_argument("--block-sweep", action="store_true",
+                    help="run the batched-epilogue block receipt "
+                         "instead: row-block x K grid with exact VMEM "
+                         "footprint arithmetic -> BENCH_blocks.json")
     ap.add_argument("--out", default=None,
                     help="defaults to BENCH_cohort_sharded.json, "
                          "BENCH_cohort_2axis.json with --model-shards, "
@@ -596,7 +886,20 @@ def main(argv=None):
                          "BENCH_async.json with --async-sweep, or "
                          "BENCH_codec.json with --codec-sweep")
     a = ap.parse_args(argv)
-    if a.codec_sweep:
+    # multi-process children (spawned at module import by --processes):
+    # join the jax.distributed job before the first device query; a
+    # no-op in single-process runs
+    from repro.launch.distributed import maybe_initialize
+    maybe_initialize()
+    if a.block_sweep:
+        run_block_sweep(rounds=a.rounds, warmup=a.warmup, out=a.out)
+    elif a.multihost:
+        run_multihost(clients=a.clients, rounds=a.rounds,
+                      warmup=a.warmup,
+                      batches_per_client=a.batches_per_client,
+                      batch=a.batch, dim=a.dim, hidden=a.hidden,
+                      algorithm=a.algorithm, out=a.out)
+    elif a.codec_sweep:
         run_codec_sweep(clients=a.clients, rounds=a.rounds,
                         warmup=a.warmup,
                         batches_per_client=a.batches_per_client,

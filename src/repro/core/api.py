@@ -69,6 +69,8 @@ and the framework's LM architectures both plug in through the same API.
 """
 from __future__ import annotations
 
+import itertools
+import os
 import threading
 import time
 import warnings
@@ -87,6 +89,11 @@ from repro.ingest import (CohortIngestPipeline, CohortPlacer, DataSource,
                           as_data_source, stack_batches)
 
 PyTree = Any
+
+# deterministic per-process trainer ordinal for multi-process KV-store
+# namespacing (every process constructs trainers in the same SPMD order,
+# so the ordinal agrees across hosts where id()/PIDs would not)
+_MP_SEQ = itertools.count()
 
 
 @dataclass
@@ -209,6 +216,20 @@ class ExecConfig:
     health_min_history: int = 8
     health_spike_mult: float = 3.0
     health_patience: Optional[int] = None
+    # stream every health verdict to a JSONL tracker file (repro.health.
+    # JsonlHealthSink — the wandb-style pluggable sink); None = receipts
+    # only. Multi-process runs write it on process 0 only.
+    health_log: Optional[str] = None
+    # ---- hierarchical edge aggregation (DESIGN.md §15) ----
+    # two-level server fold: the padded cohort splits into `edges` equal
+    # contiguous row groups ("edge aggregators"), each folds its slice
+    # into one partial summary, and the server combines the E summaries
+    # instead of K raw deltas — the round shape of a multi-host cohort,
+    # where each edge is one host's local clients and the server's
+    # fan-in drops from K deltas to E summaries. None / 1 = flat fold.
+    # Must divide the PADDED cohort size; serial-reference equivalent
+    # by construction (tests/test_regime_matrix.py `multihost` cell).
+    edges: Optional[int] = None
     # bounded thread pool for the per-image file decode of disk-backed
     # sources (ingest/readers.py) — a driver hint like batch_size: the
     # trainer never reads it, source constructors do. 0 = serial decode.
@@ -320,6 +341,12 @@ EXEC_REGIMES = {
                           "shard_model": 4},
     "server_fedadam_async": {"server_opt": "fedadam", "async_buffer": True},
     "server_fedyogi_async": {"server_opt": "fedyogi", "async_buffer": True},
+    # hierarchical edge aggregation (DESIGN.md §15): the two-level fold
+    # on the 8-device harness (the padded cohort splits into 2 edges)
+    # must reproduce the flat serial fold — the single-process anchor of
+    # the multi-process cohort; the real 2-process cell runs out of
+    # process through tests/_multihost_worker.py (spawn_local)
+    "multihost": {"shard_clients": True, "edges": 2},
 }
 
 
@@ -358,6 +385,15 @@ class RoundRecord:
     # bytes with no codec, so compression wins are measured, not
     # asserted; kept OUT of diagnostics for the same matrix reason
     comm_bytes_up: int = 0
+    # hierarchical split of the uplink (DESIGN.md §15): client->edge
+    # bytes (the per-client deltas, paid to the nearest aggregator) vs
+    # edge->server bytes (live edges x one raw-f32 params-shaped partial
+    # summary each). Flat rounds report edge_up=0 and server_up=
+    # comm_bytes_up, so edge_up + server_up is comparable across round
+    # shapes and the K->E server fan-in reduction is measurable.
+    comm_bytes_edge_up: int = 0
+    comm_bytes_server_up: int = 0
+    edge_dropped: int = 0          # edge summaries lost to process faults
 
 
 @dataclass
@@ -421,7 +457,7 @@ class FederatedTrainer:
                  eval_fn: Optional[Callable[[PyTree], float]] = None, *,
                  algo: Optional[AlgoConfig] = None,
                  sampler: Optional[ClientSampler] = None,
-                 runtime=None, fault_plan=None):
+                 runtime=None, fault_plan=None, health_sink=None):
         algo_cfg, exec_cfg = _coerce_cfg(cfg, algo)
         if (runtime is not None and not exec_cfg.async_buffer
                 and exec_cfg.round_deadline is None):
@@ -449,6 +485,39 @@ class FederatedTrainer:
             UniformSampler(num_clients, exec_cfg.clients_per_round)
         self.algo: ServerAlgo = make_algorithm(algo_cfg.name, algo_cfg.hyper)
         self.server_state = self.algo.init(self.params, num_clients)
+        # ---- multi-process cohort execution (DESIGN.md §15) ----
+        # jax.distributed (launch/distributed.maybe_initialize) must have
+        # run BEFORE construction; the device queries above already bound
+        # the backend, so process_count() is final here. shard_clients is
+        # the mode switch: with it the cohort mesh spans every process
+        # (each host stages its local client slice); without it the
+        # trainer stays PROCESS-LOCAL (default device, no cross-process
+        # traffic) — which is how a worker computes its in-job serial
+        # reference.
+        self._nprocs = jax.process_count()
+        self._mp = self._nprocs > 1 and exec_cfg.shard_clients
+        self._mp_seq = next(_MP_SEQ) if self._mp else 0
+        self._save_seq = 0
+        if self._mp:
+            if not exec_cfg.vectorize:
+                raise ValueError(
+                    "multi-process execution drives the fused cohort "
+                    "round; it cannot combine with vectorize=False")
+            if exec_cfg.shard_model > 1:
+                raise ValueError(
+                    "multi-process model sharding is not supported: the "
+                    "clients axis is the process-spanning one "
+                    "(DESIGN.md §15)")
+            if exec_cfg.async_buffer:
+                raise ValueError(
+                    "the buffered-async engine is single-process; "
+                    "multi-process runs use the synchronous cohort round")
+        elif self._nprocs > 1 and exec_cfg.shard_model > 1:
+            raise ValueError(
+                "shard_model without shard_clients would build a "
+                "process-spanning model mesh — in a multi-process job "
+                "set shard_clients=True (cohort mode) or leave both off "
+                "(process-local trainer)")
         # ---- chaos hardening (DESIGN.md §12) ----
         self.fault_plan = fault_plan
         self._inject_deltas = (fault_plan is not None
@@ -506,14 +575,30 @@ class FederatedTrainer:
         self._opt_shardings = None
         # ---- run-health monitor (repro.health, DESIGN.md §14) ----
         self._health = None
+        if ((exec_cfg.health_log or health_sink is not None)
+                and not exec_cfg.health):
+            raise ValueError(
+                "health_log / health_sink stream the run-health "
+                "monitor's verdicts — set ExecConfig(health=True) too")
+        if exec_cfg.health_log and health_sink is not None:
+            raise ValueError("pass either ExecConfig.health_log or "
+                             "health_sink=..., not both")
         if exec_cfg.health:
-            from repro.health.monitor import HealthConfig, HealthMonitor
+            from repro.health.monitor import (HealthConfig, HealthMonitor,
+                                              JsonlHealthSink)
+            sink = health_sink
+            if sink is None and exec_cfg.health_log:
+                # one tracker file per RUN: process 0 only — every
+                # process observes identical replicated records, so the
+                # non-writers' monitors run sink-less
+                if not self._mp or jax.process_index() == 0:
+                    sink = JsonlHealthSink(exec_cfg.health_log)
             self._health = HealthMonitor(HealthConfig(
                 window=exec_cfg.health_window,
                 min_history=exec_cfg.health_min_history,
                 spike_mult=exec_cfg.health_spike_mult,
                 patience=exec_cfg.health_patience,
-                clients_per_round=exec_cfg.clients_per_round))
+                clients_per_round=exec_cfg.clients_per_round), sink=sink)
         # sync engines mask timed-out clients out of the round; the async
         # engine instead stops collecting arrivals at the deadline (the
         # partial-buffer fold), so only the sync paths take the mask input
@@ -528,6 +613,32 @@ class FederatedTrainer:
         k = exec_cfg.clients_per_round
         ndev = 1 if self.mesh is None else int(self.mesh.devices.shape[0])
         self._pad_to = -(-k // ndev) * ndev
+        # ---- hierarchical edge aggregation (DESIGN.md §15) ----
+        self._edges = (int(exec_cfg.edges)
+                       if (exec_cfg.edges or 0) > 1 else None)
+        if self._edges is not None:
+            if exec_cfg.async_buffer:
+                raise ValueError(
+                    "edges reshapes the synchronous server fold; it "
+                    "cannot combine with async_buffer")
+            if self._pad_to % self._edges:
+                raise ValueError(
+                    f"edges={self._edges} must divide the padded cohort "
+                    f"size {self._pad_to} (clients_per_round="
+                    f"{k} padded to the client axis)")
+        # bytes of ONE edge's partial summary on the edge->server uplink:
+        # a raw-f32 params-shaped aggregate (comm accounting for
+        # RoundRecord.comm_bytes_server_up)
+        self._summary_bytes_up = int(sum(
+            int(np.prod(np.shape(leaf))) * 4
+            for leaf in jax.tree_util.tree_leaves(self.params)))
+        # process-loss faults surface as lost EDGE summaries: the server
+        # folds the surviving E-1 through the SAME live-mask input the
+        # round-deadline path compiles (core/faults.EdgeDrop)
+        self._edge_faults = (fault_plan is not None
+                             and fault_plan.injects_edges
+                             and self._edges is not None)
+        self._live_mask_input = self._deadline_mask or self._edge_faults
         # cohort shardings are built ONCE and shared by the round's jit,
         # the initial placement, and restore()'s re-placement
         self._round_shardings = None
@@ -545,8 +656,16 @@ class FederatedTrainer:
         # 5-in/4-out sharding pair stays untouched because _placements()
         # and the ingest placer unpack it by position.
         round_shardings = self._round_shardings
+        if round_shardings is not None and self._mp:
+            # multi-process: the (K,) losses leave the program REPLICATED
+            # (a tiny gloo allgather) so every host reads them without an
+            # eager cross-process op; inputs keep the base layout
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            outs_mp = list(round_shardings[1])
+            outs_mp[2] = NamedSharding(self.mesh, P())
+            round_shardings = (round_shardings[0], tuple(outs_mp))
         if round_shardings is not None and (
-                self._inject_deltas or self._deadline_mask or self._guard
+                self._inject_deltas or self._live_mask_input or self._guard
                 or self._codec_stochastic or self._codec_ef
                 or self._server_opt is not None):
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -556,11 +675,13 @@ class FederatedTrainer:
             outs = list(round_shardings[1])
             if self._inject_deltas:
                 ins.append(cli)              # fault_codes (K,)
-            if self._deadline_mask:
+            if self._live_mask_input:
                 ins.append(cli)              # live_mask (K,)
             if self._guard is not None:
                 ins.append(rep)              # guard_thresh scalar
-                outs.append(cli)             # guard_stats (K,) prefix
+                # guard stats come back to the host on every process in a
+                # multi-process run: replicate them there
+                outs.append(rep if self._mp else cli)
             if self._codec_stochastic:
                 ins.append(rep)              # per-round PRNG key
             if self._codec_ef:
@@ -597,23 +718,35 @@ class FederatedTrainer:
             guard=self._guard is not None,
             guard_cfg=None if self._guard is None else self._guard.config,
             inject_faults=self._inject_deltas,
-            deadline_mask=self._deadline_mask,
+            deadline_mask=self._live_mask_input,
             fault_magnitude=(fault_plan.explode_magnitude
                              if fault_plan is not None else 1e12),
             codec=self._codec, codec_ef=self._codec_ef,
-            server_opt=self._server_opt)
+            server_opt=self._server_opt, edges=self._edges)
         if self.mesh is not None:
             # pre-place so the first round's donation matches: replicated
             # on the 1-D client mesh, per-leaf model-sharded on a
-            # two-axis mesh
+            # two-axis mesh. A process-spanning mesh is never fully
+            # addressable, so placement routes through put_global (per-
+            # host shard assembly) instead of a plain device_put.
             p_sh, s_sh = self._placements()
-            self.params = jax.device_put(self.params, p_sh)
-            self.server_state = jax.device_put(self.server_state, s_sh)
-            if self._ef is not None:
-                self._ef = jax.device_put(self._ef, p_sh)
-            if self._opt_state is not None:
-                self._opt_state = jax.device_put(self._opt_state,
-                                                 self._opt_shardings)
+            if self._mp:
+                self.params = self._put_replicated(self.params, p_sh)
+                self.server_state = self._put_replicated(
+                    self.server_state, s_sh)
+                if self._ef is not None:
+                    self._ef = self._put_replicated(self._ef, p_sh)
+                if self._opt_state is not None:
+                    self._opt_state = self._put_replicated(
+                        self._opt_state, p_sh)
+            else:
+                self.params = jax.device_put(self.params, p_sh)
+                self.server_state = jax.device_put(self.server_state, s_sh)
+                if self._ef is not None:
+                    self._ef = jax.device_put(self._ef, p_sh)
+                if self._opt_state is not None:
+                    self._opt_state = jax.device_put(self._opt_state,
+                                                     self._opt_shardings)
         # serial reference path (exec.vectorize=False): per-client dispatch
         from repro.core.baselines import client_kwargs
         self.local_update = client_mod.make_local_update(
@@ -623,7 +756,8 @@ class FederatedTrainer:
         # passes the live/quarantine fold exactly like the fused round
         self._server_step = jax.jit(
             lambda st, p, d, ids, cm: self.algo.step(
-                st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm))
+                st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm,
+                edges=self._edges))
         # serial variant with the server optimizer fused in: same step,
         # then the optimizer re-steps from the round's incoming params
         # with moment-preconditioned magnitudes (DESIGN.md §14)
@@ -633,7 +767,8 @@ class FederatedTrainer:
 
             def _step_opt(st, p, d, ids, cm, opt):
                 new_p, new_st, diag = self.algo.step(
-                    st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm)
+                    st, p, d, ids, algo_cfg.eta_g, 0, client_mask=cm,
+                    edges=self._edges)
                 new_p, new_opt = sopt.apply(p, new_p, opt)
                 return new_p, new_st, diag, new_opt
 
@@ -648,6 +783,20 @@ class FederatedTrainer:
         # input already resident
         input_sh = (self._round_shardings[0][2]
                     if self._round_shardings is not None else None)
+        # multi-process ingest (DESIGN.md §15): each host reads/decodes/
+        # stacks ONLY its local slice of the padded cohort (the rows its
+        # devices own under the clients sharding) and the placer
+        # assembles the global arrays from the per-host shards — no
+        # client batch crosses a host boundary host-side
+        local_rows = None
+        sync_mb = None
+        if self._mp:
+            from repro.launch import distributed as dist_mod
+            from repro.sharding.rules import local_row_range
+            local_rows = local_row_range(input_sh, self._pad_to)
+            seq = self._mp_seq
+            sync_mb = (lambda tag, m:
+                       dist_mod.kv_allmax(f"t{seq}/maxb/{tag}", m))
         self._pipeline = CohortIngestPipeline(
             self.source, self._sample_clients,
             num_clients=num_clients,
@@ -657,7 +806,11 @@ class FederatedTrainer:
             rounds=None if exec_cfg.async_buffer else exec_cfg.rounds,
             depth=exec_cfg.prefetch_depth,
             device_stage=exec_cfg.device_stage,
-            placer=CohortPlacer(input_sh), pad_to=self._pad_to,
+            placer=CohortPlacer(
+                input_sh, local_rows=local_rows,
+                global_rows=self._pad_to if local_rows else None),
+            pad_to=self._pad_to,
+            local_rows=local_rows, sync_max_batches=sync_mb,
             stall_timeout=exec_cfg.ingest_stall_s,
             max_restarts=exec_cfg.ingest_max_restarts,
             restart_backoff=exec_cfg.ingest_restart_backoff_s,
@@ -929,6 +1082,27 @@ class FederatedTrainer:
         (s_sh, p_sh, _, _, _), _ = self._round_shardings
         return p_sh, s_sh
 
+    def _put_replicated(self, tree, sh):
+        """Place a host tree with a (replicated) sharding on a process-
+        spanning mesh, where plain device_put is illegal — every host
+        holds the full value (ingest/placement.put_global)."""
+        from repro.ingest.placement import put_global
+        return jax.tree.map(lambda x: put_global(x, sh), tree)
+
+    def _comm_fields(self, shipped_count: int,
+                     live_edges: Optional[int] = None) -> Dict[str, int]:
+        """Uplink accounting split by round shape (DESIGN.md §15): flat
+        rounds pay everything on the server uplink; hierarchical rounds
+        pay the per-client deltas to the edges and one raw-f32 summary
+        per LIVE edge to the server."""
+        up = self._client_bytes_up * int(shipped_count)
+        if self._edges is None:
+            return {"comm_bytes_up": up, "comm_bytes_edge_up": 0,
+                    "comm_bytes_server_up": up}
+        e = self._edges if live_edges is None else int(live_edges)
+        return {"comm_bytes_up": up, "comm_bytes_edge_up": up,
+                "comm_bytes_server_up": e * self._summary_bytes_up}
+
     def _entry_delta_template(self) -> PyTree:
         """ShapeDtypeStruct tree of ONE async BufferEntry's delta: the
         raw params tree without a codec, the codec's single-client wire
@@ -995,7 +1169,7 @@ class FederatedTrainer:
     def _run_round_vectorized(self, t: int):
         staged = (self._pipeline.get(t) if self.cfg.prefetch
                   else self._pipeline.stage_blocking(t))
-        chaos = (self._inject_deltas or self._deadline_mask
+        chaos = (self._inject_deltas or self._live_mask_input
                  or self._guard is not None or self._codec_stochastic
                  or self._codec_ef or self._server_opt is not None)
         try:
@@ -1007,12 +1181,12 @@ class FederatedTrainer:
                 # syncs on the round's result: after this the device is
                 # done with the inputs and the staging slot is reusable;
                 # dummy padded clients sit past the real K and report
-                # loss 0
+                # loss 0. Multi-process: losses left the program
+                # replicated, so the host read works on every process.
                 n = len(staged.clients)
-                train_loss = float(jnp.mean(losses[:n]))
+                train_loss = float(np.asarray(losses)[:n].mean())
                 return (train_loss, diag, staged.host_seconds,
-                        staged.device_seconds,
-                        {"comm_bytes_up": self._client_bytes_up * n})
+                        staged.device_seconds, self._comm_fields(n))
             # ---- chaos-hardened / codec-extra round (DESIGN.md §12,
             # §13): same program, extended by the fixed-order extras ----
             n = len(staged.clients)
@@ -1026,18 +1200,33 @@ class FederatedTrainer:
                 codes = np.zeros(kp, np.int32)
                 codes[:n] = self.fault_plan.delta_codes(t, staged.clients)
                 args.append(jnp.asarray(codes))
-            if self._deadline_mask:
-                lat, dropped = self._runtime_take(t)
-                live = (~dropped) & (lat <= self.cfg.round_deadline)
-                # runtime dropouts never produced an update; deadline-
-                # late clients DID ship one — it just arrived too late
-                # for the fold (uplink accounting below)
-                shipped = ~dropped
+            edge_down = 0
+            if self._live_mask_input:
                 lv = np.zeros(kp, bool)
-                lv[:n] = live
+                lv[:n] = True
+                if self._deadline_mask:
+                    lat, dropped = self._runtime_take(t)
+                    live = (~dropped) & (lat <= self.cfg.round_deadline)
+                    # runtime dropouts never produced an update;
+                    # deadline-late clients DID ship one — it just
+                    # arrived too late for the fold (uplink accounting
+                    # below)
+                    shipped = ~dropped
+                    lv[:n] = live
+                    extra["deadline_dropped"] = int((~live).sum())
+                    extra["deadline_fired"] = int((~live).any())
+                if self._edge_faults:
+                    # a lost process drops its whole edge's summary: mask
+                    # every row of the dropped edges so the server folds
+                    # the surviving E-1 partials (clients still SHIPPED
+                    # to their edge — only the edge->server hop is lost)
+                    edrop = self.fault_plan.edge_drops(t, self._edges)
+                    edge_live = np.repeat(~edrop, kp // self._edges)
+                    lv &= edge_live
+                    live = live & edge_live[:n]
+                    edge_down = int(edrop.sum())
+                    extra["edge_dropped"] = edge_down
                 args.append(jnp.asarray(lv))
-                extra["deadline_dropped"] = int((~live).sum())
-                extra["deadline_fired"] = int((~live).any())
             if self._guard is not None:
                 args.append(jnp.float32(self._guard.threshold()))
             if self._codec_stochastic:
@@ -1068,12 +1257,15 @@ class FederatedTrainer:
             # uplink accounting: bytes are counted when a delta is
             # SHIPPED, regardless of whether the fold uses it — a
             # deadline-dropped client still paid its uplink; a runtime
-            # dropout never sent anything
-            extra["comm_bytes_up"] = (self._client_bytes_up
-                                      * int(shipped.sum()))
+            # dropout never sent anything; a dropped EDGE loses its
+            # server-uplink summary (live edges only pay that hop)
+            extra.update(self._comm_fields(
+                int(shipped.sum()),
+                live_edges=(None if self._edges is None
+                            else self._edges - edge_down)))
             # train loss over clients whose update ARRIVED (live rows) —
             # identical to the historical mean when nothing timed out
-            losses_h = np.asarray(losses[:n])
+            losses_h = np.asarray(losses)[:n]
             train_loss = (float(losses_h[live].mean()) if live.any()
                           else 0.0)
         finally:
@@ -1138,6 +1330,19 @@ class FederatedTrainer:
             cm = lv
             out["deadline_dropped"] = int((~live).sum())
             out["deadline_fired"] = int((~live).any())
+        edge_down = 0
+        if self._edge_faults:
+            # same edge-loss fold as the fused path: the serial stack
+            # holds exactly K rows (edges | K validated at construction
+            # for the no-mesh serial path)
+            edrop = self.fault_plan.edge_drops(t, self._edges)
+            elive = np.repeat(~edrop, n // self._edges)
+            live = live & elive
+            lv = jnp.asarray(live)
+            ids = jnp.where(lv, ids, round_mod.ID_SENTINEL)
+            cm = lv
+            edge_down = int(edrop.sum())
+            out["edge_dropped"] = edge_down
         if self._guard is not None:
             stacked, ids, cm, gstats = round_mod.apply_guard(
                 stacked, ids, cm, self._guard.threshold(),
@@ -1167,8 +1372,10 @@ class FederatedTrainer:
                 self.server_state, self.params, stacked, ids, cm)
         # bytes are counted when a delta is shipped, regardless of
         # whether the fold uses it (matches the fused path)
-        out["comm_bytes_up"] = (self._client_bytes_up
-                                * int(shipped_mask.sum()))
+        out.update(self._comm_fields(
+            int(shipped_mask.sum()),
+            live_edges=(None if self._edges is None
+                        else self._edges - edge_down)))
         losses_h = np.asarray(losses)
         train_loss = float(losses_h[live].mean()) if live.any() else 0.0
         return train_loss, diag, ingest, 0.0, out
@@ -1186,9 +1393,10 @@ class FederatedTrainer:
                  # collection — bytes are paid at ship time whether or
                  # not this fold consumed the update (a straggler folds
                  # in a later round without paying again; a runtime
-                 # dropout never shipped and never pays)
-                 "comm_bytes_up": (self._client_bytes_up
-                                   * int(m["n_shipped"]))}
+                 # dropout never shipped and never pays). edges is never
+                 # set here (validated at construction), so the comm
+                 # fields take the flat shape.
+                 **self._comm_fields(int(m["n_shipped"]))}
         # ingest-restart attribution: charge the waves whose staging ran
         # during this round's collection (restarts key on the staged
         # wave index, final once the wave was handed out)
@@ -1295,6 +1503,8 @@ class FederatedTrainer:
         here."""
         self.finalize()
         self._pipeline.close()
+        if self._health is not None:
+            self._health.close_sink()
 
     def __enter__(self) -> "FederatedTrainer":
         return self
@@ -1533,6 +1743,25 @@ class FederatedTrainer:
                           {"config": self._guard.config.config_dict(),
                            "state": self._guard.state_dict()}),
             }
+        if self._mp:
+            # only process 0 writes (DESIGN.md §15): every process holds
+            # the identical replicated state, so N concurrent writers
+            # would race on the same files for no information gain. The
+            # KV barrier keeps non-writers from resuming/deleting past a
+            # save that is still in flight; the step path is composed
+            # deterministically so every process returns the same string.
+            from repro.launch import distributed as dist_mod
+            if dist_mod.is_coordinator():
+                path = ckpt.save(ckpt_dir, st.round,
+                                 {"params": st.params,
+                                  "server_state": st.server_state},
+                                 keep=keep, aux_arrays=aux_arrays,
+                                 aux_json=aux_json)
+            else:
+                path = os.path.join(ckpt_dir, f"step_{st.round:08d}")
+            self._save_seq += 1
+            dist_mod.barrier(f"t{self._mp_seq}/save/{self._save_seq}")
+            return path
         return ckpt.save(ckpt_dir, st.round,
                          {"params": st.params,
                           "server_state": st.server_state},
@@ -1742,15 +1971,29 @@ class FederatedTrainer:
             # DIFFERENT mesh shape than the one that saved them works:
             # the state is simply re-placed with this trainer's layout
             # (an impossible shard_model — not dividing the device count
-            # — already failed loudly in _build_mesh)
+            # — already failed loudly in _build_mesh). That includes
+            # crossing a process-count boundary: a 2-process run resumes
+            # single-process and vice versa (multi-process placement
+            # assembles per-host shards via put_global; every process
+            # must read the same checkpoint directory).
             p_sh, s_sh = self._placements()
-            self.params = jax.device_put(self.params, p_sh)
-            self.server_state = jax.device_put(self.server_state, s_sh)
-            if self._ef is not None:
-                self._ef = jax.device_put(self._ef, p_sh)
-            if self._opt_state is not None:
-                self._opt_state = jax.device_put(self._opt_state,
-                                                 self._opt_shardings)
+            if self._mp:
+                self.params = self._put_replicated(self.params, p_sh)
+                self.server_state = self._put_replicated(
+                    self.server_state, s_sh)
+                if self._ef is not None:
+                    self._ef = self._put_replicated(self._ef, p_sh)
+                if self._opt_state is not None:
+                    self._opt_state = self._put_replicated(
+                        self._opt_state, p_sh)
+            else:
+                self.params = jax.device_put(self.params, p_sh)
+                self.server_state = jax.device_put(self.server_state, s_sh)
+                if self._ef is not None:
+                    self._ef = jax.device_put(self._ef, p_sh)
+                if self._opt_state is not None:
+                    self._opt_state = jax.device_put(self._opt_state,
+                                                     self._opt_shardings)
         self.rng.set_state(("MT19937",
                             np.asarray(arrays["rng_keys"], np.uint32),
                             int(arrays["rng_pos"]),

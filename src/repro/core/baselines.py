@@ -223,8 +223,8 @@ def _fedavg_init(params, num_clients):
 
 
 def _fedavg_step(state, params, deltas, client_ids, eta_g, t,
-                 client_mask=None, **_):
-    delta_t = _mean_over_clients(deltas, client_mask)
+                 client_mask=None, edges=None, **_):
+    delta_t = _mean_over_clients(deltas, client_mask, edges=edges)
     return _apply(params, delta_t, eta_g), {"delta_prev": delta_t}, {
         "norm_global_update": proj.tree_norm(delta_t)}
 
@@ -244,10 +244,10 @@ def _build_fedprox(h):
 # ---------------- FedExP ----------------
 
 def _fedexp_step(state, params, deltas, client_ids, eta_g, t, eps=1e-3,
-                 client_mask=None, **_):
+                 client_mask=None, edges=None, **_):
     """eta_g_t = max(1, sum_j||Δ_j||² / (2 k' (||Δ̄||² + eps))) — the POCS
     extrapolation rule; then w ← w − eta_g · eta_g_t · Δ̄."""
-    delta_t = _mean_over_clients(deltas, client_mask)
+    delta_t = _mean_over_clients(deltas, client_mask, edges=edges)
     sq_each = jax.vmap(proj.tree_sqnorm)(deltas)               # (k',)
     if client_mask is None:
         kprime = sq_each.shape[0]
@@ -256,7 +256,15 @@ def _fedexp_step(state, params, deltas, client_ids, eta_g, t, eps=1e-3,
         sq_each = sq_each * mf
         kprime = jnp.maximum(mf.sum(), 1.0)
     sq_mean = proj.tree_sqnorm(delta_t)
-    extrap = jnp.maximum(1.0, sq_each.sum() / (2 * kprime * (sq_mean + eps)))
+    if edges is not None and int(edges) > 1:
+        # two-level: per-edge partial sums of ||Δ_j||², then the sum of
+        # the E edge summaries — the scalar is dim-preserving, so it
+        # composes across aggregation levels (DESIGN.md §15)
+        sq_total = jnp.sum(jnp.sum(
+            sq_each.reshape(int(edges), -1), axis=1))
+    else:
+        sq_total = sq_each.sum()
+    extrap = jnp.maximum(1.0, sq_total / (2 * kprime * (sq_mean + eps)))
     return _apply(params, delta_t, eta_g * extrap), {
         "delta_prev": delta_t}, {
         "norm_global_update": proj.tree_norm(delta_t), "extrap": extrap}
@@ -298,7 +306,7 @@ def _fedvarp_init(params, num_clients):
 
 
 def _fedvarp_step(state, params, deltas, client_ids, eta_g, t,
-                  client_mask=None, **_):
+                  client_mask=None, edges=None, **_):
     """Δ_t = (1/k)Σ_i y_i + (1/k')Σ_{j∈S}(Δ_j − y_j);  y_j ← Δ_j for j∈S.
 
     Padded dummy rows (client_mask False) carry out-of-range ids: the
@@ -316,9 +324,12 @@ def _fedvarp_step(state, params, deltas, client_ids, eta_g, t,
         new_y = jax.tree.map(
             lambda tb, d: tb.at[client_ids].set(d.astype(jnp.float32),
                                                 mode="drop"), y, deltas)
+    # the correction mean goes two-level under edges=; the y-table
+    # scatter is edge-resident state that rides along unchanged, and
+    # base = y.mean(axis=0) is server-local state
     corr = _mean_over_clients(
         jax.tree.map(lambda d, ys: d.astype(jnp.float32) - ys,
-                     deltas, y_sel), client_mask)
+                     deltas, y_sel), client_mask, edges=edges)
     base = jax.tree.map(lambda tb: tb.mean(axis=0), y)
     delta_t = jax.tree.map(lambda b, c: b + c, base, corr)
     return _apply(params, delta_t, eta_g), {
@@ -338,21 +349,21 @@ def _build_fedvarp(h):
 def _build_feddpc(h):
     def step(state, params, deltas, client_ids, eta_g, t,
              client_mask=None, model_sharded=False,
-             staleness_weights=None, encoded=None, **_):
+             staleness_weights=None, encoded=None, edges=None, **_):
         return feddpc_mod.server_step(state, params, deltas, eta_g, h.lam,
                                       use_kernel=h.use_kernel,
                                       client_mask=client_mask,
                                       model_sharded=model_sharded,
                                       staleness_weights=staleness_weights,
-                                      encoded=encoded)
+                                      encoded=encoded, edges=edges)
     return ServerAlgo("feddpc", lambda p, n: feddpc_mod.init_state(p), step,
                       staleness_aware=True)
 
 
 def _feddpc_noscale_step(state, params, deltas, client_ids, eta_g, t,
-                         client_mask=None, **_):
+                         client_mask=None, edges=None, **_):
     return feddpc_mod.server_step_projection_only(
-        state, params, deltas, eta_g, client_mask=client_mask)
+        state, params, deltas, eta_g, client_mask=client_mask, edges=edges)
 
 
 @register_algorithm("feddpc_noscale")
@@ -377,8 +388,8 @@ def _make_adaptive(kind: str, h: AdaptiveHyper) -> ServerAlgo:
     b1, b2, eps = h.b1, h.b2, h.eps
 
     def step(state, params, deltas, client_ids, eta_g, t_unused,
-             client_mask=None, **_):
-        delta_t = _mean_over_clients(deltas, client_mask)
+             client_mask=None, edges=None, **_):
+        delta_t = _mean_over_clients(deltas, client_mask, edges=edges)
         t = state["t"] + 1.0
         m = jax.tree.map(lambda mm, d: b1 * mm + (1 - b1) * d,
                          state["m"], delta_t)
@@ -424,11 +435,11 @@ def _build_feddpc_m(h):
 
     def step(state, params, deltas, client_ids, eta_g, t,
              client_mask=None, model_sharded=False,
-             staleness_weights=None, **_):
+             staleness_weights=None, edges=None, **_):
         _, new_state, diag = feddpc_mod.server_step(
             {"delta_prev": state["delta_prev"]}, params, deltas, 0.0, lam,
             client_mask=client_mask, model_sharded=model_sharded,
-            staleness_weights=staleness_weights)
+            staleness_weights=staleness_weights, edges=edges)
         delta_t = new_state["delta_prev"]
         m = jax.tree.map(
             lambda mm, d: beta * mm.astype(jnp.float32)

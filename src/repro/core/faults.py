@@ -18,6 +18,12 @@ Injector classes (the registry, ``FAULT_KINDS``):
   ckpt_corrupt    checkpoint step written corrupted (truncate / bitflip /
                   missing digest sidecar) — consumed by tests/benches via
                   ``corrupt_checkpoint``
+  edge_drop       hierarchical round shape (DESIGN.md §15): an EDGE
+                  aggregator (one host's cohort slice) drops mid-round —
+                  its summary never reaches the server, which folds the
+                  surviving E-1 summaries through the existing
+                  client_mask path (the edge's rows mask out exactly
+                  like deadline-dropped clients)
 
 The first two surface as ``delta_codes`` consumed INSIDE the jit'd round
 (core/round.py folds them in as a (K,) int32 input); hangs surface as a
@@ -130,6 +136,16 @@ class CkptCorrupt(FaultInjector):
     mode: str = "truncate"               # truncate | bitflip | drop_digest
 
 
+@register_fault
+@dataclass(frozen=True)
+class EdgeDrop(FaultInjector):
+    """Process-loss / mesh-partition injector: ``clients`` doubles as
+    explicit EDGE indices (0..E-1); ``rate`` seeds per edge per round.
+    The queried id space is the edge index, so the hit set is invariant
+    to which clients each edge happens to hold."""
+    kind: str = "edge_drop"
+
+
 # ---------------- the plan ----------------
 
 @dataclass(frozen=True)
@@ -151,6 +167,9 @@ class FaultPlan:
                hang_rounds: Sequence[int] = (),
                hang_clients: Sequence[int] = (),
                ingest_crash_rounds: Sequence[int] = (),
+               edge_drop_rate: float = 0.0,
+               edge_drop_rounds: Sequence[int] = (),
+               edge_drop_edges: Sequence[int] = (),
                explode_magnitude: float = 1e12) -> "FaultPlan":
         inj = []
         if nan_rate or nan_rounds or nan_clients:
@@ -167,6 +186,10 @@ class FaultPlan:
         if ingest_crash_rate or ingest_crash_rounds:
             inj.append(IngestCrash(rate=ingest_crash_rate,
                                    rounds=tuple(ingest_crash_rounds)))
+        if edge_drop_rate or edge_drop_rounds or edge_drop_edges:
+            inj.append(EdgeDrop(rate=edge_drop_rate,
+                                rounds=tuple(edge_drop_rounds),
+                                clients=tuple(edge_drop_edges)))
         return cls(seed=seed, injectors=tuple(inj),
                    explode_magnitude=explode_magnitude)
 
@@ -205,6 +228,22 @@ class FaultPlan:
         for inj in self._of("client_hang"):
             boost[inj.client_hits(self.seed, t, sampled)] = HANG_LATENCY
         return boost
+
+    @property
+    def injects_edges(self) -> bool:
+        return bool(self._of("edge_drop"))
+
+    def edge_drops(self, t: int, num_edges: int) -> np.ndarray:
+        """(E,) bool — edges whose summary never reaches the server this
+        round. Pure in (seed, round), like every other query: the same
+        plan replays the same partitions under save/resume and across
+        prefetch depths. The engine folds a dropped edge's rows out of
+        ``client_mask`` (DESIGN.md §15), so the server aggregates the
+        surviving E-1 summaries with zero rule changes."""
+        drops = np.zeros(int(num_edges), bool)
+        for inj in self._of("edge_drop"):
+            drops |= inj.client_hits(self.seed, t, np.arange(num_edges))
+        return drops
 
     def ingest_crash(self, t: int, attempt: int = 0) -> bool:
         """Crash the staging producer for round t?  Only the FIRST

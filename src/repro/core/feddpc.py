@@ -31,7 +31,7 @@ def init_state(params: PyTree) -> Dict[str, PyTree]:
 def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
                 eta_g: float, lam: float = 1.0, use_kernel: bool = False,
                 client_mask=None, model_sharded: bool = False,
-                staleness_weights=None, encoded=None
+                staleness_weights=None, encoded=None, edges=None
                 ) -> Tuple[PyTree, Dict[str, PyTree], Dict[str, jnp.ndarray]]:
     """One FedDPC aggregation.
 
@@ -66,6 +66,17 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
     the masked path uses, leaving the epilogue unchanged. At staleness
     0 every weight is exactly 1.0 and the step is the synchronous one.
 
+    ``edges=E`` runs the aggregation as a two-level hierarchical fold
+    (DESIGN.md §15): the k' rows split into E equal contiguous edge
+    groups, each edge folds its slice — the SAME fused epilogue
+    (including the Pallas and codec-dequant grids) over k'/E rows — to a
+    partial reduction-pass sum, and the server combines the E partials.
+    The per-client transform scale_j*(d_j - coef_j*prev) derives from
+    dim-preserving scalars, so the scalars (and the mask/staleness
+    folding above) are UNCHANGED; only the final mean decomposes, into
+    mean-of-means over equal groups — exact up to float summation order.
+    E must divide k'.
+
     ``encoded`` is the codec wire payload ({"q", "scale", "zero"} trees,
     repro/codec) whose dequant — ``q * scale + zero`` — reproduces
     ``deltas`` exactly. The reduction-pass scalars are still computed on
@@ -94,6 +105,12 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
         diag_mean = lambda x: jnp.sum(x * mf) / nvalid
     wgt = (None if staleness_weights is None
            else jnp.asarray(staleness_weights, jnp.float32))
+    E = int(edges) if edges is not None and int(edges) > 1 else None
+    if E is not None:
+        k_rows = int(coefs.shape[0])
+        if k_rows % E:
+            raise ValueError(f"edges={E} must divide the cohort rows "
+                             f"({k_rows})")
     if use_kernel:
         # epilogue pass: residual+scale, client-mean (Eq. 4) AND the param
         # update fused into ONE grid over the stacked deltas
@@ -102,30 +119,70 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
         # buffered-async fold routes to the scatter-accumulate variant,
         # which applies the staleness discount inside the grid.
         from repro.kernels.feddpc_project import ops as k_ops
-        if encoded is not None and wgt is None:
-            new_params, delta_t = k_ops.dequant_batched_server_epilogue(
-                encoded, delta_prev, params, coefs, scales, eta_g)
-        elif encoded is not None:
-            new_params, delta_t = k_ops.dequant_buffered_server_fold(
-                encoded, delta_prev, params, coefs, scales, wgt, eta_g)
-        elif wgt is None:
-            new_params, delta_t = k_ops.batched_server_epilogue(
-                deltas, delta_prev, params, coefs, scales, eta_g)
+
+        def kernel_fold(d_slice, enc_slice, c_slice, s_slice, w_slice):
+            if enc_slice is not None and w_slice is None:
+                return k_ops.dequant_batched_server_epilogue(
+                    enc_slice, delta_prev, params, c_slice, s_slice, eta_g)
+            if enc_slice is not None:
+                return k_ops.dequant_buffered_server_fold(
+                    enc_slice, delta_prev, params, c_slice, s_slice,
+                    w_slice, eta_g)
+            if w_slice is None:
+                return k_ops.batched_server_epilogue(
+                    d_slice, delta_prev, params, c_slice, s_slice, eta_g)
+            return k_ops.buffered_server_fold(
+                d_slice, delta_prev, params, c_slice, s_slice, w_slice,
+                eta_g)
+
+        if E is None:
+            new_params, delta_t = kernel_fold(deltas, encoded, coefs,
+                                              scales, wgt)
         else:
-            new_params, delta_t = k_ops.buffered_server_fold(
-                deltas, delta_prev, params, coefs, scales, wgt, eta_g)
+            # two-level fold: each edge runs the SAME fused grid (Pallas
+            # epilogue / codec dequant included) over its k'/E-row slice
+            # — its partial mean is the edge→server summary — and the
+            # server averages the E partials (equal groups: exact)
+            rows = k_rows // E
+            def rsl(tree, lo, hi):
+                return jax.tree.map(lambda x: x[lo:hi], tree)
+            parts = []
+            for e in range(E):
+                lo, hi = e * rows, (e + 1) * rows
+                _, part = kernel_fold(
+                    rsl(deltas, lo, hi),
+                    None if encoded is None else rsl(encoded, lo, hi),
+                    coefs[lo:hi], scales[lo:hi],
+                    None if wgt is None else wgt[lo:hi])
+                parts.append(part)
+            delta_t = jax.tree.map(
+                lambda *xs: jnp.mean(jnp.stack(xs), axis=0), *parts)
+            new_params = jax.tree.map(
+                lambda w, d: (w.astype(jnp.float32)
+                              - eta_g * d).astype(w.dtype),
+                params, delta_t)
     else:
         if wgt is not None:
             scales = scales * wgt
         def bc(s, x):
             return s.reshape((-1,) + (1,) * (x.ndim - 1))
 
+        def mean_rows(x):
+            if E is None:
+                return jnp.mean(x, axis=0)
+            # two-level: per-edge partial means, then the mean of the E
+            # edge summaries — the mask/staleness weights are already
+            # folded into the scales, so the decomposition is exact
+            return jnp.mean(jnp.mean(
+                x.reshape((E, x.shape[0] // E) + x.shape[1:]), axis=1),
+                axis=0)
+
         # scaled residual + mean over the client axis (Eq. 4)
         delta_t = jax.tree.map(
-            lambda d, p: jnp.mean(
+            lambda d, p: mean_rows(
                 bc(scales, d) * (d.astype(jnp.float32)
-                                 - bc(coefs, d) * p.astype(jnp.float32)[None]),
-                axis=0), deltas, delta_prev)
+                                 - bc(coefs, d) * p.astype(jnp.float32)[None])),
+            deltas, delta_prev)
         new_params = jax.tree.map(
             lambda w, d: (w.astype(jnp.float32) - eta_g * d).astype(w.dtype),
             params, delta_t)
@@ -143,7 +200,7 @@ def server_step(state: Dict[str, PyTree], params: PyTree, deltas: PyTree,
 
 
 def server_step_projection_only(state, params, deltas, eta_g,
-                                client_mask=None
+                                client_mask=None, edges=None
                                 ) -> Tuple[PyTree, Dict, Dict]:
     """Ablation: orthogonal projection WITHOUT adaptive scaling (paper Fig 6,
     blue line). Equivalent to lam-scaling with scale == 1."""
@@ -157,7 +214,7 @@ def server_step_projection_only(state, params, deltas, eta_g,
             d, delta_prev)
 
     resid = jax.vmap(one)(deltas)
-    delta_t = proj.masked_client_mean(resid, client_mask)
+    delta_t = proj.masked_client_mean(resid, client_mask, edges=edges)
     new_params = jax.tree.map(
         lambda w, d: (w.astype(jnp.float32) - eta_g * d).astype(w.dtype),
         params, delta_t)

@@ -84,12 +84,44 @@ def tree_zeros_like(a: PyTree) -> PyTree:
     return jax.tree.map(jnp.zeros_like, a)
 
 
-def masked_client_mean(tree: PyTree, client_mask=None) -> PyTree:
+def masked_client_mean(tree: PyTree, client_mask=None, *,
+                       edges=None) -> PyTree:
     """f32 mean over the leading (client) axis of every leaf; with
     ``client_mask`` (K,) bool the mean runs over the True rows only —
     padded dummy clients (DESIGN.md §2) contribute zero to the numerator
     AND the denominator. The single implementation every server rule's
-    aggregation goes through."""
+    aggregation goes through.
+
+    ``edges=E`` expresses the SAME mean as a two-level hierarchical fold
+    (DESIGN.md §15): the K rows split into E equal contiguous groups —
+    one per edge aggregator — each edge reduces its slice to a partial
+    sum (and a partial live count), and the server combines the E
+    partials. Because the mask folds into per-row weights, the two-level
+    value equals the flat mean exactly up to float summation order; the
+    explicit (E, K/E) reshape is the single-process expression of the
+    fold that, on a process-spanning clients mesh, keeps cross-host
+    traffic to E partial summaries instead of K raw rows."""
+    if edges is not None and int(edges) > 1:
+        E = int(edges)
+
+        def two_level(x):
+            x = x.astype(jnp.float32)
+            k = x.shape[0]
+            if k % E:
+                raise ValueError(
+                    f"edges={E} must divide the client axis ({k})")
+            xs = x.reshape((E, k // E) + x.shape[1:])
+            if client_mask is None:
+                # equal group sizes: mean-of-means is exact
+                return jnp.mean(jnp.mean(xs, axis=1), axis=0)
+            w = client_mask.astype(jnp.float32).reshape(
+                (E, k // E) + (1,) * (x.ndim - 1))
+            part = jnp.sum(xs * w, axis=1)          # (E, ...) edge sums
+            live = jnp.sum(client_mask.astype(jnp.float32)
+                           .reshape(E, k // E), axis=1)   # (E,) counts
+            return jnp.sum(part, axis=0) / jnp.maximum(jnp.sum(live), 1.0)
+
+        return jax.tree.map(two_level, tree)
     if client_mask is None:
         return jax.tree.map(
             lambda x: jnp.mean(x.astype(jnp.float32), axis=0), tree)

@@ -125,7 +125,7 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
                       deadline_mask: bool = False,
                       fault_magnitude: float = 1e12,
                       codec=None, codec_ef: bool = False,
-                      server_opt=None):
+                      server_opt=None, edges=None):
     """Returns cohort_round(server_state, params, batches, masks,
     client_ids, *extras) -> (new_params, new_server_state, losses, diag
     [, guard_stats]).
@@ -226,6 +226,17 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
     falls back to the reference path (its flatten would all-gather the
     shards).
 
+    ``edges=E`` (E > 1) runs the server rule as a two-level hierarchical
+    fold (DESIGN.md §15): the K cohort rows split into E equal contiguous
+    edge groups, each edge folds its slice with the SAME fused epilogue
+    (Pallas / codec-dequant grids included) to a partial summary, and the
+    server combines the E summaries. FedDPC's reduction-pass scalars are
+    dim-preserving sums, so only the final client-mean decomposes — the
+    result is allclose to the flat fold (float summation order only). On
+    a process-spanning clients mesh each contiguous group is one host's
+    local shard, so the cross-host traffic is E summaries, not K rows.
+    E must divide K (the padded cohort size).
+
     The per-variant local-training knobs (mu / cm_alpha / ga_beta) come
     from the algorithm's own hyperparameters (``algo.client_hparams``);
     anything the algorithm leaves unset keeps the local-update builder's
@@ -309,7 +320,8 @@ def make_cohort_round(loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
         new_params, new_state, diag = algo.step(
             server_state, params, deltas, client_ids, eta_g, 0,
             client_mask=cm, model_sharded=model_sharded,
-            encoded=(payload if codec_lossy and not guard else None))
+            encoded=(payload if codec_lossy and not guard else None),
+            edges=edges)
         new_opt = None
         if server_opt is not None:
             # adaptive server step (DESIGN.md §14): precondition the

@@ -29,12 +29,26 @@ early-stop hook; non-finite loss trips it immediately when
 ``state_dict()/load_state_dict()`` round-trip it bitwise through the
 trainer's aux sidecar so a resumed run's detector picks up mid-window
 instead of re-warming blind.
+
+Verdicts can STREAM to an external tracker through a pluggable ``sink``
+with the wandb-style interface ``log(data: dict, step: int)`` (plus an
+optional ``close()``): every observe() emits its report as a flat dict,
+so an unattended run's health trace lands somewhere a human (or a
+dashboard) watches while the run is still going — not only in the
+receipts read after the fact. ``JsonlHealthSink`` is the file-backed
+reference implementation (one JSON object per line, append-only,
+flushed per verdict so a crashed run keeps everything emitted); a real
+``wandb.run`` object satisfies the same duck type directly. Sink
+failures never take the training loop down — they disable the sink and
+warn once.
 """
 from __future__ import annotations
 
+import json
 import math
+import warnings
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional
 
 
@@ -87,13 +101,43 @@ def _median(values) -> float:
     return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
 
 
+class JsonlHealthSink:
+    """Append-only JSONL tracker file: one verdict per line, flushed
+    immediately (a killed run keeps every verdict emitted before the
+    kill). The file opens lazily at the first ``log`` so constructing a
+    monitor with a sink configured but never observed leaves no file."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._fh = None
+
+    def log(self, data: Dict[str, Any], step: Optional[int] = None) -> None:
+        if self._fh is None:
+            self._fh = open(self.path, "a")
+        row = {"step": step, **data} if step is not None else dict(data)
+        self._fh.write(json.dumps(row) + "\n")
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
 class HealthMonitor:
     """Feed every consumed RoundRecord (in round order) to ``observe``;
     read the verdict from the returned HealthReport (also kept as
-    ``last_report``). Host-side and regime-agnostic by construction."""
+    ``last_report``). Host-side and regime-agnostic by construction.
 
-    def __init__(self, config: Optional[HealthConfig] = None):
+    ``sink``: optional wandb-style tracker (``log(data, step)``); every
+    report streams to it as a flat dict keyed by the report fields,
+    with the alarm list joined to a comma string (flat scalar values
+    only — the common denominator of tracker backends)."""
+
+    def __init__(self, config: Optional[HealthConfig] = None, *,
+                 sink=None):
         self.config = config or HealthConfig()
+        self._sink = sink
         w = self.config.window
         self._loss = deque(maxlen=w)
         self._stale = deque(maxlen=w)
@@ -159,7 +203,25 @@ class HealthMonitor:
             nonfinite_rounds=self._nonfinite_rounds,
             alarmed_rounds=self._alarmed_rounds,
             consecutive_alarmed=self._streak)
+        if self._sink is not None:
+            row = asdict(self.last_report)
+            row["alarms"] = ",".join(alarms)
+            row["healthy"] = not alarms
+            try:
+                self._sink.log(row, step=self.last_report.round)
+            except Exception as e:       # pragma: no cover - defensive
+                # a broken tracker must not take the run down: drop the
+                # sink and keep training (the receipt path still records
+                # everything)
+                self._sink = None
+                warnings.warn(f"health sink failed and was disabled: {e}",
+                              RuntimeWarning, stacklevel=2)
         return self.last_report
+
+    def close_sink(self) -> None:
+        """Release the sink's file handle (if it has one)."""
+        if self._sink is not None and hasattr(self._sink, "close"):
+            self._sink.close()
 
     # ---- checkpointing (rides the trainer's aux sidecar) ----
 

@@ -78,6 +78,17 @@ class CohortIngestPipeline:
     in round order. ``pad_to`` > K appends masked dummy clients so the
     cohort tiles a sharded client axis; dummy ids use the out-of-range
     ``num_clients`` sentinel (FedVARP's scatter drops them).
+
+    MULTI-PROCESS (DESIGN.md §15): ``local_rows=(lo, hi)`` restricts the
+    read/decode/stack stages to this host's slice of the padded cohort.
+    Every process still draws the FULL schedule (seeded samplers make it
+    identical across hosts — that shared draw IS the coordination), but
+    only global rows [lo, hi) are read and staged here; the placer (which
+    must carry the same ``local_rows``) assembles the global array from
+    the per-host shards, so client batches never cross a host boundary
+    host-side. ``sync_max_batches(tag, m) -> m'`` (launch/distributed.
+    kv_allmax under a per-round tag) keeps the grow-once M bucket — and
+    with it the stacked shape and jit signature — agreed across hosts.
     """
 
     def __init__(self, source: DataSource,
@@ -86,6 +97,8 @@ class CohortIngestPipeline:
                  device_stage: bool = True,
                  placer: Optional[CohortPlacer] = None,
                  pad_to: Optional[int] = None,
+                 local_rows: Optional[tuple] = None,
+                 sync_max_batches: Optional[Callable[[str, int], int]] = None,
                  stall_timeout: Optional[float] = None,
                  max_restarts: int = 0, restart_backoff: float = 0.05,
                  crash_hook: Optional[Callable[[int, int], bool]] = None):
@@ -101,6 +114,12 @@ class CohortIngestPipeline:
         self.device_stage = device_stage
         self.placer = placer if placer is not None else CohortPlacer()
         self.pad_to = pad_to
+        self.local_rows = local_rows
+        self.sync_max_batches = sync_max_batches
+        self._sync_calls: dict = {}     # round -> sync tags issued so far
+        if local_rows is not None and pad_to is None:
+            raise ValueError("local_rows staging needs pad_to (the global "
+                             "padded cohort size)")
         self.stall_timeout = stall_timeout
         # producer supervision (DESIGN.md §12): a produce raise is
         # retried up to max_restarts times (lifetime budget) with
@@ -162,6 +181,27 @@ class CohortIngestPipeline:
         else:
             clients = self.sample_fn(t)
             self._sampled[t] = clients
+        if self.local_rows is not None:
+            # multi-process: the full schedule was drawn (identically on
+            # every host), but READ only this host's slice of it
+            lo, hi = self.local_rows
+            k = len(clients)
+            local = np.asarray(clients)[lo:min(hi, k)]
+            if local.size == 0:
+                raise ValueError(
+                    f"host rows [{lo}, {hi}) hold no real clients of the "
+                    f"{k}-client cohort — every host needs at least one; "
+                    "use fewer processes or a larger cohort")
+            lists = self.client_lists(local, t)
+            if self.sync_max_batches is not None:
+                n = self._sync_calls.get(t, 0)
+                self._sync_calls[t] = n + 1
+                self._max_batches = int(self.sync_max_batches(
+                    f"{t}.{n}", int(self._max_batches)))
+            batches, masks = stack_cohort_into(
+                lists, self._max_batches, slot, pad_to=hi - lo)
+            return (clients, batches, masks,
+                    self._pad_ids(clients)[lo:hi])
         lists = self.client_lists(clients, t)
         batches, masks = stack_cohort_into(lists, self._max_batches, slot,
                                            pad_to=self.pad_to)

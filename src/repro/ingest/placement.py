@@ -27,14 +27,44 @@ host-staged path always had), which is safe under either semantics.
 Placement never changes values — committed arrays feed the jit exactly
 as host arrays would — so every execution regime stays round-for-round
 equal to the serial reference (tests/test_regime_matrix.py).
+
+MULTI-PROCESS (DESIGN.md §15): when the clients mesh spans processes the
+round's input sharding is no longer fully addressable and a plain
+``device_put`` of a host array is illegal. Each host's pipeline then
+stages only its LOCAL client-row slice (sharding/rules.local_row_range)
+and the placer assembles the global array from per-host shards via
+``jax.make_array_from_callback`` — the callback answers each local
+device's global row-slice out of the local buffer, so no client batch
+ever crosses a host boundary on the host side. ``put_global`` is the
+matching helper for REPLICATED values (params, server state at init /
+restore), where every host holds the full array.
 """
 from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
 import jax
+import numpy as np
 
 PyTree = Any
+
+
+def put_global(x, sh):
+    """device_put that also works when ``sh`` spans processes.
+
+    Fully-addressable sharding (single-process, or an off-mesh default
+    device): plain ``jax.device_put``. Process-spanning sharding: build
+    the global array from this host's addressable shards with
+    ``make_array_from_callback`` — correct for any sharding where this
+    host can answer its own devices' index map from ``x`` (replicated
+    values, or a host-complete array). ``x`` must be the FULL global
+    value on every calling host."""
+    if sh is None:
+        return jax.device_put(x)
+    if getattr(sh, "is_fully_addressable", True):
+        return jax.device_put(x, sh)
+    x = np.asarray(x)
+    return jax.make_array_from_callback(x.shape, sh, lambda idx: x[idx])
 
 
 class CohortPlacer:
@@ -42,15 +72,57 @@ class CohortPlacer:
 
     ``input_sharding`` is the client-axis NamedSharding shared by every
     cohort-stacked input of the round's jit (None = single-device: the
-    default device, uncommitted — jit accepts it without a copy)."""
+    default device, uncommitted — jit accepts it without a copy).
 
-    def __init__(self, input_sharding=None):
+    ``local_rows=(lo, hi)`` + ``global_rows=K``: multi-process mode —
+    ``place`` receives arrays covering ONLY global client rows
+    [lo, hi) and assembles (K, ...) global arrays whose addressable
+    shards come straight out of the local slice. Requires
+    ``input_sharding`` to shard the leading axis so that this host's
+    devices cover exactly [lo, hi) (sharding/rules.local_row_range
+    computes that range from the same sharding)."""
+
+    def __init__(self, input_sharding=None, *,
+                 local_rows: Optional[Tuple[int, int]] = None,
+                 global_rows: Optional[int] = None):
         self.input_sharding = input_sharding
+        self.local_rows = local_rows
+        self.global_rows = global_rows
+        if (local_rows is None) != (global_rows is None):
+            raise ValueError(
+                "local_rows and global_rows must be set together")
+        if local_rows is not None and input_sharding is None:
+            raise ValueError("local_rows placement needs input_sharding")
+
+    def _put_local(self, local):
+        """Assemble one global (K, ...) array from this host's
+        [lo, hi) slice via make_array_from_callback."""
+        lo, hi = self.local_rows
+        k = self.global_rows
+        local = np.asarray(local)
+        if local.shape[0] != hi - lo:
+            raise ValueError(
+                f"local slice has {local.shape[0]} rows, expected "
+                f"{hi - lo} (= local_rows {self.local_rows})")
+        gshape = (k,) + local.shape[1:]
+
+        def cb(idx):
+            sl = idx[0]
+            start = 0 if sl.start is None else sl.start
+            stop = k if sl.stop is None else sl.stop
+            return local[start - lo:stop - lo]
+
+        return jax.make_array_from_callback(
+            gshape, self.input_sharding, cb)
 
     def place(self, batches: PyTree, masks, ids) -> Tuple[PyTree, Any, Any]:
         sh = self.input_sharding
-        put = (jax.device_put if sh is None
-               else (lambda x: jax.device_put(x, sh)))
+        if self.local_rows is not None:
+            put = self._put_local
+        elif sh is None:
+            put = jax.device_put
+        else:
+            put = lambda x: jax.device_put(x, sh)
         batches = jax.tree.map(put, batches)
         masks = None if masks is None else put(masks)
         ids = None if ids is None else put(ids)
@@ -76,8 +148,14 @@ class CohortPlacer:
         same contract as ``place``).
         """
         sh = self.input_sharding
-        put = (jax.device_put if sh is None
-               else (lambda x: jax.device_put(x, sh)))
+        if self.local_rows is not None:
+            # every payload leaf carries the leading client axis, so the
+            # local-slice assembly covers the whole wire dict too
+            put = self._put_local
+        elif sh is None:
+            put = jax.device_put
+        else:
+            put = lambda x: jax.device_put(x, sh)
         payload = jax.tree.map(put, cohort.payload)
         jax.block_until_ready(payload)
         return type(cohort)(codec=cohort.codec, payload=payload,

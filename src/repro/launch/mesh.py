@@ -53,6 +53,15 @@ def make_cohort_mesh(num_devices: int = None, axis: str = "clients",
     device count; anything else fails loudly here rather than producing
     a silently lopsided mesh.
 
+    MULTI-PROCESS (DESIGN.md §15): ``jax.devices()`` is the GLOBAL
+    device list once ``launch/distributed.maybe_initialize()`` has run,
+    so the same call builds a process-spanning clients mesh with no
+    changes — the axis enumerates every host's devices in process order
+    (process 0's local devices first), which is what makes each host's
+    contiguous client-row slice land on its own local devices
+    (sharding/rules.local_row_range). ``num_devices`` must then be the
+    GLOBAL count (or None).
+
     On CPU CI both shapes are exercised with
     XLA_FLAGS=--xla_force_host_platform_device_count=8."""
     n = num_devices or len(jax.devices())

@@ -20,7 +20,10 @@ across save/resume included). The chaos-hardening levers of DESIGN.md
 §12 ride along: --guard validates every client delta, --round-deadline
 bounds each round in virtual time, --fault-plan replays a seeded
 injector schedule, and --ingest-max-restarts supervises the staging
-producer.
+producer. --edges folds the cohort through hierarchical edge
+aggregators (DESIGN.md §15) — under launch/distributed.spawn_local the
+same driver runs one process per "host" — and --health-log streams the
+run-health monitor's verdicts to a JSONL tracker file.
 
 Also supports federated *LM* training with any assigned architecture's
 smoke config (--model starcoder2-3b etc.) — the beyond-paper scenario
@@ -252,6 +255,19 @@ def main(argv=None):
     ap.add_argument("--health-patience", type=int, default=None,
                     help="early-stop after N consecutive alarmed rounds "
                          "(needs --health; default: alarms only)")
+    ap.add_argument("--health-log", default=None,
+                    help="stream every health verdict to this JSONL "
+                         "tracker file as the run goes (needs --health; "
+                         "one JSON object per round, flushed per "
+                         "verdict — in multi-process jobs process 0 "
+                         "writes)")
+    ap.add_argument("--edges", type=int, default=None,
+                    help="hierarchical edge aggregation (DESIGN.md §15): "
+                         "fold the cohort through E edge aggregators "
+                         "(must divide the padded cohort) so the server "
+                         "consumes E partial summaries instead of K raw "
+                         "deltas; in multi-process jobs each process is "
+                         "one edge over its local client shard")
     ap.add_argument("--codec-ef", action="store_true",
                     help="server-side error feedback for a lossy "
                          "--codec: clients ship delta + the running "
@@ -277,6 +293,12 @@ def main(argv=None):
                          "and continue the run exactly where it stopped")
     args = ap.parse_args(argv)
 
+    # multi-process jobs (DESIGN.md §15): wire jax.distributed from the
+    # REPRO_DIST_* environment BEFORE the first device query; a no-op in
+    # single-process runs
+    from repro.launch.distributed import maybe_initialize
+    maybe_initialize()
+
     if args.model in ("lenet5", "resnet18-gn"):
         params, loss_fn, source, eval_fn, k = build_vision_task(args)
     else:
@@ -301,6 +323,7 @@ def main(argv=None):
         ingest_max_restarts=args.ingest_max_restarts,
         codec=args.codec, codec_ef=(True if args.codec_ef else None),
         health=args.health, health_patience=args.health_patience,
+        health_log=args.health_log, edges=args.edges,
         decode_workers=args.decode_workers,
         batch_size=args.batch_size, local_epochs=args.local_epochs)
     sampler = build_sampler(args, source, k, cohort)

@@ -240,6 +240,43 @@ def to_named(specs: PyTree, mesh: Mesh) -> PyTree:
 
 # ---------------- cohort (simulation FL) round ----------------
 
+def local_row_range(sharding: NamedSharding, nrows: int) -> Tuple[int, int]:
+    """[lo, hi) of the leading-axis rows this PROCESS owns under a
+    client-sharded layout (DESIGN.md §15).
+
+    On a process-spanning clients mesh each host's ingest pipeline reads,
+    decodes, and device-stages only its local shard — this is the lookup
+    that tells it which cohort rows those are. Derived from the
+    sharding's device→index map restricted to the addressable devices;
+    the cohort layouts keep every process's rows CONTIGUOUS (the mesh
+    enumerates devices in process order), and anything else is rejected
+    rather than silently mis-staged. Single-process: (0, nrows).
+    """
+    probe = jax.ShapeDtypeStruct((nrows,), np.int32)
+    imap = sharding.devices_indices_map(probe.shape)
+    local = {d for d in sharding.mesh.devices.flat
+             if d.process_index == jax.process_index()}
+    rows = set()
+    for dev, idx in imap.items():
+        if dev not in local:
+            continue
+        sl = idx[0]
+        lo = 0 if sl.start is None else sl.start
+        hi = nrows if sl.stop is None else sl.stop
+        rows.update(range(lo, hi))
+    if not rows:
+        raise ValueError("local_row_range: no addressable rows — the "
+                         "sharding's mesh carries none of this process's "
+                         "devices")
+    lo, hi = min(rows), max(rows) + 1
+    if rows != set(range(lo, hi)):
+        raise ValueError(
+            f"local_row_range: this process's rows {sorted(rows)} are not "
+            "contiguous; the multi-host ingest contract needs the clients "
+            "axis laid out in process order (launch/mesh.make_cohort_mesh)")
+    return lo, hi
+
+
 def cohort_param_specs(params: PyTree, mesh: Mesh,
                        client_axis: str = "clients",
                        model_axis: str = "model",

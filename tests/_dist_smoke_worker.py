@@ -1,0 +1,37 @@
+"""Child body for tests/test_distributed.py — the spawner/KV smoke.
+
+Joins the 2-process job, checks the process/device topology, exercises
+barrier() and kv_allmax(), then (with --fail) process 1 exits nonzero
+AFTER the barrier so the parent can check spawn_local's failure
+surfacing without wedging process 0 inside initialize().
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.launch.distributed import (barrier, is_coordinator,  # noqa: E402
+                                      kv_allmax, maybe_initialize)
+
+ctx = maybe_initialize()
+assert ctx is not None, "worker needs the REPRO_DIST_* environment"
+assert ctx.num_processes == 2, ctx
+
+import jax  # noqa: E402
+
+pid = jax.process_index()
+assert ctx.process_id == pid
+assert jax.process_count() == 2
+assert len(jax.local_devices()) == 1, jax.local_devices()
+assert len(jax.devices()) == 2, jax.devices()
+assert is_coordinator() == (pid == 0)
+
+# kv_allmax: every process publishes, everyone reads the max
+assert kv_allmax("smoke/a", 10 + pid) == 11
+assert kv_allmax("smoke/b", 5 - pid) == 5
+
+barrier("smoke/done")
+if "--fail" in sys.argv and pid == 1:
+    print("CHILD_FAILING_ON_PURPOSE", flush=True)
+    sys.exit(3)
+print("DIST_SMOKE_OK", flush=True)

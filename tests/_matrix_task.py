@@ -1,0 +1,42 @@
+"""The cross-regime matrix's toy FL task, factored out so subprocess
+harnesses can share it WITHOUT inheriting environment side effects:
+this module never touches XLA_FLAGS / JAX_PLATFORMS and never queries
+devices at import time — callers (tests/_regime_matrix_check.py forcing
+8 host devices, tests/_multihost_worker.py joining a jax.distributed
+job) own their environment setup and must finish it before calling
+anything here.
+
+The task is small on purpose — a 2-layer MLP regression with ragged
+per-client minibatch counts — but exercises every moving part the
+equivalence checks care about: cohort padding (K=3 pads to the device
+axis), the grow-once M bucket ((c % 2) + 1 minibatches), 4-divisible
+model dims for the 2-axis mesh, and multi-round schedules.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+NUM_CLIENTS = 10
+K = 3           # pads to 8 on the 1-D client axis, to 4 on the 2-axis mesh
+ROUNDS = 3
+
+
+def loss_fn(p, batch):
+    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
+    pred = h @ p["w2"] + p["b2"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def make_params(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w1": jnp.asarray(r.randn(8, 16) * 0.3, jnp.float32),
+            "b1": jnp.zeros((16,), jnp.float32),
+            "w2": jnp.asarray(r.randn(16, 4) * 0.3, jnp.float32),
+            "b2": jnp.zeros((4,), jnp.float32)}
+
+
+def batch_fn(c, t):
+    """(c % 2) + 1 minibatches — cohorts are ragged by construction."""
+    r = np.random.RandomState(1000 * c + t)
+    return [{"x": r.randn(8, 8).astype(np.float32),
+             "y": r.randn(8, 4).astype(np.float32)}
+            for _ in range((c % 2) + 1)]

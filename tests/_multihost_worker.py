@@ -1,0 +1,180 @@
+"""Worker body for the multi-process (multi-host) cohort checks
+(DESIGN.md §15) — two modes in one file:
+
+DISTRIBUTED mode (spawned by launch/distributed.spawn_local with the
+REPRO_DIST_* contract, 2 processes x 2 CPU devices each): joins the
+jax.distributed job, runs the hierarchical 2-process round
+(shard_clients=True, edges=2 — each host is one edge aggregator over
+its local client slice) for feddpc/fedavg/fedvarp and checks it
+round-for-round against a PROCESS-LOCAL serial reference computed in
+the same job (identical schedule, allclose params / server state /
+losses / diagnostics). Also checks the prefetch on/off runs of the
+hierarchical round are BITWISE identical, saves a mid-run checkpoint
+(process 0 writes, KV barrier), and (process 0) dumps the finished
+run's params/losses for the parent's cross-process resume check.
+
+SINGLE-PROCESS mode (--resume): a plain subprocess (no REPRO_DIST_*
+environment) resumes the 2-process checkpoint on a single process and
+must land allclose on the dumped 2-process final state — the
+cross-process -> single-process resume acceptance check.
+
+Every process must run the SAME sequence of cross-process computations,
+so assertions run on all processes (state is replicated; a failure
+exits that child nonzero and spawn_local surfaces its tail).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from repro.launch.distributed import maybe_initialize  # noqa: E402
+
+_CTX = maybe_initialize()      # BEFORE any jax device query
+
+import numpy as np             # noqa: E402
+import jax                     # noqa: E402
+
+from repro.core.api import (AlgoConfig, ExecConfig,     # noqa: E402
+                            FederatedTrainer)
+from _matrix_task import (NUM_CLIENTS, K, ROUNDS,       # noqa: E402
+                          batch_fn, loss_fn, make_params)
+from _tree_assert import assert_trees_close             # noqa: E402
+
+EDGES = 2
+
+
+def algo_cfg(name):
+    return AlgoConfig(name=name, eta_l=0.05, eta_g=0.1)
+
+
+def exec_cfg(**kw):
+    return ExecConfig(rounds=ROUNDS, clients_per_round=K, seed=5,
+                      eval_every=10 ** 9, **kw)
+
+
+def run(name, **kw):
+    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                          exec_cfg(**kw), algo=algo_cfg(name)) as tr:
+        tr.run()
+    return tr
+
+
+def host_tree(tree):
+    return jax.tree.map(np.asarray, tree)
+
+
+def check_algo(name):
+    ref = run(name, vectorize=False)              # process-local serial
+    tr = run(name, shard_clients=True, edges=EDGES)
+    assert tr.mesh is not None and tr.mesh.devices.size == 4, tr.mesh
+    for a, b in zip(ref.schedule[:ROUNDS], tr.schedule[:ROUNDS]):
+        assert (np.asarray(a) == np.asarray(b)).all(), (name, a, b)
+    assert_trees_close(host_tree(tr.params), host_tree(ref.params))
+    assert_trees_close(host_tree(tr.server_state),
+                       host_tree(ref.server_state))
+    for rv, rs in zip(tr.history, ref.history):
+        assert np.isclose(rv.train_loss, rs.train_loss,
+                          rtol=1e-4, atol=1e-6), name
+        assert rv.diagnostics.keys() == rs.diagnostics.keys(), name
+        for key in rv.diagnostics:
+            assert np.isclose(rv.diagnostics[key], rs.diagnostics[key],
+                              rtol=1e-3, atol=1e-4), (name, key)
+        # hierarchical comm receipt: server fan-in is E summaries, not
+        # K deltas — edge uplink carries the per-client deltas
+        assert rv.comm_bytes_edge_up == rv.comm_bytes_up > 0, name
+        assert rv.comm_bytes_server_up > 0, name
+        assert rs.comm_bytes_edge_up == 0, name
+    # prefetch off must be BITWISE identical to prefetch on
+    tr2 = run(name, shard_clients=True, edges=EDGES, prefetch=False)
+    for x, y in zip(jax.tree.leaves(host_tree(tr.params)),
+                    jax.tree.leaves(host_tree(tr2.params))):
+        assert np.array_equal(x, y, equal_nan=True), name
+    print(f"[multihost] {name}: 2-process hierarchical == serial OK "
+          f"(pid {jax.process_index()})", flush=True)
+    return tr
+
+
+def distributed_main(args):
+    ctx = _CTX
+    assert ctx is not None, "distributed mode needs the REPRO_DIST_* env"
+    assert jax.process_count() == 2, jax.process_count()
+    assert len(jax.devices()) == 4, jax.devices()
+    assert len(jax.local_devices()) == 2, jax.local_devices()
+    final = {}
+    for name in ("feddpc", "fedavg", "fedvarp"):
+        final[name] = check_algo(name)
+    # cross-process checkpointing: save after round 1, continue, and
+    # verify a SAME-JOB resume lands bitwise on the uninterrupted run
+    tr = FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                          exec_cfg(shard_clients=True, edges=EDGES),
+                          algo=algo_cfg("feddpc"))
+    with tr:
+        tr.run_round(0)
+        tr.run_round(1)
+        path = tr.save(args.ckpt)
+        assert os.path.basename(path) == "step_00000002", path
+        # only process 0 wrote; the barrier guarantees the files exist
+        # for every process by now
+        assert os.path.isdir(path), path
+        tr.run_round(2)
+    tr2 = FederatedTrainer.resume(
+        args.ckpt, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+        exec_cfg(shard_clients=True, edges=EDGES), algo=algo_cfg("feddpc"))
+    assert tr2.start_round == 2, tr2.start_round
+    with tr2:
+        tr2.run()
+    for x, y in zip(jax.tree.leaves(host_tree(tr.params)),
+                    jax.tree.leaves(host_tree(tr2.params))):
+        assert np.array_equal(x, y, equal_nan=True), "same-job resume"
+    print(f"[multihost] 2-process save/resume bitwise OK "
+          f"(pid {jax.process_index()})", flush=True)
+    if args.out and jax.process_index() == 0:
+        ft = host_tree(final["feddpc"].params)
+        np.savez(args.out,
+                 **{f"params_{k}": v for k, v in ft.items()},
+                 losses=np.asarray([r.train_loss
+                                    for r in final["feddpc"].history]))
+    print("MULTIHOST_WORKER_OK", flush=True)
+
+
+def resume_main(args):
+    """Single process: resume the 2-process checkpoint and match the
+    dumped 2-process final state (allclose — the process-count change
+    reorders the f32 reductions like any mesh-shape change)."""
+    assert _CTX is None, "resume mode must run OUTSIDE the distributed job"
+    tr = FederatedTrainer.resume(
+        args.ckpt, loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+        exec_cfg(**({"shard_clients": True, "edges": EDGES}
+                    if args.resume_sharded else {})),
+        algo=algo_cfg("feddpc"))
+    assert tr.start_round == 2, tr.start_round
+    with tr:
+        tr.run()
+    ref = np.load(args.expect)
+    got = host_tree(tr.params)
+    for k, v in got.items():
+        np.testing.assert_allclose(v, ref[f"params_{k}"],
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    # the resumed round's loss must match the 2-process run's
+    assert np.isclose(tr.history[-1].train_loss, ref["losses"][-1],
+                      rtol=1e-4, atol=1e-6)
+    print("MULTIHOST_RESUME_OK", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", required=True)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--resume-sharded", action="store_true")
+    ap.add_argument("--expect", default="")
+    args = ap.parse_args()
+    if args.resume:
+        resume_main(args)
+    else:
+        distributed_main(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,32 +41,10 @@ from repro.core.api import (AlgoConfig, EXEC_REGIMES,       # noqa: E402
 from repro.core.baselines import default_hyper              # noqa: E402
 from repro.core.samplers import sampler_matrix              # noqa: E402
 from _tree_assert import assert_trees_close                 # noqa: E402
-
-NUM_CLIENTS = 10
-K = 3           # pads to 8 on the 1-D client axis, to 4 on the 2-axis mesh
-ROUNDS = 3
-
-
-def loss_fn(p, batch):
-    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
-    pred = h @ p["w2"] + p["b2"]
-    return jnp.mean((pred - batch["y"]) ** 2)
-
-
-def make_params(seed=0):
-    r = np.random.RandomState(seed)
-    return {"w1": jnp.asarray(r.randn(8, 16) * 0.3, jnp.float32),
-            "b1": jnp.zeros((16,), jnp.float32),
-            "w2": jnp.asarray(r.randn(16, 4) * 0.3, jnp.float32),
-            "b2": jnp.zeros((4,), jnp.float32)}
-
-
-def batch_fn(c, t):
-    """(c % 2) + 1 minibatches — cohorts are ragged by construction."""
-    r = np.random.RandomState(1000 * c + t)
-    return [{"x": r.randn(8, 8).astype(np.float32),
-             "y": r.randn(8, 4).astype(np.float32)}
-            for _ in range((c % 2) + 1)]
+# the toy task lives in _matrix_task.py (no env side effects) so the
+# multi-process worker (tests/_multihost_worker.py) shares it verbatim
+from _matrix_task import (NUM_CLIENTS, K, ROUNDS,           # noqa: E402
+                          batch_fn, loss_fn, make_params)
 
 
 def run_cell(algo: str, sampler_name: str, regime: str, prefetch: bool,

@@ -391,3 +391,96 @@ def test_async_guarded_midbuffer_resume_is_bitwise(tmp_path):
     np.testing.assert_array_equal(
         [r.train_loss for r in full_recs],
         [r.train_loss for r in res_recs])
+
+
+# ---------------- process loss / edge drops (DESIGN.md §15) ----------
+
+EK = 4        # clients_per_round for the edge cells: 2 edges x 2 rows
+
+
+def edge_trainer(plan, **kw):
+    kw.setdefault("clients_per_round", EK)
+    return make_trainer(plan, edges=2, **kw)
+
+
+def test_edge_drop_plan_is_deterministic_and_roundtrips():
+    """EdgeDrop queries the EDGE index space, replays identically from
+    its config dict, and only fires inside its round set."""
+    plan = FaultPlan.seeded(11, edge_drop_rate=0.6, edge_drop_rounds=(1, 2))
+    assert plan.injects_edges
+    again = FaultPlan.from_config(plan.config_dict())
+    assert again.injects_edges
+    for t in range(ROUNDS):
+        np.testing.assert_array_equal(plan.edge_drops(t, 4),
+                                      again.edge_drops(t, 4))
+        if t not in (1, 2):
+            assert not plan.edge_drops(t, 4).any()
+    targeted = FaultPlan.seeded(0, edge_drop_edges=(1,),
+                                edge_drop_rounds=(2,))
+    np.testing.assert_array_equal(targeted.edge_drops(2, 2),
+                                  np.array([False, True]))
+    assert not targeted.edge_drops(1, 2).any()
+    assert not FaultPlan.seeded(11, **QPLAN_KW).injects_edges
+
+
+def test_edge_drop_folds_surviving_edges_and_loses_the_summary_hop():
+    """Losing edge 1 on round 2: the server folds the surviving edge's
+    partial (run stays finite), the round records edge_dropped, and the
+    comm split shows it — every client still paid the client->edge
+    uplink (they DID ship), but only the live edge pays the
+    edge->server summary hop."""
+    plan = FaultPlan.seeded(0, edge_drop_edges=(1,), edge_drop_rounds=(2,))
+    with edge_trainer(plan) as tr:
+        recs = tr.run()
+        assert params_finite(tr)
+    assert [r.edge_dropped for r in recs] == [0, 0, 1, 0]
+    for r in recs:
+        assert r.comm_bytes_edge_up == r.comm_bytes_up > 0
+        assert r.comm_bytes_server_up == \
+            (2 - r.edge_dropped) * tr._summary_bytes_up
+        assert np.isfinite(r.train_loss)
+
+
+def test_edge_drop_matches_across_fused_and_serial_paths():
+    """The fused (masked two-level fold in one jit) and serial (python
+    loop) engines implement the edge loss independently — the same plan
+    must produce the same drops and allclose state on both."""
+    plan = FaultPlan.seeded(3, edge_drop_rate=0.5)
+    with edge_trainer(plan) as a:
+        ra = a.run()
+    with edge_trainer(plan, vectorize=False) as b:
+        rb = b.run()
+    assert [r.edge_dropped for r in ra] == [r.edge_dropped for r in rb]
+    assert sum(r.edge_dropped for r in ra) > 0        # plan really fired
+    assert sum(r.edge_dropped for r in ra) < 2 * ROUNDS   # and some lived
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+    for x, y in zip(ra, rb):
+        assert np.isclose(x.train_loss, y.train_loss,
+                          rtol=1e-4, atol=1e-6)
+
+
+def test_edge_drop_replay_is_bitwise():
+    plan = FaultPlan.seeded(5, edge_drop_rate=0.5)
+    with edge_trainer(plan) as a:
+        a.run()
+    with edge_trainer(plan) as b:
+        b.run()
+    assert_trees_equal(a.params, b.params)
+    assert_trees_equal(a.server_state, b.server_state)
+
+
+def test_all_edges_down_is_a_finite_noop_round():
+    """A full partition (every edge lost on round 1) must not poison the
+    run: nothing reaches the server, the fold is a no-op, the loss
+    reports 0.0 for the dead round, and training continues."""
+    plan = FaultPlan.seeded(0, edge_drop_edges=(0, 1),
+                            edge_drop_rounds=(1,))
+    with edge_trainer(plan) as tr:
+        recs = tr.run()
+        assert params_finite(tr)
+    assert [r.edge_dropped for r in recs] == [0, 2, 0, 0]
+    assert recs[1].train_loss == 0.0
+    assert recs[1].comm_bytes_server_up == 0
+    assert recs[1].comm_bytes_edge_up > 0

@@ -237,3 +237,106 @@ def test_health_resume_mismatch_raises():
                 ExecConfig(rounds=6, clients_per_round=K, seed=7,
                            eval_every=10 ** 9),
                 algo=AlgoConfig(name="feddpc", eta_l=0.05, eta_g=0.1))
+
+
+# ---------------- verdict streaming (pluggable sink) ----------------
+
+import json                                               # noqa: E402
+import os                                                 # noqa: E402
+
+from repro.health.monitor import JsonlHealthSink          # noqa: E402
+
+
+class FakeSink:
+    """Minimal wandb-style tracker: log(data, step) + close()."""
+
+    def __init__(self, fail_after=None):
+        self.rows = []
+        self.closed = False
+        self.fail_after = fail_after
+
+    def log(self, data, step=None):
+        if self.fail_after is not None and len(self.rows) >= self.fail_after:
+            raise IOError("tracker down")
+        self.rows.append((step, dict(data)))
+
+    def close(self):
+        self.closed = True
+
+
+def test_sink_streams_one_flat_row_per_observe():
+    sink = FakeSink()
+    mon = HealthMonitor(HealthConfig(min_history=2, spike_mult=3.0),
+                        sink=sink)
+    feed(mon, [1.0, 1.0, 100.0])
+    assert len(sink.rows) == 3
+    step, row = sink.rows[-1]
+    assert step == 2 and row["round"] == 2
+    assert row["alarms"] == "loss_spike" and row["healthy"] is False
+    assert sink.rows[0][1]["healthy"] is True
+    assert isinstance(row["train_loss"], float)
+    mon.close_sink()
+    assert sink.closed
+
+
+def test_failing_sink_disables_with_a_warning_and_the_run_continues():
+    sink = FakeSink(fail_after=1)
+    mon = HealthMonitor(HealthConfig(), sink=sink)
+    with pytest.warns(RuntimeWarning, match="disabled"):
+        feed(mon, [1.0, 1.0, 1.0])
+    assert len(sink.rows) == 1
+    assert mon._sink is None                 # dropped, not retried
+    assert mon.last_report.round == 2        # verdicts kept coming
+
+
+def test_jsonl_sink_is_lazy_flushed_and_replayable(tmp_path):
+    path = str(tmp_path / "health.jsonl")
+    sink = JsonlHealthSink(path)
+    assert not os.path.exists(path)          # lazy: no log, no file
+    mon = HealthMonitor(HealthConfig(min_history=2, spike_mult=3.0),
+                        sink=sink)
+    feed(mon, [1.0, 1.0, 100.0])
+    # flushed per verdict: readable BEFORE close (a killed run keeps
+    # everything emitted so far)
+    with open(path) as fh:
+        rows = [json.loads(line) for line in fh]
+    mon.close_sink()
+    assert [r["step"] for r in rows] == [0, 1, 2]
+    assert rows[0]["healthy"] and rows[1]["healthy"]
+    assert rows[2]["alarms"] == "loss_spike" and not rows[2]["healthy"]
+
+
+def test_trainer_health_log_streams_the_whole_run(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    with make_trainer(None, health=True, health_log=path) as tr:
+        recs = tr.run()
+    with open(path) as fh:
+        rows = [json.loads(line) for line in fh]
+    assert [r["step"] for r in rows] == [rec.round for rec in recs]
+    assert all(r["healthy"] for r in rows)
+
+
+def test_trainer_takes_a_sink_object_and_closes_it():
+    sink = FakeSink()
+    with FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                          ExecConfig(rounds=3, clients_per_round=K, seed=7,
+                                     eval_every=10 ** 9, health=True),
+                          algo=AlgoConfig(name="feddpc", eta_l=0.05,
+                                          eta_g=0.1),
+                          health_sink=sink) as tr:
+        recs = tr.run()
+    assert [s for s, _ in sink.rows] == [rec.round for rec in recs]
+    assert sink.closed                       # context exit released it
+
+
+def test_sink_config_errors():
+    with pytest.raises(ValueError, match="health"):
+        make_trainer(None, health_log="x.jsonl")     # needs health=True
+    with pytest.raises(ValueError, match="not both"):
+        FederatedTrainer(loss_fn, make_params(), NUM_CLIENTS, batch_fn,
+                         ExecConfig(rounds=3, clients_per_round=K, seed=7,
+                                    eval_every=10 ** 9, health=True,
+                                    health_log="x.jsonl"),
+                         algo=AlgoConfig(name="feddpc", eta_l=0.05,
+                                         eta_g=0.1),
+                         health_sink=FakeSink())
